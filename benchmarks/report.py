@@ -1,0 +1,218 @@
+"""Generate EXPERIMENTS.md (§Dry-run, §Roofline, §Perf) from the dry-run
+JSONs in experiments/dryrun plus the hillclimb log in
+experiments/perf_log.json.
+
+Adds the floor-efficiency metric: for each cell,
+  t_floor = max( MODEL_FLOPS / (chips * peak),
+                 min_bytes_moved / (chips * hbm_bw) )
+where min_bytes_moved is the active parameter bytes (every weight read at
+least once per step) plus, for decode, the KV cache bytes (read once).
+efficiency = t_floor / t_bound — how close the compiled program's dominant
+roofline term is to the physical minimum for the workload.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config, all_cells
+from repro.roofline.analysis import HW
+
+HWC = HW()
+
+
+def floor_seconds(arch: str, shape_name: str, devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        flops = 6.0 * n_active * shape.seq_len * shape.global_batch
+        min_bytes = 3 * 2 * n_active          # read W (fwd+bwd) + write upd
+    elif shape.kind == "prefill":
+        flops = 2.0 * n_active * shape.seq_len * shape.global_batch
+        min_bytes = 2 * n_active
+    else:
+        flops = 2.0 * n_active * shape.global_batch
+        kv = (cfg.kv_bytes_per_token_layer() * len(cfg.attn_layer_indices())
+              * shape.seq_len * shape.global_batch)
+        min_bytes = 2 * n_active + kv
+    t_c = flops / (devices * HWC.peak_flops)
+    t_m = min_bytes / (devices * HWC.hbm_bw)
+    return max(t_c, t_m)
+
+
+def load_rows(d: Path, variant=None):
+    rows = []
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if variant and r.get("variant") != variant:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_table(rows):
+    out = ["| arch | shape | mesh | mem/dev (raw / TPU-adj) | compute s | "
+           "memory s | collective s | bound | useful | floor-eff | note |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | — | — | — | — | SKIP: {r['reason'][:46]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | — | — | — | — | ERROR |")
+            continue
+        fl = floor_seconds(r["arch"], r["shape"], r["devices"])
+        eff = fl / max(1e-12, r["t_bound_s"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['bytes_per_device']/2**30:.1f} / "
+            f"{r['tpu_bytes_per_device']/2**30:.1f} GiB "
+            f"| {r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} "
+            f"| {r['t_collective_s']:.3f} | {r['bottleneck']} "
+            f"| {r['flops_useful_ratio']:.2f} | {eff:.1%} | |")
+    return "\n".join(out)
+
+
+def main():
+    d = Path("experiments/dryrun")
+    base = load_rows(d, variant="base")
+    variants = [r for r in load_rows(d) if r.get("variant") != "base"]
+    single = [r for r in base if r["mesh"] == "pod16x16"]
+    multi = [r for r in base if r["mesh"] == "pod2x16x16"]
+    ok = [r for r in base if r["status"] == "ok"]
+    perf_log = Path("experiments/perf_log.json")
+    perf = json.loads(perf_log.read_text()) if perf_log.exists() else None
+
+    doc = []
+    doc.append("""# EXPERIMENTS
+
+Hardware model (targets; this container is CPU-only so figures derive from
+compiled per-device HLO, not wall clocks): TPU v5e-like — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI, ~25 GB/s DCN across pods.  Meshes:
+single-pod (16,16)=("data","model") 256 chips; multi-pod
+(2,16,16)=("pod","data","model") 512 chips.
+
+## §Dry-run
+
+Every (architecture x shape) cell is lowered with ShapeDtypeStructs (no
+allocation), jit-compiled with explicit in/out shardings + donation, on
+BOTH production meshes.  Status: **all runnable cells compile on both
+meshes** (see tables), with 7 documented `long_500k` skips (pure
+full-attention archs per assignment; run for mamba2 / jamba / gemma3 whose
+mixers are sub-quadratic).
+
+Memory columns: `raw` is XLA:CPU `memory_analysis()` (arg+temp+out-alias);
+`TPU-adj` subtracts f32 shadow copies of bf16 dot operands that XLA:CPU
+materializes (and hoists out of loops) because it lacks native bf16 dots —
+the MXU consumes bf16 directly, so those buffers do not exist on TPU
+(quantified per-cell via `f32_shadow_bytes`; barriers were tried and are
+stripped by the CPU pipeline).  Headline fits (TPU-adj, 16 GiB HBM):
+every decode/prefill cell fits; the three >100B trains (deepseek-v3,
+jamba-1.5, qwen2-vl) land at ~17 GiB on 256 chips — within reach of the
+hillclimbed variants and comfortably fitting at 512 chips with the
+factored-second-moment optimizer (see §Perf iteration log and
+optim/adafactor.py; fp32 Adam moments alone would need 21 GiB/chip for
+deepseek-v3, which is why Adafactor is auto-selected > 60B).
+
+Collective schedule summary: ring attention rotates K/V via
+`collective-permute`; FSDP weight gathers are `all-gather`; EP MoE uses
+symmetric tiled `all-to-all` (train) and a single fused psum combine
+(decode); CE/embedding use psum over the vocab-sharded axis; DP gradient
+reduction is `all-reduce` (pod axis classified as DCN in the collective
+term).  Per-cell breakdowns are in experiments/dryrun/*.json
+(`coll_breakdown`).
+""")
+    doc.append("### Single-pod (16x16, 256 chips) — all 40 cells\n")
+    doc.append(fmt_table(single))
+    doc.append("\n### Multi-pod (2x16x16, 512 chips) — all 40 cells\n")
+    doc.append(fmt_table(multi))
+
+    doc.append("""
+
+## §Roofline
+
+Method: `cost_analysis()` counts while-loop bodies once (verified), so the
+three terms are derived by parsing the compiled per-device HLO: the
+computation call graph is walked with `while` trip counts from
+`known_trip_count`; FLOPs = dot/conv ops (2*out*contraction); HBM bytes =
+operand+output bytes per top-level instruction (fusion internals excluded
+— a fusion reads inputs and writes outputs once); collective link bytes
+use ring factors (AG: T(P-1)/P, AR: 2T(P-1)/P, RS: T(P-1), A2A: T(P-1)/P,
+permute: T) with group sizes parsed from `replica_groups`, DCN rate for
+pod-spanning groups.  MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D
+(prefill) / 2·N_active·b (decode).
+
+Reading the table (these are the FINAL numbers, i.e. after the §Perf
+iterations below landed; the §Perf log records the before/after of each):
+ * nearly every cell is memory-bound — expected for an un-fused jnp
+   program (attention score tensors hit HBM each layer; the validated
+   Pallas flash/decode kernels keep them in VMEM on real TPUs and are the
+   documented next lever);
+ * `useful` (MODEL_FLOPS / HLO_FLOPS) is 0.6-0.9 for trains (remat
+   recompute + ring-attention causal waste) and collapses to 0.02-0.2 for
+   MoE decodes — the dispatch buffer computes capacity=T rows per expert
+   while only T·k/E are real (documented, with the capacity-factor fix
+   napkin'd in §Perf);
+ * `floor-eff` compares the dominant term against the physical floor
+   (weights+KV read once, or peak-FLOPs): decode cells sit at 5-40% of
+   floor after the §Perf pass (from <1% at first lowering);
+ * `useful` > 1 on SSM decode cells (mamba2 long_500k) is a counting
+   artifact: the FLOP model counts dot/conv ops only, and the SSD decode
+   recurrence is elementwise — its FLOPs are invisible to the counter
+   while MODEL_FLOPS still charges 2·N_active·b.
+
+The three hillclimb cells (selection per spec, from the first-lowering
+baseline): **qwen2-vl-72b decode_32k** (worst decode roofline fraction +
+most paper-representative: decode = KV-load + weight-load vs compute) —
+§Perf A; **gemma3-4b decode_32k** (the only collective-bound cell) —
+§Perf B; **deepseek-v3-671b train_4k** (worst absolute time; EP + MLA +
+ZeRO-3 = the paper's Appendix-D story at pod scale) — §Perf C.
+""")
+
+    if perf:
+        doc.append("\n## §Perf — hypothesis -> change -> measure log\n")
+        for entry in perf:
+            doc.append(f"### {entry['title']}\n")
+            doc.append(entry["body"])
+    else:
+        doc.append("\n## §Perf\n\n(perf log pending — see experiments/"
+                   "perf_log.json)\n")
+
+    if variants:
+        doc.append("\n### Beyond-paper variant rows (vs `base` above)\n")
+        doc.append(fmt_table(variants))
+
+    doc.append("""
+
+## §Benchmarks (paper-claims validation, CPU container)
+
+`python -m benchmarks.run` reproduces every PIPO table/figure at reduced
+scale (bench_output.txt).  Directional validation against the paper:
+
+| paper claim | paper figure | this repro (CPU, 1 core) |
+|---|---|---|
+| pipelined offload beats sequential-sync | 2-3.1x (Fig5/9) | 1.3-1.7x where transfer is real (fig5 disk cold-reads, fig9, fig12); parity on page-cached placements (no transfer to hide). 1 CPU core caps overlap — I/O threads share the compute core. |
+| compute-busy fraction rises | <40% -> >90% (Fig8) | 0.87-0.92 -> 0.95-0.99 (engine busy fraction; idle base is smaller on CPU because compute itself is slow) |
+| pipeline scheduling is the largest single win | 1.97x of 2.66x (Fig9) | fig9: +pipeline contributes the bulk of the stack (see bench_output) |
+| transfer suite beats naive I/O | +26% (Fig7) | directional mismatch on this container: its virtual NVMe saturates with one sequential stream, so 3-thread chunked reads lose to one fromfile (fig7, cold-cache); the suite's win needs queue-depth-sensitive NVMe (paper's laptop). The merging part of the suite is exercised by every engine load. |
+| fused INT4 kernel avoids dequant pass | §3.4 | 17x vs dequant-then-matmul at b=8 (kernel_int4) |
+| TTFT improves | -42.5% (Table3/C.6) | -12..-22% (table3; prefill is compute-heavy on CPU) |
+| MoE: overlap expert loads with shared-expert compute | C.4 | fig12: 1.4x + busy 0.90->0.99 |
+| autoconfig picks placement per Eq. 1 | §3.5 | tests/test_properties.py::test_autoconfig_placements |
+
+Differences are explained by the container (1 CPU core: transfer threads
+and compute share a core; disk is page-cached NVMe): where the paper's
+regime is transfer-bound with a free DMA engine, gains match directionally
+but compress in magnitude.  The pipeline/ablation ordering matches the
+paper everywhere.
+""")
+    Path("EXPERIMENTS.md").write_text("\n".join(doc))
+    print(f"EXPERIMENTS.md written: {len(ok)} ok cells, "
+          f"{sum(1 for r in base if r['status'] == 'skip')} skips")
+
+
+if __name__ == "__main__":
+    main()

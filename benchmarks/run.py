@@ -1,0 +1,263 @@
+"""Benchmark harness: one function per PIPO table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  All benches run on CPU with
+reduced model sizes; the *comparisons* (pipelined vs sequential, suite vs
+naive, INT4 fused vs dequant-first) mirror the paper's figures and are
+validated directionally against its claims in EXPERIMENTS.md.
+
+  fig5_throughput    — tokens/s by weight placement x batch (Fig. 5)
+  fig6_blocksize     — transfer bandwidth vs block size (Fig. 6 / Appx A)
+  fig7_transfer      — suite vs naive disk->device bandwidth (Fig. 7)
+  fig8_utilization   — compute-busy fraction, PIPO vs sequential (Fig. 8)
+  fig9_ablation      — +pipeline, +suite, +int4-kernel cumulative (Fig. 9)
+  table3_latency     — TTFT + decode latency vs context (Table 3)
+  table6_memory      — memory footprint by placement (Table 6)
+  fig12_moe          — MoE offloading with expert-load overlap (Fig. 12)
+  kernel_int4        — fused INT4 kernel vs dequant-then-matmul (§3.4)
+  roofline           — aggregate dry-run roofline table (ours)
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _bench_cfg(layers=4, d=256, ff=1024, vocab=2048):
+    from repro.configs.base import ATTN, DENSE, LayerSpec, ModelConfig
+    return ModelConfig(name="bench", num_layers=layers, d_model=d,
+                       num_heads=8, num_kv_heads=4, head_dim=d // 8, d_ff=ff,
+                       vocab_size=vocab, pattern=(LayerSpec(ATTN, DENSE),))
+
+
+def _run_engine(placement, pipeline, batch=4, gen=8, prompt_len=32,
+                quant=None, **kw):
+    from repro.core.engine import PipelinedLM
+    cfg = _bench_cfg()
+    # disk placement: evict page cache per load — the paper's NVMe regime
+    # (page-cached "disk" reads are memcpys and hide the pipeline's win)
+    kw.setdefault("cold_reads", placement == "disk")
+    lm = PipelinedLM(cfg, batch=batch, max_len=prompt_len + gen + 2,
+                     placement=placement, pipeline=pipeline, quant=quant,
+                     disk_root=f"/tmp/pipo_bench_{placement}_{pipeline}_{quant}",
+                     **kw)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, (batch, prompt_len)).astype(
+        np.int32)
+    toks, stats = lm.generate(prompt, gen_len=gen)
+    return stats
+
+
+def fig5_throughput():
+    """Paper Fig. 5: throughput by weight placement and batch size."""
+    for placement, tag in (("device", "G"), ("host", "C"), ("disk", "D")):
+        for batch in (4, 8):
+            seq = _run_engine(placement, "sequential", batch=batch)
+            pipo = _run_engine(placement, "performance", batch=batch)
+            speedup = pipo["throughput_tok_s"] / max(1e-9,
+                                                     seq["throughput_tok_s"])
+            emit(f"fig5_{tag}-{batch}_seq",
+                 1e6 / max(1e-9, seq["throughput_tok_s"]),
+                 f"tok_s={seq['throughput_tok_s']:.2f}")
+            emit(f"fig5_{tag}-{batch}_pipo",
+                 1e6 / max(1e-9, pipo["throughput_tok_s"]),
+                 f"tok_s={pipo['throughput_tok_s']:.2f};speedup={speedup:.2f}x")
+
+
+def fig6_blocksize():
+    """Appendix A: transfer bandwidth vs block size."""
+    from repro.core.offload import DiskStore
+    from repro.core.transfer import sweep_block_size
+    disk = DiskStore("/tmp/pipo_bench_blk")
+    arr = np.zeros((64 << 20,), np.uint8)  # 64MB
+    disk.put("w", arr)
+    for bs, bw in sweep_block_size(disk, "w",
+                                   sizes=[1 << 20, 4 << 20, 8 << 20,
+                                          32 << 20, 64 << 20]):
+        emit(f"fig6_block_{bs >> 20}MB", 64 * 2**20 / bw * 1e6,
+             f"GBps={bw / 1e9:.2f}")
+
+
+def fig7_transfer():
+    """Fig. 7: suite vs naive disk->device transfer speed."""
+    from repro.core.offload import DiskStore
+    from repro.core.transfer import (blockwise_disk_to_host, host_to_device,
+                                     naive_disk_to_host,
+                                     pipelined_disk_to_device)
+    disk = DiskStore("/tmp/pipo_bench_tx")
+    for mb in (4, 16, 64):
+        arr = np.random.default_rng(0).integers(
+            0, 255, (mb << 20,)).astype(np.uint8)
+        disk.put(f"w{mb}", arr)
+        reps = 3
+
+        def t_naive():
+            disk.drop_cache(f"w{mb}")   # cold reads = the paper's regime
+            t0 = time.perf_counter()
+            host_to_device(naive_disk_to_host(disk, f"w{mb}"))
+            return time.perf_counter() - t0
+
+        def t_suite():
+            disk.drop_cache(f"w{mb}")
+            t0 = time.perf_counter()
+            pipelined_disk_to_device(disk, f"w{mb}", block_bytes=8 << 20)
+            return time.perf_counter() - t0
+
+        tn = min(t_naive() for _ in range(reps))
+        ts = min(t_suite() for _ in range(reps))
+        emit(f"fig7_naive_{mb}MB", tn * 1e6,
+             f"GBps={mb / 1024 / tn:.2f}")
+        emit(f"fig7_suite_{mb}MB", ts * 1e6,
+             f"GBps={mb / 1024 / ts:.2f};gain={tn / ts:.2f}x")
+
+
+def fig8_utilization():
+    """Fig. 8: compute-busy fraction (the GPU-utilization analogue)."""
+    seq = _run_engine("disk", "sequential", gen=6)
+    pipo = _run_engine("disk", "performance", gen=6)
+    emit("fig8_util_sequential", seq["total_s"] * 1e6,
+         f"busy={seq['compute_busy']:.2f}")
+    emit("fig8_util_pipo", pipo["total_s"] * 1e6,
+         f"busy={pipo['compute_busy']:.2f}")
+
+
+def fig9_ablation():
+    """Fig. 9: cumulative component gains over the sequential baseline."""
+    base = _run_engine("disk", "sequential", quant="int4", fused_int4=False)
+    t0 = base["throughput_tok_s"]
+    pipe = _run_engine("disk", "performance", quant="int4", fused_int4=False,
+                       block_bytes=1 << 30, n_io_threads=1)
+    suite = _run_engine("disk", "performance", quant="int4",
+                        fused_int4=False)
+    kernel = _run_engine("disk", "performance", quant="int4",
+                         fused_int4=True)
+    emit("fig9_flexgen_like", 1e6 / max(1e-9, t0), "rel=1.00")
+    for name, s in (("pipo_base", pipe), ("plus_suite", suite),
+                    ("plus_kernel", kernel)):
+        emit(f"fig9_{name}", 1e6 / max(1e-9, s["throughput_tok_s"]),
+             f"rel={s['throughput_tok_s'] / max(1e-9, t0):.2f}")
+
+
+def table3_latency():
+    """Table 3: TTFT and per-token decode latency vs context length."""
+    for ctx in (64, 128, 256):
+        seq = _run_engine("disk", "sequential", batch=1, prompt_len=ctx,
+                          gen=4)
+        pipo = _run_engine("disk", "performance", batch=1, prompt_len=ctx,
+                           gen=4)
+        dec_seq = (seq["total_s"] - seq["ttft_s"]) / 3
+        dec_pipo = (pipo["total_s"] - pipo["ttft_s"]) / 3
+        emit(f"table3_ctx{ctx}_seq", seq["ttft_s"] * 1e6,
+             f"ttft_s={seq['ttft_s']:.3f};decode_s={dec_seq:.3f}")
+        emit(f"table3_ctx{ctx}_pipo", pipo["ttft_s"] * 1e6,
+             f"ttft_s={pipo['ttft_s']:.3f};decode_s={dec_pipo:.3f}")
+
+
+def table6_memory():
+    """Table 6: device/host peak memory by placement."""
+    for placement in ("device", "host", "disk"):
+        s = _run_engine(placement, "performance", gen=4)
+        emit(f"table6_{placement}", s["total_s"] * 1e6,
+             f"dev_gb={s['device_peak_gb']:.3f};host_gb={s['host_peak_gb']:.3f};"
+             f"tok_s={s['throughput_tok_s']:.2f}")
+
+
+def fig12_moe():
+    """Fig. 12 / Appx C.4: MoE offloading with expert-load overlap."""
+    from repro.configs.base import ATTN, MOE, LayerSpec, ModelConfig, MoEConfig
+    from repro.core.engine import PipelinedLM
+    cfg = ModelConfig(name="bench-moe", num_layers=3, d_model=256,
+                      num_heads=8, num_kv_heads=4, head_dim=32, d_ff=512,
+                      vocab_size=2048, pattern=(LayerSpec(ATTN, MOE),),
+                      moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=512,
+                                    num_shared=1, shared_d_ff=512))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)
+    for mode in ("sequential", "performance"):
+        lm = PipelinedLM(cfg, batch=2, max_len=32, placement="disk",
+                         pipeline=mode, disk_root=f"/tmp/pipo_bench_moe_{mode}")
+        toks, s = lm.generate(prompt, gen_len=6)
+        emit(f"fig12_moe_{mode}", 1e6 / max(1e-9, s["throughput_tok_s"]),
+             f"tok_s={s['throughput_tok_s']:.2f};busy={s['compute_busy']:.2f}")
+
+
+def kernel_int4():
+    """§3.4: fused INT4 matmul vs dequantize-then-matmul."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ref import int4_matmul_ref
+    from repro.quant.int4 import dequantize_int4, quantize_int4
+    M, K, N = 8, 2048, 2048
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32) * 0.1
+    packed, scale = quantize_int4(w)
+
+    fused = jax.jit(int4_matmul_ref)              # dequant fused by XLA
+
+    def unfused(x, packed, scale):
+        wd = jax.device_put(np.asarray(dequantize_int4(packed, scale,
+                                                       jnp.float32)))
+        return x @ wd
+    fused(x, packed, scale).block_until_ready()
+
+    reps = 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fused(x, packed, scale).block_until_ready()
+    tf = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        unfused(x, packed, scale).block_until_ready()
+    tu = (time.perf_counter() - t0) / reps
+    emit("kernel_int4_fused", tf * 1e6, f"GFLOPs={2 * M * K * N / tf / 1e9:.1f}")
+    emit("kernel_int4_unfused", tu * 1e6, f"gain={tu / tf:.2f}x")
+
+
+def roofline():
+    """Aggregate the dry-run roofline table (reads experiments/dryrun)."""
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    n = 0
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        n += 1
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_{r['variant']}",
+             r["t_bound_s"] * 1e6,
+             f"bound={r['bottleneck']};mem_gb={r['tpu_bytes_per_device']/2**30:.2f};"
+             f"useful={r['flops_useful_ratio']:.2f}")
+    emit("roofline_cells_ok", float(n), "")
+
+
+BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
+           fig9_ablation, table3_latency, table6_memory, fig12_moe,
+           kernel_int4, roofline]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        t0 = time.perf_counter()
+        try:
+            b()
+        except Exception as e:  # keep the harness alive per-table
+            emit(f"{b.__name__}_ERROR", 0.0, repr(e)[:120])
+        print(f"# {b.__name__} done in {time.perf_counter()-t0:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end serving driver: continuous batching over a small model with
+batched requests, ragged decode, and PIPO KV offload at slot granularity.
+
+  PYTHONPATH=src python examples/serve_offload.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import get_config, scaled_down
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    cfg = scaled_down(get_config("tinyllama-1.1b"), d_model=128,
+                      num_heads=8, num_kv_heads=4, vocab_size=1024)
+    eng = ServingEngine(cfg, b_max=4, max_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(10):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              (8 + 4 * (i % 4),)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=8 + (i % 5)))
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    dt = time.perf_counter() - t0
+
+    total_new = sum(len(r.out) for r in done)
+    ttfts = [r.t_first - r.t_submit for r in done]
+    print(f"requests completed : {len(done)}/10")
+    print(f"engine stats       : {eng.stats}")
+    print(f"decode steps shared: {eng.stats['decode_steps']} "
+          f"(vs {total_new} tokens -> "
+          f"{total_new / max(1, eng.stats['decode_steps']):.2f} tok/step)")
+    print(f"throughput         : {total_new / dt:.1f} tok/s")
+    print(f"TTFT p50/p95       : {np.percentile(ttfts, 50):.2f}s / "
+          f"{np.percentile(ttfts, 95):.2f}s")
+    print(f"KV offloaded (host): {eng.host.bytes_used / 2**20:.1f} MiB")
+    for r in done[:3]:
+        print(f"  rid={r.rid} prompt_len={len(r.prompt)} out={r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.configs.base import (ATTN, ATTN_LOCAL, CROSS, DENSE, ENC, MLA, MOE,
+                                SSM, LayerSpec, MLAConfig, ModelConfig,
+                                MoEConfig, SSMConfig, ShapeConfig, SHAPES,
+                                scaled_down, shape_applicable)
+from repro.configs.registry import (ASSIGNED, REGISTRY, all_cells, get_config,
+                                    get_shape, list_archs)
+
+__all__ = [
+    "ATTN", "ATTN_LOCAL", "CROSS", "DENSE", "ENC", "MLA", "MOE", "SSM",
+    "LayerSpec", "MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig",
+    "ShapeConfig", "SHAPES", "scaled_down", "shape_applicable",
+    "ASSIGNED", "REGISTRY", "all_cells", "get_config", "get_shape",
+    "list_archs",
+]

@@ -1,0 +1,11 @@
+from repro.core.autoconfig import AutoConfig, configure
+from repro.core.engine import PipelinedLM
+from repro.core.memory_model import estimate
+from repro.core.offload import (DeviceStore, DiskStore, HostStore,
+                                MemoryBudget)
+from repro.core.pipeline import PipelineScheduler, ThreadPool
+from repro.core.tasks import Task, TaskType, Trace
+
+__all__ = ["AutoConfig", "configure", "PipelinedLM", "estimate",
+           "DeviceStore", "DiskStore", "HostStore", "MemoryBudget",
+           "PipelineScheduler", "ThreadPool", "Task", "TaskType", "Trace"]

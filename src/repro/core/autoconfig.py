@@ -1,0 +1,69 @@
+"""PIPO automatic configuration (paper §3.5, Eq. 1 + Algorithm 2).
+
+Inputs: model, batch, lengths, precision, tier capacities/bandwidths.
+Outputs: weight placement (device/host/disk), pipeline mode
+(performance-optimized vs memory-efficient), block size, and whether the
+INT4 fused kernel is enabled (batch < 16, per §3.5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.memory_model import MemoryEstimate, estimate
+from repro.core.offload import MemoryBudget
+
+
+@dataclass(frozen=True)
+class AutoConfig:
+    weight_placement: str       # "device" | "host" | "disk"
+    pipeline: str               # "performance" | "memory"
+    block_bytes: int
+    use_int4_kernel: bool
+    est: MemoryEstimate
+    reason: str
+
+
+def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
+              gen_len: int, precision_bytes: int = 2,
+              budget: Optional[MemoryBudget] = None,
+              quant: Optional[str] = None,
+              block_bytes: int = 32 << 20) -> AutoConfig:
+    budget = budget or MemoryBudget()
+    s = prompt_len + gen_len
+    p = precision_bytes if quant is None else 0.5
+    p_eff = max(1, int(p * 2)) / 2  # keep fractional int4 byte-costs honest
+
+    est_pre = estimate(cfg, batch=batch, seq=s, p=precision_bytes,
+                       preload=True)
+    ratio = p / precision_bytes
+    W = int(est_pre.weights * ratio)
+    C = est_pre.kv_cache
+    # quantization shrinks only the *weight* component of peak M; the
+    # activation part stays at compute precision (paper: W4 + fp16 act)
+    resident_w = est_pre.w_mha + est_pre.w_mlp
+    M = int(max(est_pre.peak_prefill, est_pre.peak_decode)
+            - resident_w * (1.0 - ratio))
+
+    # ---- Eq. (1): weight placement ----
+    if W + M < budget.device:
+        placement, why = "device", f"W+M={(W+M)/2**30:.1f}GiB fits device"
+    elif W + C < budget.host and budget.disk_bw < budget.device_bw:
+        placement, why = "host", f"W+C={(W+C)/2**30:.1f}GiB fits host"
+    else:
+        placement, why = "disk", "exceeds host; stream from disk"
+
+    # ---- Eq. (1): pipeline mode ----
+    if M < budget.device:
+        pipeline = "performance"
+    else:
+        pipeline = "memory"
+        est_min = estimate(cfg, batch=batch, seq=s, p=precision_bytes,
+                           preload=False)
+        M = int(max(est_min.peak_prefill, est_min.peak_decode)
+                - (est_min.w_mha + est_min.w_mlp) * (1.0 - ratio))
+
+    use_int4 = (quant == "int4") and batch < 16   # §3.5
+    return AutoConfig(placement, pipeline, block_bytes, use_int4, est_pre,
+                      why)

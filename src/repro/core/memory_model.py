@@ -1,0 +1,84 @@
+"""PIPO memory model (paper §3.5 + Appendix B), generalized to every
+ModelConfig in the registry.
+
+Notation follows the paper: l layers, d model dim, V vocab, p precision
+bytes, b batch, s input length (prompt + generated), h heads, h_kv KV
+heads, d_h MLP hidden dim.
+
+  W = 2*W_embed + l*(W_mha + W_mlp)
+  C = 2*p*b*s*l*d*(h_kv/h)                (total KV cache)
+  peak M = max(M_mha, M_mlp, M_embed) with/without preloading
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class MemoryEstimate:
+    weights: int          # total weight bytes W
+    kv_cache: int         # total KV bytes C
+    peak_prefill: int     # peak device bytes, prefill stage
+    peak_decode: int      # peak device bytes, decode stage
+    w_mha: int
+    w_mlp: int
+    w_embed: int
+
+
+def weight_sizes(cfg: ModelConfig, p: int):
+    """(W_embed, W_mha, W_mlp) for one layer, paper Appendix B shapes."""
+    d = cfg.d_model
+    w_embed = p * d * cfg.vocab_size
+    if cfg.num_heads:
+        hkv_ratio = cfg.num_kv_heads / cfg.num_heads
+        w_mha = p * d * (cfg.num_heads * cfg.head_dim
+                         + 2 * cfg.num_kv_heads * cfg.head_dim
+                         + cfg.num_heads * cfg.head_dim) \
+            + p * d  # norm
+    else:  # SSM mixer
+        w_mha = p * cfg.mixer_params(cfg.pattern[0])
+    if cfg.moe is not None and any(sp.ffn == "moe" for sp in cfg.pattern):
+        w_mlp = p * cfg.ffn_params(cfg.pattern[-1])
+    else:
+        w_mlp = p * 3 * d * cfg.d_ff
+    return w_embed, w_mha, w_mlp
+
+
+def estimate(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
+             preload: bool = True) -> MemoryEstimate:
+    d, V, l = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    b, s = batch, seq
+    h = max(1, cfg.num_heads)
+    d_h = max(1, cfg.d_ff)
+    hkv_ratio = (cfg.num_kv_heads / h) if cfg.num_heads else 0.0
+
+    w_embed, w_mha, w_mlp = weight_sizes(cfg, p)
+    W = 2 * w_embed + l * (w_mha + w_mlp)
+    C = int(2 * p * b * s * l * d * hkv_ratio)
+    C_layer = C // max(1, l)
+
+    pre_n = 1 if preload else 0       # extra resident layer when preloading
+
+    # ---- prefill stage (Appendix B.1) ----
+    m_mha_pre = (p * b * s * (5 * d + h * s)
+                 + w_mha + pre_n * w_mlp + (1 + pre_n) * C_layer)
+    m_mlp_pre = (p * b * s * (3 * d_h + 2 * d)
+                 + w_mlp + pre_n * w_mha + pre_n * C_layer)
+    m_embed_pre = p * b * s * (d + V) + (1 + pre_n) * w_embed
+    peak_prefill = max(m_mha_pre, m_mlp_pre, m_embed_pre)
+
+    # ---- decode stage (Appendix B.2): input length 1 ----
+    m_mha_dec = (p * b * (5 * d + h)
+                 + w_mha + pre_n * w_mlp + (1 + pre_n) * 2 * p * b * s * d
+                 * hkv_ratio)
+    m_mlp_dec = (p * b * (3 * d_h + 2 * d)
+                 + w_mlp + pre_n * w_mha + pre_n * 2 * p * b * s * d
+                 * hkv_ratio)
+    m_embed_dec = p * b * (d + V) + (1 + pre_n) * w_embed
+    peak_decode = max(m_mha_dec, m_mlp_dec, m_embed_dec)
+
+    return MemoryEstimate(int(W), int(C), int(peak_prefill),
+                          int(peak_decode), int(w_mha), int(w_mlp),
+                          int(w_embed))

@@ -1,0 +1,214 @@
+"""PIPO pipeline: thread pool + Algorithm-1 scheduler (paper §3.2).
+
+Thread-pool principles (paper §3.2.1):
+  * pool size 3 — one slot per transfer type (weight-load, KV-load,
+    KV-save); threads are NOT statically bound to task types: they pull
+    whatever is next in the queue ("flexible scheduling ... minimizes
+    idle time");
+  * compute runs on the MAIN thread, outside the pool;
+  * KV-save is lower priority (queued behind loads) and may have several
+    requests in flight; its completion is only *checked* one layer before
+    the same layer's KV-load in the next token loop.
+
+Scheduling modes:
+  * "performance"  — preload layer j+1's weights during layer j's compute
+    (two layers resident; paper's performance-optimized pipeline);
+  * "memory"       — single layer resident; loads start only after the
+    previous layer's memory is released; KV-save synchronized before the
+    next save launches (paper's memory-efficient pipeline);
+  * "sequential"   — FlexGen-like device-level sync baseline: every task
+    completes before the next starts (ablation baseline, Fig. 9).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from repro.core.tasks import Task, TaskType, Trace
+
+PIPELINE_MODES = ("performance", "memory", "sequential")
+
+
+class ThreadPool:
+    """3 transfer workers pulling from a two-level (priority) queue."""
+
+    def __init__(self, n_threads: int = 3, trace: Optional[Trace] = None):
+        self.trace = trace or Trace()
+        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._seq = 0
+        self._stop = False
+        self._lock = threading.Lock()
+        self._threads = [threading.Thread(target=self._worker,
+                                          args=(f"pool-{i}",), daemon=True)
+                         for i in range(n_threads)]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, task: Task, priority: int = 0) -> Task:
+        import time
+        task.t_submit = time.perf_counter()
+        with self._lock:
+            self._seq += 1
+            self._q.put((priority, self._seq, task))
+        return task
+
+    def _worker(self, name: str):
+        while True:
+            prio, _, task = self._q.get()
+            if task is None:
+                return
+            task.run()
+            self.trace.add(task, name)
+            self._q.task_done()
+
+    def run_on_main(self, task: Task) -> Task:
+        """Compute tasks execute on the caller (main) thread."""
+        task.run()
+        self.trace.add(task, "main")
+        if task.error is not None:
+            raise task.error
+        return task
+
+    def shutdown(self):
+        for _ in self._threads:
+            self._q.put((99, 1 << 30, None))
+        for t in self._threads:
+            t.join(timeout=5)
+
+
+@dataclass
+class LayerTasks:
+    """Per-(iteration, layer) task handles used by the scheduler."""
+    weight: Optional[Task] = None
+    kv_load: Optional[Task] = None
+    kv_save: Optional[Task] = None
+
+
+class PipelineScheduler:
+    """Algorithm 1.  The model supplies callbacks; the scheduler owns all
+    ordering/synchronization decisions so they can be tested in isolation
+    (tests assert the event-order invariants).
+
+    Callbacks (all pure-ish, thread-safe):
+      load_weights(j) -> device weights      (WEIGHT_LOAD)
+      release_weights(j, handle)             (called on main after compute)
+      load_kv(i, j) -> device kv             (KV_LOAD; None for non-MHA)
+      save_kv(i, j, new_kv)                  (KV_SAVE)
+      compute(i, j, x, weights, kv) -> (x, new_kv)   (COMPUTE, main thread)
+      is_mha(j) -> bool
+    """
+
+    def __init__(self, num_layers: int, mode: str = "performance",
+                 pool: Optional[ThreadPool] = None,
+                 trace: Optional[Trace] = None):
+        assert mode in PIPELINE_MODES, mode
+        self.n = num_layers
+        self.mode = mode
+        self.trace = trace or Trace()
+        self.pool = pool or ThreadPool(3, self.trace)
+        self._owns_pool = pool is None
+
+    # -- helpers ------------------------------------------------------------
+    def _submit(self, kind: TaskType, name: str, fn, priority=0) -> Task:
+        t = Task(kind, name, fn)
+        self.pool.submit(t, priority)
+        if self.mode == "sequential":
+            t.wait()
+        return t
+
+    def _next_mha(self, model, j):
+        for k in range(j + 1, self.n):
+            if model.is_mha(k):
+                return k
+        return None
+
+    # -- Algorithm 1 ----------------------------------------------------------
+    def generate(self, model, x0, num_iterations: int):
+        """Run ``num_iterations`` full passes over the layer stack (one per
+        generated token); x0 is the initial activation provider:
+        callable i -> x input for iteration i."""
+        n = self.n
+        w_tasks: Dict[int, Task] = {}
+        kv_tasks: Dict[tuple, Task] = {}
+        save_tasks: Dict[tuple, Task] = {}
+        outputs = []
+
+        def submit_weight(j):
+            if j is not None and j < n and j not in w_tasks:
+                w_tasks[j] = self._submit(
+                    TaskType.WEIGHT_LOAD, f"w[{j}]",
+                    lambda j=j: model.load_weights(j))
+
+        def submit_kv(i, j):
+            if j is None or not model.is_mha(j):
+                return
+            if (i, j) in kv_tasks:
+                return
+            # KV-save completion check, advanced one layer early (paper):
+            # the save from iteration i-1, layer j must be done before we
+            # load layer j's cache in iteration i.
+            prev_save = save_tasks.get((i - 1, j))
+            if prev_save is not None:
+                prev_save.wait()
+            kv_tasks[(i, j)] = self._submit(
+                TaskType.KV_LOAD, f"kv[{i},{j}]",
+                lambda i=i, j=j: model.load_kv(i, j))
+
+        for i in range(num_iterations):
+            x = x0(i)
+            for j in range(n):
+                # --- CallLoadData(i, j): ensure current loads in flight ----
+                submit_weight(j)                       # no-op if preloaded
+                submit_kv(i, j)                        # no-op if advanced
+
+                # --- SynchronizeLoadTask(i, j) -----------------------------
+                weights = w_tasks.pop(j).wait()
+                kv = None
+                if model.is_mha(j):
+                    kv = kv_tasks.pop((i, j)).wait()
+
+                if self.mode == "performance":
+                    # Preload: the next weight load starts only after the
+                    # previous one completed (= now), overlapping with this
+                    # layer's compute (paper §3.1.2).
+                    if j + 1 < n:
+                        submit_weight(j + 1)
+                    elif i + 1 < num_iterations:
+                        submit_weight(0)
+                    # KV-load advanced one MHA layer ahead (§3.1.2).
+                    nm = self._next_mha(model, j)
+                    if nm is not None:
+                        submit_kv(i, nm)
+                    elif i + 1 < num_iterations:
+                        fm = self._next_mha(model, -1)
+                        if fm is not None:
+                            submit_kv(i + 1, fm)
+
+                # --- Compute(i, j) on the main thread ----------------------
+                ct = Task(TaskType.COMPUTE, f"c[{i},{j}]",
+                          lambda: model.compute(i, j, x, weights, kv))
+                self.pool.run_on_main(ct)
+                x, new_kv = ct.result
+
+                # --- CallStoreCache(i, j) ----------------------------------
+                if model.is_mha(j) and new_kv is not None:
+                    st = self._submit(TaskType.KV_SAVE, f"sv[{i},{j}]",
+                                      lambda i=i, j=j, kv=new_kv:
+                                      model.save_kv(i, j, kv),
+                                      priority=1)  # lower priority
+                    save_tasks[(i, j)] = st
+                    if self.mode in ("memory", "sequential"):
+                        st.wait()
+
+                model.release_weights(j, weights)
+            outputs.append(model.finalize(i, x))
+        # drain outstanding saves
+        for t in save_tasks.values():
+            t.wait()
+        return outputs
+
+    def shutdown(self):
+        if self._owns_pool:
+            self.pool.shutdown()

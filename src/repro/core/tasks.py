@@ -1,0 +1,109 @@
+"""PIPO task model (paper §3.1.2).
+
+Inference work is decomposed into four task types:
+  * COMPUTE        — MHA/MLP/embedding layer compute (main thread only)
+  * WEIGHT_LOAD    — weights: disk/host tier -> device tier
+  * KV_LOAD        — KV-cache: host tier -> device tier
+  * KV_SAVE        — new KV-pairs: device tier -> host tier
+
+Each task carries a threading.Event for *task-level* synchronization —
+the paper's central deviation from FlexGen's device-level sync ('S' boxes
+in Fig. 2): a consumer waits on exactly the producer it needs, nothing
+else.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Optional
+
+
+class TaskType(Enum):
+    COMPUTE = "compute"
+    WEIGHT_LOAD = "weight_load"
+    KV_LOAD = "kv_load"
+    KV_SAVE = "kv_save"
+
+
+@dataclass
+class Task:
+    kind: TaskType
+    name: str                      # e.g. "w[3]", "kv_load[i=2,j=5]"
+    fn: Callable[[], Any]
+    done: threading.Event = field(default_factory=threading.Event)
+    result: Any = None
+    error: Optional[BaseException] = None
+    # timing for the utilization/trace benchmarks
+    t_submit: float = 0.0
+    t_start: float = 0.0
+    t_end: float = 0.0
+
+    def run(self):
+        self.t_start = time.perf_counter()
+        try:
+            self.result = self.fn()
+        except BaseException as e:  # propagate to waiter
+            self.error = e
+        finally:
+            self.t_end = time.perf_counter()
+            self.done.set()
+
+    def wait(self):
+        self.done.wait()
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+@dataclass
+class TraceEvent:
+    kind: str
+    name: str
+    t_start: float
+    t_end: float
+    thread: str
+
+
+class Trace:
+    """Execution trace for the GPU-utilization analogue (Fig. 8) and the
+    pipeline-overlap benchmarks."""
+
+    def __init__(self):
+        self._events: list[TraceEvent] = []
+        self._lock = threading.Lock()
+        self.t0 = time.perf_counter()
+
+    def add(self, task: Task, thread: str):
+        with self._lock:
+            self._events.append(TraceEvent(task.kind.value, task.name,
+                                           task.t_start - self.t0,
+                                           task.t_end - self.t0, thread))
+
+    def events(self):
+        with self._lock:
+            return list(self._events)
+
+    def busy_fraction(self, kind: str = "compute") -> float:
+        """Fraction of the makespan the given task kind was executing —
+        the paper's 'GPU utilization' proxy."""
+        evs = self.events()
+        if not evs:
+            return 0.0
+        end = max(e.t_end for e in evs)
+        start = min(e.t_start for e in evs)
+        span = max(1e-9, end - start)
+        ivals = sorted((e.t_start, e.t_end) for e in evs if e.kind == kind)
+        busy, cur_s, cur_e = 0.0, None, None
+        for s, t in ivals:
+            if cur_s is None:
+                cur_s, cur_e = s, t
+            elif s <= cur_e:
+                cur_e = max(cur_e, t)
+            else:
+                busy += cur_e - cur_s
+                cur_s, cur_e = s, t
+        if cur_s is not None:
+            busy += cur_e - cur_s
+        return busy / span

@@ -1,0 +1,146 @@
+"""PIPO data-transfer suite (paper §3.3 + Appendix A).
+
+Three techniques, replacing single-call I/O:
+  * blockwise transfer   — tensors move in fixed-size blocks so the
+    disk->host and host->device stages overlap (Fig. 3);
+  * multi-thread parallel transfer — multiple reader threads each own a
+    chunk of the block stream, keeping the NVMe queue full;
+  * data merging         — all weight tensors of a layer are stored as ONE
+    contiguous buffer + manifest, so a layer is one I/O request.
+
+Block size is picked empirically per device by ``sweep_block_size``
+(Appendix A reproduces Fig. 6 with it).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.offload import DiskStore
+
+DEFAULT_BLOCK = 8 * 2**20          # 8MB disk blocks (paper Appendix A)
+DEVICE_BLOCK = 32 * 2**20          # 32MB host->device blocks
+
+
+# ---------------------------------------------------------------------------
+# Data merging
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Manifest:
+    """Layout of tensors merged into one flat uint8 buffer."""
+    entries: Dict[str, tuple]       # name -> (offset, shape, dtype)
+    total_bytes: int
+
+
+def merge_tensors(tensors: Dict[str, np.ndarray]) -> tuple[np.ndarray, Manifest]:
+    entries, off = {}, 0
+    for name, a in sorted(tensors.items()):
+        a = np.ascontiguousarray(a)
+        entries[name] = (off, a.shape, a.dtype)
+        off += a.nbytes
+    buf = np.empty(off, np.uint8)
+    for name, a in sorted(tensors.items()):
+        o, shape, dtype = entries[name]
+        buf[o:o + a.nbytes] = np.ascontiguousarray(a).view(np.uint8).reshape(-1)
+    return buf, Manifest(entries, off)
+
+
+def split_views(buf: np.ndarray, manifest: Manifest) -> Dict[str, np.ndarray]:
+    out = {}
+    for name, (off, shape, dtype) in manifest.entries.items():
+        n = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        out[name] = buf[off:off + n].view(dtype).reshape(shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Transfers
+# ---------------------------------------------------------------------------
+
+
+def naive_disk_to_host(disk: DiskStore, key: str) -> np.ndarray:
+    """Baseline: one fromfile() call (the PyTorch-load analogue)."""
+    return disk.get(key)
+
+
+def blockwise_disk_to_host(disk: DiskStore, key: str,
+                           block_bytes: int = DEFAULT_BLOCK,
+                           n_threads: int = 3,
+                           out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Parallel blockwise read into a preallocated host buffer."""
+    shape, dtype = disk.meta(key)
+    total = int(np.prod(shape)) * np.dtype(dtype).itemsize
+    if out is None:
+        out = np.empty(total, np.uint8)
+    blocks = [(o, min(block_bytes, total - o))
+              for o in range(0, total, block_bytes)]
+    if len(blocks) <= 1 or n_threads <= 1:
+        disk.read_range(key, 0, total, out)
+        return out.view(dtype).reshape(shape)
+    with ThreadPoolExecutor(max_workers=n_threads) as ex:
+        list(ex.map(lambda b: disk.read_range(key, b[0], b[1], out), blocks))
+    return out.view(dtype).reshape(shape)
+
+
+def host_to_device(arr: np.ndarray):
+    out = jax.device_put(arr)
+    out.block_until_ready()
+    return out
+
+
+def pipelined_disk_to_device(disk: DiskStore, key: str,
+                             block_bytes: int = DEFAULT_BLOCK,
+                             n_threads: int = 3):
+    """Full suite: blockwise parallel disk reads overlapped with staged
+    host->device copies (Fig. 3 timeline).  The device-side buffer is
+    assembled blockwise in a staging array while later disk blocks are
+    still in flight, then materialized as one device array."""
+    shape, dtype = disk.meta(key)
+    total = int(np.prod(shape)) * np.dtype(dtype).itemsize
+    host = np.empty(total, np.uint8)
+    staging = np.empty(total, np.uint8)   # "pinned" staging = PCIe analogue
+    blocks = [(o, min(block_bytes, total - o))
+              for o in range(0, total, block_bytes)]
+    done_q: queue.Queue = queue.Queue()
+
+    def read_block(b):
+        disk.read_range(key, b[0], b[1], host)
+        done_q.put(b)
+
+    with ThreadPoolExecutor(max_workers=n_threads) as ex:
+        for b in blocks:
+            ex.submit(read_block, b)
+        copied = 0
+        while copied < len(blocks):
+            o, n = done_q.get()          # overlap: copy while reads continue
+            staging[o:o + n] = host[o:o + n]
+            copied += 1
+    return host_to_device(staging.view(dtype).reshape(shape))
+
+
+def sweep_block_size(disk: DiskStore, key: str, sizes=None,
+                     n_threads: int = 3, repeats: int = 2):
+    """Appendix-A experiment: measured bandwidth per block size."""
+    import time
+    sizes = sizes or [1 * 2**20, 2 * 2**20, 4 * 2**20, 8 * 2**20,
+                      16 * 2**20, 32 * 2**20, 64 * 2**20]
+    shape, dtype = disk.meta(key)
+    total = int(np.prod(shape)) * np.dtype(dtype).itemsize
+    out = []
+    for bs in sizes:
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            blockwise_disk_to_host(disk, key, block_bytes=bs,
+                                   n_threads=n_threads)
+            ts.append(time.perf_counter() - t0)
+        bw = total / min(ts)
+        out.append((bs, bw))
+    return out

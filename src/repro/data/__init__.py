@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticSource, MemmapSource,
+                                 DataPipeline)
+
+__all__ = ["DataConfig", "SyntheticSource", "MemmapSource", "DataPipeline"]

@@ -1,0 +1,5 @@
+from repro.kernels.ops import (decode_attention_op, flash_attention_op,
+                               int4_matmul_op, use_kernels)
+
+__all__ = ["decode_attention_op", "flash_attention_op", "int4_matmul_op",
+           "use_kernels"]

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a (possibly
+huge) KV cache.
+
+The decode roofline is pure memory: reading the KV cache once is the
+floor.  This kernel streams the cache through VMEM in (block_s) chunks
+with online-softmax state in scratch — HBM traffic = cache + q + o, the
+paper's "KV-cache loading" rendered as HBM->VMEM streaming.  Emits
+normalized output; a partials-emitting variant backs the cross-shard
+(sequence-sharded) merge of models/attention.decode_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_s: int, n_s: int, g: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0]                                        # (h, dh)
+    k = k_ref[0]                                        # (bs, hkv, dh)
+    v = v_ref[0]
+    h, dh = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(hkv, g, dh)
+    s = jnp.einsum("kgd,skd->kgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (dh ** 0.5)   # (hkv, g, bs)
+    kv_pos = si * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (hkv, g, block_s), 2)
+    s = jnp.where(kv_pos <= pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (h, 1)
+    m_cur = jnp.max(s, axis=2).reshape(h, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new.reshape(hkv, g, 1))
+    p = jnp.where(kv_pos <= pos, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    alpha = jnp.where(m_prev > NEG_INF / 2, alpha, 0.0)
+    pv = jnp.einsum("kgs,skd->kgd", p, v.astype(jnp.float32))
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=2).reshape(h, 1)
+    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(h, dh)
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _out():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, pos, *, block_s: int = 512,
+                            interpret: bool = True):
+    """q (b, h, dh); caches (b, S, hkv, dh); pos scalar -> (b, h, dh)."""
+    b, h, dh = q.shape
+    _, S, hkv, _ = k_cache.shape
+    g = h // hkv
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    n_s = S // block_s
+    grid = (b, n_s)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    kernel = functools.partial(_kernel, block_s=block_s, n_s=n_s, g=g)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM)
+            if not interpret else pl.BlockSpec((1,), lambda bi, si: (0,)),
+            pl.BlockSpec((1, h, dh), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, dh), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, dh), lambda bi, si: (bi, si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+        if not interpret else None,
+    )(pos_arr, q, k_cache, v_cache)

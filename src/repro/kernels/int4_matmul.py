@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused INT4-dequant matmul (paper §3.4, TPU-native).
+
+The paper's GPU kernel computes matvec directly on 4-bit weights to skip
+the dequantization pass.  The TPU adaptation: only INT4 bytes cross
+HBM->VMEM (the expensive hop — the PCIe analogue); nibbles are unpacked
+and scaled in VREGs and fed straight to the MXU with fp32 accumulation.
+The packed layout (quant/int4.py) is column-pair packing so the
+contraction dim K stays unpacked (free K-blocking) and the unpack is a
+minor-dim interleave.
+
+Block sizes default to MXU-aligned (128) tiles; K blocks are multiples of
+the quantization group (128) so each K block sees whole scale rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+GROUP = 128
+
+
+def _kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, n_k: int, group: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (bm, bk)
+    packed = p_ref[...]                             # (bk, bn//2) uint8
+    scale = s_ref[...]                              # (bk//G, bn) f32
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32) - 8
+    bk, bn2 = packed.shape
+    q = jnp.stack([lo, hi], axis=-1).reshape(bk, bn2 * 2)   # minor interleave
+    # groupwise scaling in VREGs: (bk//G, G, bn) * (bk//G, 1, bn)
+    w = (q.reshape(bk // group, group, bn2 * 2).astype(jnp.float32)
+         * scale[:, None, :]).reshape(bk, bn2 * 2)
+    acc_ref[...] += jax.lax.dot(
+        x.astype(jnp.float32), w, precision=jax.lax.Precision.DEFAULT,
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def int4_matmul(x, packed, scale, *, group: int = GROUP, block_m: int = 128,
+                block_n: int = 128, block_k: int = 256,
+                out_dtype=jnp.float32, interpret: bool = True):
+    """x (M, K) bf16/f32 @ int4-packed W -> (M, N) out_dtype.
+
+    packed: (K, N//2) uint8, scale: (K//group, N) f32 (see quant/int4.py).
+    """
+    M, K = x.shape
+    Kp, N2 = packed.shape
+    N = N2 * 2
+    assert Kp == K and K % group == 0, (K, Kp, group)
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    # block_k: largest multiple of `group` that divides K and is <= request
+    kk = group
+    for c in range(min(block_k, K), group - 1, -group):
+        if K % c == 0 and c % group == 0:
+            kk = c
+            break
+    block_k = kk
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, \
+        (M, N, K, block_m, block_n, block_k)
+    n_k = K // block_k
+
+    grid = (M // block_m, N // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_k // group, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        if not interpret else None,
+    )(x, packed, scale)

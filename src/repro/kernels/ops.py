@@ -1,0 +1,50 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode for validation;
+on TPU they compile natively.  ``use_kernels(False)`` forces the pure-jnp
+reference path (used by the dry-run, whose compiled artifact must consist
+of ops the roofline analyzer models).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int4_matmul import int4_matmul
+
+_STATE = {"enabled": True}
+
+
+def use_kernels(flag: bool):
+    _STATE["enabled"] = flag
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def int4_matmul_op(x, packed, scale, **kw):
+    if not _STATE["enabled"]:
+        return R.int4_matmul_ref(x, packed, scale)
+    return int4_matmul(x, packed, scale, interpret=_interpret(), **kw)
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0, q_offset=0, **kw):
+    if not _STATE["enabled"]:
+        return R.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, interpret=_interpret(), **kw)
+
+
+def decode_attention_op(q, k_cache, v_cache, pos, **kw):
+    if not _STATE["enabled"]:
+        return R.decode_attention_ref(q[:, None], k_cache, v_cache,
+                                      pos)[:, 0]
+    return decode_attention_kernel(q, k_cache, v_cache, pos,
+                                   interpret=_interpret(), **kw)

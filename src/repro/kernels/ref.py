@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in
+kernel tests: sweeps assert_allclose kernel-vs-ref across shapes/dtypes)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import ref_attention
+from repro.quant.int4 import dequantize_int4
+
+
+def int4_matmul_ref(x, packed, scale, group: int = 128,
+                    out_dtype=jnp.float32):
+    """x (M, K) @ dequant(packed (K, N//2), scale (K//G, N)) -> (M, N)."""
+    w = dequantize_int4(packed, scale, jnp.float32, group)
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q (b, sq, h, dh), k/v (b, sk, hkv, dh) -> (b, sq, h, dh)."""
+    return ref_attention(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q (b, 1, h, dh); caches (b, S, hkv, dh); attends positions <= pos."""
+    return ref_attention(q, k_cache, v_cache, causal=False,
+                         kv_valid_len=pos + 1)

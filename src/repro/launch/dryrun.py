@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/roofline terms.
+
+THE TWO LINES ABOVE MUST STAY FIRST: jax locks the device count at first
+init, and the 512 placeholder devices exist only for this entry point —
+tests and benches must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED, SHAPES, get_config, get_shape,
+                           shape_applicable)
+from repro.launch import sharding as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import transformer as T
+from repro.models.model import build_model
+from repro.optim import AdamW
+from repro.optim.adafactor import Adafactor
+from repro.roofline.analysis import (HW, analyze_hlo, f32_shadow_bytes,
+                                     model_flops, roofline_report)
+
+
+def _enc_pad(cfg, mesh):
+    """Pad encoder frames to a model-axis-divisible length (whisper stub)."""
+    if not cfg.enc_dec:
+        return 0
+    m = mesh.shape["model"]
+    return ((cfg.encoder_seq_len + m - 1) // m) * m
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "base"):
+    """Build + lower + compile one cell; returns (compiled, meta)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if variant == "w4":
+        # beyond-paper variant: PIPO's INT4 weights at pod scale; dequant
+        # VREG-fused (kernels/int4_matmul.py), packed bytes cross HBM.
+        cfg = dataclasses.replace(cfg, quant_weights=True)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dist = S.make_dist(mesh, shape)
+    model = build_model(cfg)
+    enc_pad = _enc_pad(cfg, mesh)
+
+    pspecs = S.param_pspecs(cfg, dist)
+    pstruct = T.param_struct(cfg)
+    bspecs = S.batch_pspecs(cfg, shape, dist, enc_pad)
+    bstruct = model.input_struct(shape, enc_pad)
+
+    if shape.kind == "train":
+        # fp32 Adam moments don't fit >60B models on a pod; switch to
+        # factored second moments + bf16 momentum (see optim/adafactor.py).
+        if cfg.param_count() > 60e9:
+            opt = Adafactor()
+            ostruct = S.adafactor_struct(cfg, opt)
+            ospecs = S.adafactor_pspecs(cfg, dist, opt)
+        else:
+            opt = AdamW()
+            ostruct = S.opt_struct(cfg)
+            ospecs = S.zero_pspecs(cfg, dist)
+        step = make_train_step(model, dist, opt)
+        fn = jax.jit(step,
+                     in_shardings=(pspecs, ospecs, bspecs),
+                     out_shardings=(pspecs, ospecs, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(pstruct, ostruct, bstruct)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(model, dist, cache_len=shape.seq_len)
+        cspecs = S.cache_pspecs(cfg, dist, shape.global_batch,
+                                shape.seq_len, enc_pad or None)
+        tok_spec = S.batch_pspecs(cfg, SHAPES["decode_32k"], dist)["token"]
+        fn = jax.jit(step, in_shardings=(pspecs, bspecs),
+                     out_shardings=(None, cspecs))
+        lowered = fn.lower(pstruct, bstruct)
+    else:  # decode
+        step = make_decode_step(model, dist)
+        cstruct, _ = model.cache_struct(shape.global_batch, shape.seq_len,
+                                        enc_pad or None)
+        cspecs = S.cache_pspecs(cfg, dist, shape.global_batch,
+                                shape.seq_len, enc_pad or None)
+        fn = jax.jit(step, in_shardings=(pspecs, bspecs, cspecs),
+                     out_shardings=(None, cspecs), donate_argnums=(2,))
+        lowered = fn.lower(pstruct, bstruct, cstruct)
+
+    compiled = lowered.compile()
+    return compiled, dict(cfg=cfg, shape=shape, mesh=mesh, variant=variant)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             variant: str = "base") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "variant": variant}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        row.update(status="skip", reason=why)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}_{shape_name}_{mesh_tag}_{variant}.json"
+         ).write_text(json.dumps(row, indent=1))
+        return row
+    t0 = time.time()
+    try:
+        compiled, meta = lower_cell(arch, shape_name, multi_pod, variant)
+    except Exception as e:
+        row.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        return row
+    n_dev = 512 if multi_pod else 256
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    acc = analyze_hlo(txt, total_devices=n_dev)
+    rep = roofline_report(acc)
+    mf = model_flops(cfg, shape)
+    hlo_flops_total = acc["flops"] * n_dev
+    raw_bytes = (getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0)
+                 - getattr(mem, "alias_size_in_bytes", 0))
+    shadow = f32_shadow_bytes(txt)
+    row.update(
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        devices=n_dev,
+        bytes_per_device=raw_bytes,
+        # XLA:CPU materializes f32 copies of bf16 dot operands (native on
+        # the MXU) — subtracting them approximates the TPU-resident bytes.
+        f32_shadow_bytes=shadow,
+        tpu_bytes_per_device=max(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0),
+            raw_bytes - shadow),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        out_bytes=getattr(mem, "output_size_in_bytes", 0),
+        alias_bytes=getattr(mem, "alias_size_in_bytes", 0),
+        model_flops_total=mf,
+        hlo_flops_per_dev=acc["flops"],
+        flops_useful_ratio=(mf / hlo_flops_total) if hlo_flops_total else 0.0,
+        **{k: rep[k] for k in ("t_compute_s", "t_memory_s",
+                               "t_memory_cpu_cast_s", "t_collective_s",
+                               "bottleneck", "t_bound_s", "hbm_bytes",
+                               "ici_bytes", "dcn_bytes", "coll_count")},
+        coll_breakdown={k: v for k, v in acc.items()
+                        if k.startswith("coll_") and k != "coll_count"},
+    )
+    # roofline fraction: time at the bound vs sum of the three terms if
+    # perfectly overlapped -> how close the dominant term is to the total
+    tot = rep["t_compute_s"] + rep["t_memory_s"] + rep["t_collective_s"]
+    row["roofline_fraction"] = rep["t_bound_s"] / tot if tot else 0.0
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch}_{shape_name}_{mesh_tag}_{variant}.json"
+    (out_dir / fname).write_text(json.dumps(row, indent=1, default=str))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for a in sorted(ASSIGNED):
+            for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    n_err = 0
+    for arch, shape in cells:
+        row = run_cell(arch, shape, args.multi_pod, out_dir, args.variant)
+        if row["status"] == "ok":
+            print(f"[OK ] {arch:26s} {shape:12s} {row['mesh']:10s} "
+                  f"compile={row['compile_s']:6.1f}s "
+                  f"mem/dev={row['bytes_per_device']/2**30:6.2f}GiB "
+                  f"tpu~{row['tpu_bytes_per_device']/2**30:6.2f}GiB "
+                  f"bound={row['bottleneck']:10s} t={row['t_bound_s']:.4f}s "
+                  f"frac={row['roofline_fraction']:.2f}")
+        elif row["status"] == "skip":
+            print(f"[SKIP] {arch:26s} {shape:12s} {row['reason']}")
+        else:
+            n_err += 1
+            print(f"[ERR ] {arch:26s} {shape:12s} {row['error']}")
+    if n_err:
+        raise SystemExit(f"{n_err} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: (16, 16) = 256 chips, ("data", "model").
+Multi-pod: (2, 16, 16) = 512 chips, ("pod", "data", "model") — `pod` is an
+outer data-parallel axis (DCN between pods, ICI inside).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, model: int = 4, data: int = 2):
+    """Small mesh for subprocess tests (8 fake devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

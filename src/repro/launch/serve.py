@@ -1,0 +1,42 @@
+"""Serving launcher: continuous-batching engine over a registry arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --scaled --requests 10
+"""
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--scaled", action="store_true")
+    ap.add_argument("--b-max", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, scaled_down
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config(args.arch)
+    if args.scaled:
+        cfg = scaled_down(cfg)
+    eng = ServingEngine(cfg, b_max=args.b_max, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, (8 + i % 8,)).astype(np.int32),
+            max_new=8))
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out) for r in done)
+    print(f"completed={len(done)} tokens={total} tok_s={total / dt:.1f} "
+          f"stats={eng.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Sharding rules: logical parameter axes -> mesh axes, cache/batch specs,
+ZeRO-style optimizer-state sharding.
+
+Strategy (see DESIGN.md §4):
+  * weights: storage-sharded over `model` on their ff/vocab/experts/heads
+    dims (FSDP semantics in train/prefill — GSPMD all-gathers per layer
+    inside the scan; TP semantics at decode);
+  * activations: batch over ("pod","data"), sequence over `model`;
+  * decode KV caches: sequence-sharded over `model` (or data+model for
+    batch-1 long-context);
+  * optimizer moments: params sharding + largest replicated dim over `data`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.common import Dist
+
+# logical axis -> mesh axis (None = replicated)
+AXIS_RULES = {
+    "vocab": "model",
+    "heads_ff": "model",
+    "kv_ff": "model",
+    "ff": "model",
+    "experts": "model",
+    "expert_ff": "data",     # ZeRO-3-style storage sharding within experts
+    "heads": "model",
+    "lora": None,
+    "embed": None,
+    "conv": None,
+    None: None,
+}
+
+
+def make_dist(mesh: Optional[Mesh], shape: Optional[ShapeConfig] = None) -> Dist:
+    if mesh is None:
+        return Dist.local()
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    kv_axes = ()
+    if shape is not None and shape.kind == "decode":
+        dp = 1
+        for a in data_axes:
+            dp *= mesh.shape[a]
+        if shape.global_batch % dp != 0 or shape.global_batch < dp:
+            # batch can't shard (long_500k b=1): spread KV over data+model
+            kv_axes = data_axes + ("model",)
+        else:
+            kv_axes = ("model",)
+    return Dist(mesh=mesh, data_axes=data_axes, model_axis="model",
+                kv_axes=kv_axes)
+
+
+def _dp_size(dist: Dist) -> int:
+    n = 1
+    for a in dist.data_axes:
+        n *= dist.mesh.shape[a]
+    return n
+
+
+def _batch_spec(dist: Dist, global_batch: int):
+    if not dist.is_dist:
+        return None
+    dp = _dp_size(dist)
+    if global_batch % dp == 0 and global_batch >= dp:
+        return dist.data_axes if len(dist.data_axes) > 1 else dist.data_axes[0]
+    return None
+
+
+def param_pspecs(cfg: ModelConfig, dist: Dist):
+    """NamedSharding tree matching init_params structure."""
+    mesh = dist.mesh
+    msize = mesh.shape["model"]
+
+    def fn(name, pd, stacked):
+        dims = []
+        if stacked:
+            dims.append(None)
+        for size, ax in zip(pd.shape, pd.axes):
+            rule = AXIS_RULES.get(ax)
+            if rule and size % mesh.shape[rule] == 0 and size >= mesh.shape[rule]:
+                dims.append(rule)
+            else:
+                dims.append(None)
+        return NamedSharding(mesh, P(*dims))
+
+    return T.map_params_tree(cfg, fn)
+
+
+def cache_pspecs(cfg: ModelConfig, dist: Dist, global_batch: int,
+                 cache_len: int, enc_len=None):
+    """NamedSharding tree matching cache_struct."""
+    mesh = dist.mesh
+    struct, kinds = T.cache_struct(cfg, global_batch, cache_len, enc_len)
+    b_spec = _batch_spec(dist, global_batch)
+    kv = dist.kv_shard_axes or ("model",)
+    kv_el = kv if len(kv) > 1 else kv[0]
+    # when KV spans data axes too, batch must be unsharded
+    b_kv = None if any(a in kv for a in dist.data_axes) else b_spec
+    msize = mesh.shape["model"]
+
+    def spec_for(kind, nd, stacked, shape):
+        lead = (None,) if stacked else ()
+        if kind == "kv":
+            seq = shape[len(lead) + 1]
+            kv_ok = kv_el if seq % dist.kv_shards() == 0 else None
+            rest = (None,) * (nd - len(lead) - 2)
+            return P(*lead, b_kv, kv_ok, *rest)
+        if kind == "state":
+            H = shape[len(lead) + 1]
+            h_ax = "model" if H % msize == 0 else None
+            rest = (None,) * (nd - len(lead) - 2)
+            return P(*lead, b_spec, h_ax, *rest)
+        rest = (None,) * (nd - len(lead) - 1)
+        return P(*lead, b_spec, *rest)
+
+    def walk(struct_sub, kinds_sub, stacked):
+        return {k: NamedSharding(mesh, spec_for(kinds_sub[k], len(s.shape),
+                                                stacked, s.shape))
+                for k, s in struct_sub.items()}
+
+    pat = tuple(walk(s, kk, True) for s, kk in
+                zip(struct["pat"], kinds["pat"]))
+    rem = tuple(walk(s, kk, False) for s, kk in
+                zip(struct["rem"], kinds["rem"]))
+    return {"pat": pat, "rem": rem}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, dist: Dist,
+                 enc_pad: int = 0):
+    mesh = dist.mesh
+    b_spec = _batch_spec(dist, shape.global_batch)
+    seq_ax = "model" if shape.seq_len % mesh.shape["model"] == 0 else None
+    ns = lambda *dims: NamedSharding(mesh, P(*dims))
+    if shape.kind in ("train", "prefill"):
+        out = {}
+        if shape.kind == "train":
+            out["labels"] = ns(b_spec, seq_ax)
+        if cfg.frontend == "embeds" and not cfg.enc_dec:
+            out["embeds"] = ns(b_spec, seq_ax, None)
+        else:
+            out["tokens"] = ns(b_spec, seq_ax)
+        if cfg.enc_dec:
+            out["enc_embeds"] = ns(b_spec, "model", None)
+        return out
+    return {"token": ns(b_spec, None), "pos": ns()}
+
+
+def zero_pspecs(cfg: ModelConfig, dist: Dist):
+    """Optimizer-moment sharding: param spec + largest remaining replicated
+    dim additionally sharded over `data` (ZeRO-1-flavored).  Needed to fit
+    fp32 moments of 400-700B models on 256 chips."""
+    mesh = dist.mesh
+    dsize = mesh.shape["data"]
+
+    def fn(name, pd, stacked):
+        dims = [None] if stacked else []
+        shape = pd.shape
+        for size, ax in zip(shape, pd.axes):
+            rule = AXIS_RULES.get(ax)
+            if rule and size % mesh.shape[rule] == 0 and size >= mesh.shape[rule]:
+                dims.append(rule)
+            else:
+                dims.append(None)
+        # extra data-axis sharding on the largest replicated dim
+        best, best_size = -1, 0
+        off = 1 if stacked else 0
+        for i, size in enumerate(shape):
+            if dims[i + off] is None and size % dsize == 0 and size > best_size:
+                best, best_size = i + off, size
+        if best >= 0:
+            dims[best] = "data"
+        return NamedSharding(mesh, P(*dims))
+
+    ptree = T.map_params_tree(cfg, fn)
+    return {"m": ptree, "v": jax.tree.map(lambda x: x, ptree),
+            "step": NamedSharding(mesh, P())}
+
+
+def opt_struct(cfg: ModelConfig):
+    ps = T.param_struct(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, ps), "v": jax.tree.map(f32, ps),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def adafactor_struct(cfg: ModelConfig, opt):
+    """eval_shape'd Adafactor state structure."""
+    ps = T.param_struct(cfg)
+    return jax.eval_shape(opt.init, ps)
+
+
+def adafactor_pspecs(cfg: ModelConfig, dist: Dist, opt):
+    """Shardings for Adafactor state, derived from param specs: momentum
+    mirrors the param; vr drops the last dim; vc drops the second-to-last."""
+    mesh = dist.mesh
+
+    def dims_for(pd, stacked):
+        dims = [None] if stacked else []
+        for size, ax in zip(pd.shape, pd.axes):
+            rule = AXIS_RULES.get(ax)
+            if rule and size % mesh.shape[rule] == 0 and size >= mesh.shape[rule]:
+                dims.append(rule)
+            else:
+                dims.append(None)
+        return dims
+
+    def fn(name, pd, stacked):
+        dims = dims_for(pd, stacked)
+        full_shape = ((1,) + pd.shape) if stacked else pd.shape
+        st = {}
+        if opt.b1:
+            st["m"] = NamedSharding(mesh, P(*dims))
+        if len(full_shape) >= 2:
+            st["vr"] = NamedSharding(mesh, P(*dims[:-1]))
+            st["vc"] = NamedSharding(mesh, P(*(dims[:-2] + dims[-1:])))
+        else:
+            st["v"] = NamedSharding(mesh, P(*dims))
+        return st
+
+    return {"s": T.map_params_tree(cfg, fn),
+            "step": NamedSharding(mesh, P())}
+
+
+def replicate(dist: Dist, tree):
+    """NamedSharding tree: everything replicated (for small trees)."""
+    ns = NamedSharding(dist.mesh, P())
+    return jax.tree.map(lambda _: ns, tree)

@@ -1,0 +1,33 @@
+"""jit-able step functions: train / prefill / decode."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Dist
+from repro.models.model import Model
+from repro.optim import AdamW, apply_updates
+
+
+def make_train_step(model: Model, dist: Dist, opt: AdamW):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.train_loss(p, batch, dist))(params)
+        updates, opt_state, gnorm = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(model: Model, dist: Dist, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, dist, cache_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model, dist: Dist):
+    def decode_step(params, batch, caches):
+        return model.decode_step(params, batch, caches, dist)
+    return decode_step

@@ -1,0 +1,4 @@
+from repro.models.common import Dist
+from repro.models.model import Model, build_model
+
+__all__ = ["Dist", "Model", "build_model"]

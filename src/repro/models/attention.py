@@ -1,0 +1,371 @@
+"""Attention: reference oracle, blocked partials, ring attention (shard_map),
+distributed flash-decode over a sequence-sharded KV cache, MLA variants,
+and rolling-window decode.
+
+Layout convention: activations are BSHD — q: (b, sq, h, dh), k/v:
+(b, sk, hkv, dh).  GQA is handled by grouping q heads over kv heads.
+
+Distribution story (the PIPO mapping): the KV cache is sharded along
+*sequence* across the `model` (or `data`+`model`) mesh axes — the TPU
+analogue of PIPO keeping the KV cache "elsewhere" (CPU DRAM) and moving
+only what compute needs.  Instead of shipping the cache to the compute
+(PIPO's KV-load task), each shard computes *partial* attention locally and
+ships only (m, l, o) softmax partials — a few KB — through one psum
+(decode) or rotates KV blocks through the ICI ring overlapped with compute
+(prefill), which is the paper's pipeline discipline rendered in collectives.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import (NEG_INF, axis_index, axis_size,
+                                 empty_partials, finalize_partials,
+                                 match_vma, merge_partials, pmax, psum)
+
+# ---------------------------------------------------------------------------
+# Reference oracle (pure jnp, materializes the full score matrix).
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    """(sq, sk) boolean mask; True = attend."""
+    dq = q_pos[:, None]
+    dk = kv_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= dk <= dq
+    if window:
+        m &= dq - dk < window
+    return m
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, q_offset=0, kv_offset=0,
+                  kv_valid_len=None, softcap: float = 0.0):
+    """Oracle attention.  q: (b,sq,h,dh); k,v: (b,sk,hkv,dv)."""
+    b, sq, h, dh = q.shape
+    _, sk, hkv, dv = v.shape
+    g = h // hkv
+    qr = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qr, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = kv_offset + jnp.arange(sk)
+    m = _mask(q_pos, kv_pos, causal, window)
+    if kv_valid_len is not None:
+        m = m & (kv_pos < kv_valid_len)[None, :]
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# Blocked partials: one (q-block x kv-block) tile -> online-softmax partials.
+# ---------------------------------------------------------------------------
+
+
+def attn_partials(q, k, v, mask, *, softcap: float = 0.0, q_chunk: int = 0):
+    """Partials (m, l, o) in fp32.  mask: (sq, sk) or (b, sq, sk) bool or
+    None — the batched form supports ragged decode positions.
+
+    q_chunk > 0 bounds the transient score matrix to (..., q_chunk, sk)
+    via lax.map over query chunks.
+    """
+    b, sq, h, dh = q.shape
+    _, sk, hkv, dv = v.shape
+    g = h // hkv
+
+    def block(args):
+        qc, mc = args           # (b, c, h, dh), ([b,] c, sk)
+        c = qc.shape[1]
+        qr = qc.reshape(b, c, hkv, g, dh)
+        s = jnp.einsum("bqhgd,bshd->bhgqs", qr, k,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(dh))
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        if mc is not None:
+            mb = mc[None, None, None] if mc.ndim == 2 \
+                else mc[:, None, None]
+            s = jnp.where(mb, s, NEG_INF)
+        m = jnp.max(s, axis=-1)                       # (b,hkv,g,c)
+        p = jnp.exp(s - m[..., None])
+        # rows that are fully masked: keep l = 0, o = 0
+        dead = m <= NEG_INF / 2
+        p = jnp.where(dead[..., None], 0.0, p)
+        m = jnp.where(dead, NEG_INF, m)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(v.dtype), v)
+        mm = m.reshape(b, h, c)
+        ll = l.reshape(b, h, c)
+        oo = o.astype(jnp.float32).reshape(b, h, c, dv)
+        return mm, ll, oo
+
+    if q_chunk and sq > q_chunk and sq % q_chunk == 0:
+        n = sq // q_chunk
+        qs = jnp.moveaxis(q.reshape(b, n, q_chunk, h, dh), 1, 0)
+        ms = None if mask is None else mask.reshape(n, q_chunk, sk)
+        if ms is None:
+            mm, ll, oo = lax.map(lambda qc: block((qc, None)), qs)
+        else:
+            mm, ll, oo = lax.map(block, (qs, ms))
+        # (n, b, h, c[, d]) -> (b, h, sq[, d])
+        m = jnp.moveaxis(mm, 0, 2).reshape(b, h, sq)
+        l = jnp.moveaxis(ll, 0, 2).reshape(b, h, sq)
+        o = jnp.moveaxis(oo, 0, 2).reshape(b, h, sq, dv)
+        return m, l, o
+    return block((q, mask))
+
+
+# ---------------------------------------------------------------------------
+# Ring attention (train/prefill) — call inside shard_map over `axis` with the
+# sequence dim sharded.  axis=None degenerates to single-block flash == oracle.
+# ---------------------------------------------------------------------------
+
+
+def ring_attention(q, k, v, *, axis: Optional[str], causal=True, window=0,
+                   softcap: float = 0.0, q_chunk: int = 512):
+    b, sq, h, dh = q.shape
+    _, sk, hkv, dv = v.shape
+    P = axis_size(axis)
+    i = axis_index(axis)
+    q_pos = i * sq + jnp.arange(sq)
+
+    # Number of ring steps actually needed: a windowed causal layer only
+    # sees ceil(window/sk)+1 blocks back; full attention needs all P.
+    if window:
+        steps = min(P, -(-window // sk) + 1)
+    else:
+        steps = P
+
+    def one_step(t, carry):
+        (m, l, o), kc, vc = carry
+        j = (i - t) % P
+        kv_pos = j * sk + jnp.arange(sk)
+        msk = _mask(q_pos, kv_pos, causal, window)
+        pm, pl, po = attn_partials(q, kc, vc, msk, softcap=softcap,
+                                   q_chunk=q_chunk)
+        m, l, o = merge_partials((m, l, o), (pm, pl, po))
+        if axis is not None and steps > 1:
+            perm = [(s, (s + 1) % P) for s in range(P)]
+            kc = lax.ppermute(kc, axis, perm)
+            vc = lax.ppermute(vc, axis, perm)
+        return (m, l, o), kc, vc
+
+    carry = (match_vma(empty_partials((b, h, sq), dv), q), k, v)
+    if steps <= 1:
+        carry = one_step(0, carry)
+    else:
+        carry = lax.fori_loop(0, steps, one_step, carry, unroll=False)
+    (m, l, o), _, _ = carry
+    out = finalize_partials(m, l, o)                  # (b, h, sq, dv)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)    # -> (b, sq, h, dv)
+
+
+def mla_ring_attention(q, c, kr, w_uk, w_uv, *, axis: Optional[str],
+                       q_chunk: int = 256):
+    """MLA-aware ring attention (beyond-paper, §Perf C1).
+
+    The generic ring rotates the *expanded* per-head K/V
+    (h*(d_nope+d_rope+d_v) = 40960 dims/token for deepseek-v3); MLA's whole
+    point is that tokens compress to a 576-dim latent.  Rotating (c, k_rope)
+    and expanding through W_uk/W_uv locally per ring step cuts ppermute
+    bytes ~71x for ~1.6x attention-region FLOPs (expansion einsums), which
+    the napkin math and the §Perf log show is a large net win at pod scale.
+
+    q: (b, sq, h, dn+dr) — nope||rope; c: (b, sk, r); kr: (b, sk, dr);
+    w_uk: (r, h, dn); w_uv: (r, h, dv).
+    """
+    b, sq, h, dq = q.shape
+    _, sk, r = c.shape
+    dr = kr.shape[-1]
+    dn = dq - dr
+    dv = w_uv.shape[-1]
+    P = axis_size(axis)
+    i = axis_index(axis)
+    q_pos = i * sq + jnp.arange(sq)
+
+    def expand(c_blk, kr_blk):
+        k_nope = jnp.einsum("bsr,rhn->bshn", c_blk, w_uk)
+        v = jnp.einsum("bsr,rhv->bshv", c_blk, w_uv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_blk[:, :, None, :],
+                                      (b, sk, h, dr))], axis=-1)
+        return k, v
+
+    def one_step(t, carry):
+        (m, l, o), c_cur, kr_cur = carry
+        j = (i - t) % P
+        kv_pos = j * sk + jnp.arange(sk)
+        msk = _mask(q_pos, kv_pos, True, 0)
+        k, v = expand(c_cur, kr_cur)
+        pm, pl, po = attn_partials(q, k, v, msk, q_chunk=q_chunk)
+        m, l, o = merge_partials((m, l, o), (pm, pl, po))
+        if axis is not None and P > 1:
+            perm = [(s, (s + 1) % P) for s in range(P)]
+            c_cur = lax.ppermute(c_cur, axis, perm)
+            kr_cur = lax.ppermute(kr_cur, axis, perm)
+        return (m, l, o), c_cur, kr_cur
+
+    carry = (match_vma(empty_partials((b, h, sq), dv), q), c, kr)
+    if P <= 1:
+        carry = one_step(0, carry)
+    else:
+        carry = lax.fori_loop(0, P, one_step, carry, unroll=False)
+    (m, l, o), _, _ = carry
+    return jnp.moveaxis(finalize_partials(m, l, o), 1, 2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode over a sequence-sharded KV cache (distributed flash-decode).
+# Call inside shard_map; axes=() degenerates to the local single-shard case.
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *, axes=(),
+                     softcap: float = 0.0):
+    """q: (b, sq=1, h, dh); caches (b, S_loc, hkv, dh); k_new/v_new
+    (b, 1, hkv, dh); pos: scalar int32 OR (b,) ragged positions (each
+    sequence writes/attends its own position — continuous batching).
+    Returns (out (b,1,h,dv), k_cache', v_cache')."""
+    b, S_loc, hkv, dh = k_cache.shape
+    i = axis_index(axes)
+    ragged = jnp.ndim(pos) == 1
+    owner = pos // S_loc
+    loc = pos - owner * S_loc
+    is_owner = (i == owner)
+
+    if ragged:
+        rows = jnp.arange(b)
+
+        def write(cache, new):
+            upd = cache.at[rows, loc].set(
+                jnp.where(is_owner[:, None, None], new[:, 0],
+                          cache[rows, loc]).astype(cache.dtype))
+            return upd
+    else:
+        def write(cache, new):
+            # O(1) ownership select: read back the 1-token slice and choose
+            # between it and the new KV — NOT a full-cache where() (which
+            # costs a cache-sized copy per layer; found via the §Perf
+            # profile: 2 x 5.5 GB/layer on qwen2-vl decode).
+            old = lax.dynamic_slice(cache, (0, loc, 0, 0),
+                                    (cache.shape[0], 1, *cache.shape[2:]))
+            val = jnp.where(is_owner, new.astype(cache.dtype), old)
+            return lax.dynamic_update_slice(cache, val, (0, loc, 0, 0))
+
+    k_cache = write(k_cache, k_new)
+    v_cache = write(v_cache, v_new)
+
+    kv_pos = i * S_loc + jnp.arange(S_loc)
+    if ragged:
+        valid = (kv_pos[None, :] <= pos[:, None])[:, None, :]  # (b,1,S)
+    else:
+        valid = (kv_pos <= pos)[None, :]             # (1=sq, S_loc)
+    m, l, o = attn_partials(q, k_cache, v_cache, valid, softcap=softcap)
+    # merge across shards: tiny psum of partials, not the cache
+    if axes:
+        M = pmax(m, axes)
+        scale = jnp.exp(m - M)
+        l = psum(l * scale, axes)
+        o = psum(o * scale[..., None], axes)
+        m = M
+    out = jnp.moveaxis(finalize_partials(m, l, o), 1, 2).astype(q.dtype)
+    return out, k_cache, v_cache
+
+
+def local_decode_attention(q, k_cache, v_cache, k_new, v_new, pos, window):
+    """Rolling-buffer decode for sliding-window layers; cache (b, W, hkv, dh)
+    replicated (W is small).  Slot j holds position pos - ((pos - j) mod W).
+    pos: scalar or (b,) ragged."""
+    b, W, hkv, dh = k_cache.shape
+    slot = pos % W
+    j = jnp.arange(W)
+    if jnp.ndim(pos) == 1:
+        rows = jnp.arange(b)
+        k_cache = k_cache.at[rows, slot].set(k_new[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, slot].set(v_new[:, 0].astype(v_cache.dtype))
+        p_j = pos[:, None] - ((pos[:, None] - j[None]) % W)
+        valid = (p_j >= 0)[:, None, :]               # (b, 1, W)
+    else:
+        k_cache = lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+        p_j = pos - ((pos - j) % W)
+        valid = (p_j >= 0)[None, :]
+    m, l, o = attn_partials(q, k_cache, v_cache, valid)
+    out = jnp.moveaxis(finalize_partials(m, l, o), 1, 2).astype(q.dtype)
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek): decode over the sequence-sharded *latent* cache.
+# ---------------------------------------------------------------------------
+
+
+def mla_decode_attention(q_eff, q_rope, c_cache, kr_cache, c_new, kr_new,
+                         pos, *, scale, axes=()):
+    """q_eff: (b, 1, h, r) — q_nope absorbed through W_uk;
+    q_rope: (b, 1, h, dr); c_cache: (b, S_loc, r); kr_cache: (b, S_loc, dr);
+    c_new: (b, 1, r); kr_new: (b, 1, dr).
+    Returns (ctx_latent (b,1,h,r), c_cache', kr_cache')."""
+    b, S_loc, r = c_cache.shape
+    i = axis_index(axes)
+    ragged = jnp.ndim(pos) == 1
+    owner = pos // S_loc
+    loc = pos - owner * S_loc
+    is_owner = (i == owner)
+
+    if ragged:
+        rows = jnp.arange(b)
+
+        def write(cache, new):
+            return cache.at[rows, loc].set(
+                jnp.where(is_owner[:, None], new[:, 0],
+                          cache[rows, loc]).astype(cache.dtype))
+    else:
+        def write(cache, new):
+            # O(1) ownership select (see decode_attention.write)
+            old = lax.dynamic_slice(cache, (0, loc, 0),
+                                    (cache.shape[0], 1, cache.shape[2]))
+            val = jnp.where(is_owner, new.astype(cache.dtype), old)
+            return lax.dynamic_update_slice(cache, val, (0, loc, 0))
+
+    c_cache = write(c_cache, c_new)
+    kr_cache = write(kr_cache, kr_new)
+
+    kv_pos = i * S_loc + jnp.arange(S_loc)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_eff, c_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bsd->bhqs", q_rope, kr_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    if ragged:
+        valid = kv_pos[None, :] <= pos[:, None]       # (b, S_loc)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        valid = valid[:, None, None]
+    else:
+        valid = kv_pos <= pos                         # (S_loc,)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    dead = m <= NEG_INF / 2
+    p = jnp.where(dead[..., None], 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqs,bsr->bhqr", p.astype(c_cache.dtype),
+                   c_cache).astype(jnp.float32)
+    if axes:
+        M = pmax(m, axes)
+        sc = jnp.exp(m - M)
+        l = psum(l * sc, axes)
+        o = psum(o * sc[..., None], axes)
+    ctx = (o / jnp.maximum(l, 1e-30)[..., None])      # (b,h,1,r)
+    return jnp.moveaxis(ctx, 2, 1), c_cache, kr_cache  # (b,1,h,r)

@@ -1,0 +1,84 @@
+"""Public model facade: one object binding a ModelConfig to init / train /
+prefill / decode plus input-spec construction for the dry-run."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.common import Dist
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, key, dtype=jnp.bfloat16):
+        return T.init_params(self.cfg, key, dtype)
+
+    def param_axes(self):
+        return T.param_axes(self.cfg)
+
+    # ---- compute entry points ---------------------------------------------
+    def train_loss(self, params, batch, dist: Dist):
+        return T.train_loss(params, batch, self.cfg, dist)
+
+    def prefill(self, params, batch, dist: Dist, cache_len: int):
+        return T.prefill(params, batch, self.cfg, dist, cache_len)
+
+    def decode_step(self, params, batch, caches, dist: Dist):
+        return T.decode_step(params, batch, caches, self.cfg, dist)
+
+    # ---- caches ------------------------------------------------------------
+    def init_cache(self, b: int, cache_len: int, enc_len: Optional[int] = None):
+        return T.init_cache(self.cfg, b, cache_len, enc_len)
+
+    def cache_struct(self, b: int, cache_len: int,
+                     enc_len: Optional[int] = None):
+        return T.cache_struct(self.cfg, b, cache_len, enc_len)
+
+    # ---- dry-run input specs ------------------------------------------------
+    def input_struct(self, shape: ShapeConfig, enc_pad: int = 0):
+        """ShapeDtypeStructs for the model inputs of a given workload shape.
+
+        Modality frontends are STUBS: vlm/audio archs receive precomputed
+        embeddings (`embeds` / `enc_embeds`) per the assignment.
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        bf = jnp.bfloat16
+        enc_len = enc_pad or cfg.encoder_seq_len
+        if shape.kind == "train":
+            batch = {"labels": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.frontend == "embeds" and not cfg.enc_dec:
+                batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf)
+            else:
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.enc_dec:
+                batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                    (b, enc_len, cfg.d_model), bf)
+            return batch
+        if shape.kind == "prefill":
+            batch = {}
+            if cfg.frontend == "embeds" and not cfg.enc_dec:
+                batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf)
+            else:
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.enc_dec:
+                batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                    (b, enc_len, cfg.d_model), bf)
+            return batch
+        # decode: one new token against a cache of length seq_len
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

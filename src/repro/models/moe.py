@@ -1,0 +1,226 @@
+"""Mixture-of-Experts: sort-based capacity dispatch with expert parallelism.
+
+Dispatch is gather/scatter based (O(T*k*d) data movement, *no* (T,E,C)
+one-hot einsum — at pod scale that einsum would dwarf the expert FLOPs).
+
+Expert parallelism (the paper's Appendix D "EP" integration): experts are
+sharded over the `model` axis; tokens move through two all-to-alls
+(dispatch / return) inside shard_map.  With axis=None the same code is the
+single-device reference — tested against a dense per-token loop oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MoEConfig
+from repro.models.common import axis_index, axis_size, silu
+
+
+def router_topk(logits, k: int):
+    """logits (T, E) -> (weights (T,k) softmaxed over chosen, ids (T,k))."""
+    vals, ids = lax.top_k(logits, k)
+    w = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return w, ids
+
+
+def load_balance_loss(logits, ids, num_experts: int):
+    """GShard-style auxiliary loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (T, E)
+    onehot = jax.nn.one_hot(ids[..., 0], num_experts)             # top-1 share
+    f = jnp.mean(onehot, axis=0)
+    p = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def _dispatch_indices(ids, num_experts: int, capacity: int):
+    """ids: (T, k) expert assignment.  Returns (expert, slot, valid) each
+    (T, k): the capacity slot each (token, choice) lands in, dropping
+    overflow (slot >= capacity)."""
+    T, k = ids.shape
+    flat = ids.reshape(-1)                                        # (T*k,)
+    # Stable sort by expert; rank within expert = position - segment start.
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    counts = jnp.bincount(flat, length=num_experts)
+    starts = jnp.cumsum(counts) - counts                          # (E,)
+    ranks_sorted = jnp.arange(T * k) - starts[sorted_e]
+    ranks = jnp.zeros(T * k, jnp.int32).at[order].set(
+        ranks_sorted.astype(jnp.int32))
+    valid = ranks < capacity
+    return flat.reshape(T, k), ranks.reshape(T, k), valid.reshape(T, k)
+
+
+def _expert_ffn(w_gate, w_up, w_down, xb):
+    """Batched experts: weights (E, d, f)/(E, f, d); xb (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up)
+    return jnp.einsum("ecf,efd->ecd", silu(g) * u, w_down)
+
+
+def moe_ffn(x, params, cfg: MoEConfig, *, axis: Optional[str] = None,
+            capacity: Optional[int] = None):
+    """x: (T, d) local tokens.  params: wg (d,E), w_gate/w_up (E,d,f),
+    w_down (E,f,d) — under EP the E axis is sharded over ``axis``;
+    inside shard_map each shard sees E_loc = E/P experts but routes over all
+    E (router weights wg replicated).  Returns (out (T,d), aux_loss)."""
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    P = axis_size(axis)
+    E_loc = params["w_gate"].shape[0]           # E/P under shard_map, E locally
+    assert E_loc * P == E, (E_loc, P, E)
+
+    logits = (x @ params["wg"]).astype(jnp.float32)               # (T, E)
+    w, ids = router_topk(logits, k)
+    aux = load_balance_loss(logits, ids, E)
+
+    if capacity is None:
+        capacity = int(cfg.capacity_factor * T * k / E) + 1
+    # capacity must be identical across shards (static) — it is: T static.
+    e_id, slot, valid = _dispatch_indices(ids, E, capacity)
+
+    # Scatter tokens into the dispatch buffer (E, C, d).  Overflow slots are
+    # clamped and their updates zeroed (dropped-token semantics).
+    slot_c = jnp.minimum(slot, capacity - 1)
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    buf = buf.at[e_id.reshape(-1), slot_c.reshape(-1)].add(
+        jnp.where(valid.reshape(-1, 1), x[flat_t], 0))
+
+    if axis is not None:
+        # EP all-to-all #1 (dispatch): device i's block p goes to shard p.
+        # Symmetric tiled a2a (split==concat axis) + explicit transpose: the
+        # asymmetric split/concat form has a broken VJP layout in jax 0.8.
+        buf = buf.reshape(P, E_loc, capacity, d)
+        buf = lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                             tiled=True)          # out[j] = from shard j
+        buf = jnp.moveaxis(buf, 0, 1).reshape(E_loc, P * capacity, d)
+
+    out_buf = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
+                          buf)
+
+    if axis is not None:
+        # EP all-to-all #2 (return): inverse of dispatch.
+        out_buf = out_buf.reshape(E_loc, P, capacity, d)
+        out_buf = jnp.moveaxis(out_buf, 1, 0)     # (P, E_loc, C, d)
+        out_buf = lax.all_to_all(out_buf, axis, split_axis=0, concat_axis=0,
+                                 tiled=True)
+        out_buf = out_buf.reshape(E, capacity, d)
+
+    # Gather back + weighted combine.
+    gathered = out_buf[e_id.reshape(-1), slot_c.reshape(-1)]      # (T*k, d)
+    gathered = jnp.where(valid.reshape(-1, 1), gathered, 0)
+    gathered = gathered.reshape(T, k, d) * w[..., None].astype(x.dtype)
+    return jnp.sum(gathered, axis=1), aux
+
+
+def moe_ffn_replicated(x, params, cfg: MoEConfig, *, axis: Optional[str]):
+    """Decode-mode EP: tokens x (T, d) are *replicated* over ``axis`` while
+    experts stay sharded.  Every shard routes all T tokens, computes only its
+    local experts (capacity = T, zero drops), and contributions are merged
+    with one tiny psum — the comm volume is O(T*d), not O(expert weights),
+    which is the PIPO Appendix-D point about EP being offload-friendly.
+    """
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    P = axis_size(axis)
+    E_loc = params["w_gate"].shape[0]
+    assert E_loc * P == E
+
+    logits = (x @ params["wg"]).astype(jnp.float32)
+    w, ids = router_topk(logits, k)
+    aux = load_balance_loss(logits, ids, E)
+
+    capacity = T
+    e_id, slot, valid = _dispatch_indices(ids, E, capacity)
+    slot_c = jnp.minimum(slot, capacity - 1)
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    buf = buf.at[e_id.reshape(-1), slot_c.reshape(-1)].add(
+        jnp.where(valid.reshape(-1, 1), x[flat_t], 0))
+
+    i = axis_index(axis)
+    start = i * E_loc
+    buf_loc = lax.dynamic_slice(buf, (start, 0, 0), (E_loc, capacity, d))
+    out_loc = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
+                          buf_loc)
+
+    rel_e = e_id - start
+    mine = (rel_e >= 0) & (rel_e < E_loc) & valid
+    gathered = out_loc[jnp.clip(rel_e, 0, E_loc - 1).reshape(-1),
+                       slot_c.reshape(-1)]
+    gathered = jnp.where(mine.reshape(-1, 1), gathered, 0)
+    gathered = gathered.reshape(T, k, d) * w[..., None].astype(x.dtype)
+    out = jnp.sum(gathered, axis=1)
+    if axis is not None:
+        out = lax.psum(out, axis)
+    return out, aux
+
+
+def moe_ffn_decode(x, params, cfg: MoEConfig, *, ep_axis, ff_axis,
+                   combine_axes):
+    """Decode-mode EP for pod-scale experts: tokens x (T, d) fully
+    *replicated* over ``combine_axes``; experts sharded over ``ep_axis``
+    AND each expert's ff dim sharded over ``ff_axis`` (expert tensor
+    parallelism).  Every chip computes its expert slice for all T tokens;
+    ONE psum over ``combine_axes`` merges both the within-expert ff
+    partial sums and the cross-expert combine.  Comm volume is O(T*d) —
+    independent of expert weights, the property that makes EP
+    offload-friendly (paper Appendix D)."""
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    E_loc = params["w_gate"].shape[0]
+
+    logits = (x @ params["wg"]).astype(jnp.float32)
+    w, ids = router_topk(logits, k)
+    aux = load_balance_loss(logits, ids, E)
+
+    capacity = T
+    e_id, slot, valid = _dispatch_indices(ids, E, capacity)
+    slot_c = jnp.minimum(slot, capacity - 1)
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    buf = buf.at[e_id.reshape(-1), slot_c.reshape(-1)].add(
+        jnp.where(valid.reshape(-1, 1), x[flat_t], 0))
+
+    i_ep = axis_index(ep_axis)
+    start = i_ep * E_loc
+    buf_loc = lax.dynamic_slice(buf, (start, 0, 0), (E_loc, capacity, d))
+    # ff-sliced expert compute: g/u are FULL values for this chip's ff
+    # coords (contraction over d is complete); down output is a partial
+    # sum over ff, finalized by the psum below.
+    g = jnp.einsum("ecd,edf->ecf", buf_loc, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf_loc, params["w_up"])
+    part = jnp.einsum("ecf,efd->ecd", silu(g) * u, params["w_down"])
+
+    rel_e = e_id - start
+    mine = (rel_e >= 0) & (rel_e < E_loc) & valid
+    gathered = part[jnp.clip(rel_e, 0, E_loc - 1).reshape(-1),
+                    slot_c.reshape(-1)]
+    gathered = jnp.where(mine.reshape(-1, 1), gathered, 0)
+    gathered = gathered.reshape(T, k, d) * w[..., None].astype(x.dtype)
+    out = lax.psum(jnp.sum(gathered, axis=1), combine_axes)
+    return out, aux
+
+
+def moe_ffn_dense_oracle(x, params_full, cfg: MoEConfig):
+    """Oracle: every token through its top-k experts with no capacity, via a
+    dense (T, E) loop.  For tests (small T, E)."""
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    logits = (x @ params_full["wg"]).astype(jnp.float32)
+    w, ids = router_topk(logits, k)
+    out = jnp.zeros((T, d), x.dtype)
+    for e in range(E):
+        ye = _expert_ffn(params_full["w_gate"][e:e + 1],
+                         params_full["w_up"][e:e + 1],
+                         params_full["w_down"][e:e + 1],
+                         x[None])[0]                               # (T, d)
+        for j in range(k):
+            sel = (ids[:, j] == e)
+            out = out + jnp.where(sel[:, None], ye * w[:, j:j + 1].astype(x.dtype), 0)
+    return out

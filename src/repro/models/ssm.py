@@ -1,0 +1,191 @@
+"""Mamba2 / SSD (state-space duality) [arXiv:2405.21060].
+
+Chunked SSD with:
+  * intra-chunk quadratic path (the "attention-like" dual form),
+  * inter-chunk linear recurrence via ``lax.associative_scan`` (log-depth),
+  * sequence sharding across the `model` axis: each shard scans locally from
+    h0 = 0, shards exchange (decay, state) summaries via all_gather, and a
+    rank-1-in-state linear correction applies the true incoming state —
+    communication is O(state), independent of sequence length.
+
+The sequential token-by-token recurrence is the oracle (``ssd_sequential``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import axis_index, axis_size
+
+
+def segsum(a):
+    """a: (..., cs) -> (..., cs, cs) lower-triangular segment sums:
+    out[i, j] = sum(a[j+1..i]) for i >= j, -inf otherwise."""
+    cs = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]     # sum(a[j+1..i])
+    i = jnp.arange(cs)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int, h_init=None):
+    """Chunked SSD.
+
+    xh: (b, l, H, hd); dt: (b, l, H) (already softplus'd);
+    A: (H,) negative; B, C: (b, l, G, N).
+    Returns (y (b, l, H, hd), h_final (b, H, hd, N), state_factor
+    (b, l, H)) where ``state_factor`` is the per-position decay from
+    sequence start — multiply by C to apply an external initial state.
+    """
+    b, l, H, hd = xh.shape
+    G, N = B.shape[-2:]
+    Hg = H // G
+    assert l % chunk == 0, (l, chunk)
+    nc, cs = l // chunk, chunk
+
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(b, nc, cs, H, hd)
+    dt = dt.astype(f32).reshape(b, nc, cs, H)
+    B_ = B.astype(f32).reshape(b, nc, cs, G, N)
+    C_ = C.astype(f32).reshape(b, nc, cs, G, N)
+    dA = dt * A.astype(f32)                               # (b, nc, cs, H) <= 0
+    Acs = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+    dtx = dt[..., None] * xh                              # (b, nc, cs, H, hd)
+
+    # ---- intra-chunk (quadratic dual form) -------------------------------
+    L = jnp.exp(segsum(jnp.moveaxis(dA, 2, -1)))          # (b, nc, H, cs, cs)
+    CB = jnp.einsum("bcigr,bcjgr->bcgij", C_, B_)         # (b, nc, G, cs, cs)
+    CB = jnp.repeat(CB, Hg, axis=2)                       # (b, nc, H, cs, cs)
+    M = CB * L
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, dtx)     # (b, nc, cs, H, hd)
+
+    # ---- chunk summaries -> inter-chunk recurrence -----------------------
+    # state contribution of chunk c: sum_j exp(A_end - Acs_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(Acs[:, :, -1:, :] - Acs)       # (b, nc, cs, H)
+    # group-broadcast B over heads: (b, nc, cs, H, N)
+    B_heads = jnp.repeat(B_.reshape(b, nc, cs, G, 1, N), Hg, axis=4).reshape(
+        b, nc, cs, H, N)
+    S = jnp.einsum("bcjhn,bcjhp,bcjh->bchpn", B_heads, dtx, decay_to_end)
+    chunk_decay = jnp.exp(Acs[:, :, -1, :])               # (b, nc, H)
+
+    # associative scan over chunks: (a2,s2) o (a1,s1) = (a1*a2, s1*a2 + s2)
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_scan, s_scan = lax.associative_scan(
+        combine, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S, 1, 0)))
+    a_scan = jnp.moveaxis(a_scan, 0, 1)                   # (b, nc, H) prefix decay incl. c
+    s_scan = jnp.moveaxis(s_scan, 0, 1)                   # (b, nc, H, hd, N) state at end of c
+    # state at *start* of each chunk (from h0 = 0): shift right
+    h_start = jnp.concatenate(
+        [jnp.zeros_like(s_scan[:, :1]), s_scan[:, :-1]], axis=1)
+    h_final = s_scan[:, -1]                               # (b, H, hd, N)
+
+    # ---- apply inter-chunk states to outputs -----------------------------
+    C_heads = jnp.repeat(C_.reshape(b, nc, cs, G, 1, N), Hg, axis=4).reshape(
+        b, nc, cs, H, N)
+    in_decay = jnp.exp(Acs)                               # decay chunk-start -> i
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", C_heads, h_start, in_decay)
+    y = y_diag + y_off
+
+    # decay from *sequence start* to position i (for external initial state)
+    prefix_excl = jnp.concatenate(
+        [jnp.ones_like(a_scan[:, :1]), a_scan[:, :-1]], axis=1)  # (b, nc, H)
+    state_factor = (in_decay * prefix_excl[:, :, None, :]).reshape(b, l, H)
+    total_decay = a_scan[:, -1]                           # (b, H)
+
+    if h_init is not None:
+        y = y + jnp.einsum(
+            "bihn,bhpn,bih->bihp",
+            C_heads.reshape(b, l, H, N), h_init.astype(f32),
+            state_factor).reshape(b, nc, cs, H, hd)
+        h_final = h_final + h_init.astype(f32) * total_decay[..., None, None]
+
+    return y.reshape(b, l, H, hd), h_final, (state_factor, total_decay)
+
+
+def ssd_sequential(xh, dt, A, B, C, h_init=None):
+    """Oracle: token-by-token recurrence."""
+    b, l, H, hd = xh.shape
+    G, N = B.shape[-2:]
+    Hg = H // G
+    f32 = jnp.float32
+    h = jnp.zeros((b, H, hd, N), f32) if h_init is None else h_init.astype(f32)
+    B_heads = jnp.repeat(B.reshape(b, l, G, 1, N), Hg, axis=3).reshape(b, l, H, N)
+    C_heads = jnp.repeat(C.reshape(b, l, G, 1, N), Hg, axis=3).reshape(b, l, H, N)
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt.astype(f32) * A.astype(f32))  # (b, H)
+        upd = jnp.einsum("bhn,bhp,bh->bhpn", Bt.astype(f32), xt.astype(f32),
+                         dtt.astype(f32))
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Ct.astype(f32), h)
+        return h, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B_heads, 1, 0), jnp.moveaxis(C_heads, 1, 0))
+    h, ys = lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def ssd_decode_step(xh, dt, A, B, C, h):
+    """One-token recurrent update.  xh: (b, H, hd); dt: (b, H);
+    B, C: (b, G, N); h: (b, H, hd, N).  Returns (y (b,H,hd), h')."""
+    b, H, hd = xh.shape
+    G, N = B.shape[-2:]
+    Hg = H // G
+    f32 = jnp.float32
+    B_heads = jnp.repeat(B.reshape(b, G, 1, N), Hg, axis=2).reshape(b, H, N)
+    C_heads = jnp.repeat(C.reshape(b, G, 1, N), Hg, axis=2).reshape(b, H, N)
+    decay = jnp.exp(dt.astype(f32) * A.astype(f32))
+    upd = jnp.einsum("bhn,bhp,bh->bhpn", B_heads.astype(f32), xh.astype(f32),
+                     dt.astype(f32))
+    h = h.astype(f32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", C_heads.astype(f32), h)
+    return y, h
+
+
+def ssd_sharded(xh, dt, A, B, C, chunk: int, axis: Optional[str]):
+    """Sequence-sharded SSD: call inside shard_map with the l dim sharded
+    over ``axis``.  Cross-shard state handoff via one all_gather of
+    (decay, state) summaries; each shard applies its true incoming state
+    through the linear ``state_factor`` correction."""
+    y, h_final, (state_factor, total_decay) = ssd_chunked(
+        xh, dt, A, B, C, chunk, h_init=None)
+    if axis is None or axis_size(axis) == 1:
+        return y, h_final
+    P = axis_size(axis)
+    i = axis_index(axis)
+    decays = lax.all_gather(total_decay, axis)            # (P, b, H)
+    states = lax.all_gather(h_final, axis)                # (P, b, H, hd, N)
+    # incoming state for shard i: sum_{j<i} states[j] * prod_{j<m<i} decays[m]
+    b, l, H, hd = xh.shape
+    N = B.shape[-1]
+    h_in = jnp.zeros_like(h_final)
+    run = jnp.ones_like(total_decay)
+    # walk backwards j = i-1 .. 0 with a static loop over P candidates
+    for step_back in range(1, P):
+        j = i - step_back
+        valid = j >= 0
+        contrib = jnp.where(valid, states[jnp.maximum(j, 0)], 0.0)
+        h_in = h_in + contrib * run[..., None, None]
+        run = run * jnp.where(valid, decays[jnp.maximum(j, 0)], 1.0)
+    # apply correction
+    G = B.shape[-2]
+    Hg = H // G
+    C_heads = jnp.repeat(
+        C.astype(jnp.float32).reshape(b, l, G, 1, N), Hg, axis=3).reshape(
+        b, l, H, N)
+    y = y + jnp.einsum("bihn,bhpn,bih->bihp", C_heads, h_in, state_factor)
+    h_final = h_final + h_in * total_decay[..., None, None]
+    # the *global* final state is the last shard's corrected state; select it
+    # via a tiny psum so every shard returns the same (replicated) value.
+    h_final = lax.psum(jnp.where(i == P - 1, h_final, 0.0), axis)
+    return y, h_final

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, apply_updates, cosine_schedule, global_norm
+
+__all__ = ["AdamW", "apply_updates", "cosine_schedule", "global_norm"]

@@ -1,0 +1,84 @@
+"""Adafactor-style optimizer: factored second moment + bf16 momentum.
+
+Why it exists here: fp32 Adam moments for a 671B-param model are 5.4 TB —
+21 GB/chip on a 256-chip pod even perfectly sharded, alone exceeding v5e
+HBM.  Factoring V into row/col statistics (Shazeer & Stern, arXiv:1804.04235)
+drops second-moment storage to ~(rows+cols) and bf16 momentum halves the
+first moment: the dry-run memory_analysis for deepseek-v3/jamba train only
+closes with this optimizer (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import global_norm
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    lr: Union[float, Callable] = 1e-3
+    b1: float = 0.9              # bf16 momentum (0 disables)
+    decay: float = 0.99          # second-moment decay
+    eps: float = 1e-30
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+    def _factored(self, shape):
+        return len(shape) >= 2
+
+    def init(self, params):
+        def leaf(p):
+            st = {}
+            if self.b1:
+                st["m"] = jnp.zeros(p.shape, jnp.bfloat16)
+            if self._factored(p.shape):
+                st["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)
+                st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            else:
+                st["v"] = jnp.zeros(p.shape, jnp.float32)
+            return st
+        return {"s": jax.tree.map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9)) \
+            if self.clip_norm else 1.0
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        d = self.decay
+
+        def leaf(g, st, p):
+            g = g.astype(jnp.float32) * scale
+            new = {}
+            if self._factored(g.shape):
+                vr = d * st["vr"] + (1 - d) * jnp.mean(jnp.square(g), -1)
+                vc = d * st["vc"] + (1 - d) * jnp.mean(jnp.square(g), -2)
+                new["vr"], new["vc"] = vr, vc
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, -1, keepdims=True)[..., None],
+                                  self.eps) + self.eps)
+            else:
+                v = d * st["v"] + (1 - d) * jnp.square(g)
+                new["v"] = v
+                denom = jnp.sqrt(v + self.eps)
+            u = g / denom
+            if self.b1:
+                m = self.b1 * st["m"].astype(jnp.float32) + (1 - self.b1) * u
+                new["m"] = m.astype(jnp.bfloat16)
+                u = m
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["s"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return updates, {"s": new_s, "step": step}, gn

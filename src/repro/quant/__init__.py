@@ -1,0 +1,5 @@
+from repro.quant.int4 import (dequantize_int4, pack_int4, quantize_int4,
+                              quantize_tree, unpack_int4)
+
+__all__ = ["dequantize_int4", "pack_int4", "quantize_int4", "quantize_tree",
+           "unpack_int4"]

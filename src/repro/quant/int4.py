@@ -1,0 +1,84 @@
+"""Groupwise symmetric INT4 quantization (paper §3.4 / W4 weights).
+
+Layout for a weight W (K, N):
+  * groups of G=128 along the contraction dim K;
+  * scales: (K//G, N) float32 with s = max|w_group| / 7;
+  * values: q = clip(round(w / s), -8, 7), two nibbles packed per uint8
+    along *column pairs* -> packed (K, N//2): column 2j in the low nibble,
+    column 2j+1 in the high nibble.
+
+Column-pair packing keeps the contraction dim unpacked so the Pallas
+kernel can K-block freely, and the in-register unpack is a minor-dim
+interleave (stack + reshape) that lowers cleanly to TPU vector ops.  The
+kernel (kernels/int4_matmul.py) consumes exactly this layout and fuses
+dequantization into the MXU matmul — INT4 bytes are what cross HBM->VMEM,
+the TPU rendering of the paper's "no dequantization pass".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GROUP = 128
+
+
+def quantize_int4(w, group: int = GROUP):
+    """w (K, N) -> (packed (K, N//2) uint8, scales (K//group, N) f32)."""
+    K, N = w.shape
+    assert K % group == 0 and N % 2 == 0, (K, N, group)
+    wg = w.astype(jnp.float32).reshape(K // group, group, N)
+    scale = jnp.max(jnp.abs(wg), axis=1) / 7.0            # (K//group, N)
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(wg / scale[:, None, :]).astype(jnp.int32)
+    q = jnp.clip(q, -8, 7).reshape(K, N)
+    return pack_int4(q), scale
+
+
+def pack_int4(q):
+    """int values in [-8, 7], shape (K, N) -> uint8 (K, N//2)."""
+    qu = (q + 8).astype(jnp.uint8)                        # [0, 15]
+    lo = qu[:, 0::2]
+    hi = qu[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed):
+    """uint8 (K, N//2) -> int32 (K, N) in [-8, 7]."""
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32) - 8
+    K, N2 = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(K, N2 * 2)
+
+
+def dequantize_int4(packed, scale, dtype=jnp.bfloat16, group: int = GROUP):
+    """Inverse of quantize_int4 -> (K, N) dtype."""
+    q = unpack_int4(packed)                               # (K, N)
+    K, N = q.shape
+    w = q.reshape(K // group, group, N).astype(jnp.float32) \
+        * scale[:, None, :]
+    return w.reshape(K, N).astype(dtype)
+
+
+def quantize_tree(params, min_size: int = 1 << 16, group: int = GROUP):
+    """Quantize every 2-D leaf with K divisible by group and >= min_size
+    elements; returns (qtree with {packed, scale} dicts, set of paths)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    quantized = set()
+
+    def path_str(path):
+        return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+
+    leaves = []
+    for path, leaf in flat:
+        ps = path_str(path)
+        if (hasattr(leaf, "ndim") and leaf.ndim == 2 and
+                leaf.shape[0] % group == 0 and leaf.shape[1] % 2 == 0 and
+                leaf.size >= min_size):
+            packed, scale = quantize_int4(leaf, group)
+            leaves.append({"packed": packed, "scale": scale})
+            quantized.add(ps)
+        else:
+            leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves), quantized

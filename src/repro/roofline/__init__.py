@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (HW, analyze_hlo, roofline_report,
+                                     model_flops)
+
+__all__ = ["HW", "analyze_hlo", "roofline_report", "model_flops"]

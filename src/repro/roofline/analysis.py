@@ -1,0 +1,424 @@
+"""Static roofline analysis from compiled (post-SPMD) HLO text.
+
+Why text parsing: ``compiled.cost_analysis()`` visits every instruction
+*once* — a scanned 61-layer body is counted as one layer (verified
+empirically).  We therefore parse the per-device HLO module, build the
+computation call graph, recover `while` trip counts (from the
+``known_trip_count`` backend config, falling back to the condition
+computation's compare constant), and accumulate:
+
+  * FLOPs: dot/convolution ops (2 * out_elems * contraction_elems) — the
+    dominant term for transformer workloads;
+  * HBM bytes: per top-level instruction, operand + output bytes (fusion
+    internals excluded: a fusion reads its operands and writes its output
+    once — exactly the HBM-traffic model);
+  * collective link bytes per device, by kind, with ring-model factors.
+
+Shapes in post-SPMD HLO are already per-device, so every figure is
+per-chip.  Hardware model: TPU v5e-like (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, ~25 GB/s DCN for pod-spanning groups).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+
+@dataclass
+class HW:
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s
+    ici_bw: float = 50e9              # bytes/s per link (1-link model)
+    dcn_bw: float = 25e9              # pod-spanning groups
+    chips_per_pod: int = 256
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes_elems(shape_str: str):
+    """'bf16[2,16,128]{1,0}' -> (bytes, elems, first-array dims).
+    Tuple shapes are summed."""
+    total_b, total_e = 0, 0
+    dims_first = None
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in dims_s.split(",") if x] if dims_s else []
+        e = 1
+        for d in dims:
+            e *= d
+        total_b += e * DTYPE_BYTES[dt]
+        total_e += e
+        if dims_first is None:
+            dims_first = dims
+    return total_b, total_e, (dims_first or [])
+
+
+_REPL_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_REPL_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_TRAFFIC = ("parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "call", "conditional", "after-all",
+                 "custom-call")
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    args: str          # operand list text (inside parens, unbalanced tail ok)
+    rest: str          # everything after '=' (for attribute regexes)
+
+
+@dataclass
+class Computation:
+    name: str
+    entry: bool = False
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)
+
+
+def _split_instr(line: str):
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    if not line.startswith("%"):
+        return None
+    eq = line.find(" = ")
+    if eq < 0:
+        return None
+    name = line[:eq].strip().lstrip("%")
+    rhs = line[eq + 3:]
+    if rhs.startswith("("):
+        depth = 0
+        i = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        shape = rhs[:i + 1]
+        rest = rhs[i + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape = rhs[:sp]
+        rest = rhs[sp + 1:].strip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    op = rest[:par].strip()
+    args = rest[par + 1:]
+    return name, shape, op, args, rest
+
+
+def parse_hlo(text: str) -> dict:
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            if (s.startswith("%") or s.startswith("ENTRY")) and s.endswith("{"):
+                entry = s.startswith("ENTRY")
+                name = s.split()[1 if entry else 0].split("(")[0].lstrip("%")
+                if not name:
+                    name = s.split()[1].lstrip("%").split("(")[0]
+                cur = Computation(name=name, entry=entry)
+                comps[name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        parsed = _split_instr(line)
+        if parsed:
+            nm, shape, op, args, rest = parsed
+            ins = Instr(nm, shape, op, args, rest)
+            cur.instrs.append(ins)
+            cur.shapes[nm] = shape
+    return comps
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    m = _REPL_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _REPL_BRACE_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _collective_bytes(op: str, out_bytes: int, p: int) -> float:
+    if p <= 1:
+        return 0.0
+    if op == "all-gather":
+        return out_bytes * (p - 1) / p
+    if op == "all-reduce":
+        return 2.0 * out_bytes * (p - 1) / p
+    if op == "reduce-scatter":
+        return out_bytes * (p - 1)
+    if op == "all-to-all":
+        return out_bytes * (p - 1) / p
+    if op == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    _, out_e, _ = _shape_bytes_elems(ins.shape)
+    first_op = _OPERAND_RE.search(ins.args)
+    lhs_shape = comp.shapes.get(first_op.group(1), "") if first_op else ""
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    _, _, lhs_dims = _shape_bytes_elems(lhs_shape)
+    contract = 1
+    if m and lhs_dims:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    return 2.0 * out_e * contract
+
+
+def _fusion_root(ins: Instr, comps: dict):
+    m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+    if m and m.group(1) in comps:
+        c = comps[m.group(1)]
+        if c.instrs:
+            return c.instrs[-1], c
+    return None, None
+
+
+def _sliced_param_reads(fused: Computation) -> dict:
+    """parameter index -> bytes actually read, for fusion parameters whose
+    only uses are dynamic-slice ops (XLA reads the slice region, not the
+    whole — scanning stacked weights would otherwise count 80x)."""
+    pidx = {}
+    for ins in fused.instrs:
+        if ins.op == "parameter":
+            m = re.search(r"^\s*(\d+)", ins.args)
+            if m:
+                pidx[ins.name] = int(m.group(1))
+    uses = {name: [] for name in pidx}
+    for ins in fused.instrs:
+        for opname in _OPERAND_RE.findall(ins.args):
+            if opname in uses:
+                uses[opname].append(ins)
+    out = {}
+    for name, idx in pidx.items():
+        us = uses[name]
+        if us and all(u.op == "dynamic-slice" for u in us):
+            out[idx] = sum(_shape_bytes_elems(u.shape)[0] for u in us)
+    return out
+
+
+def _instr_traffic(ins: Instr, comp: Computation, comps: dict,
+                   skip=frozenset()) -> float:
+    """HBM bytes for one top-level instruction.
+
+    Corrections to the naive operand+output model (each was an order-of-
+    magnitude miscount, found via roofline/profile.py):
+      * in-place updates (dynamic-update-slice / scatter, incl. fusions
+        rooted in one) alias the big operand: traffic = small operands +
+        update-sized write;
+      * fusion parameters consumed only through dynamic-slice read the
+        slice region, not the full (stacked) array."""
+    out_bytes, _, _ = _shape_bytes_elems(ins.shape)
+    operand_sizes = []
+    for opname in _OPERAND_RE.findall(ins.args):
+        if opname in comp.shapes:
+            b = 0 if opname in skip else \
+                _shape_bytes_elems(comp.shapes[opname])[0]
+            operand_sizes.append(b)
+    op = ins.op
+    root_op = op
+    fused = None
+    if op == "fusion":
+        root, fused = _fusion_root(ins, comps)
+        if root is not None:
+            root_op = root.op
+    if op == "dynamic-slice" and operand_sizes:
+        return out_bytes * 2.0
+    if fused is not None:
+        sliced = _sliced_param_reads(fused)
+        for idx, rd in sliced.items():
+            if idx < len(operand_sizes):
+                operand_sizes[idx] = min(operand_sizes[idx], rd)
+    if root_op in ("dynamic-update-slice", "scatter") and operand_sizes:
+        big = max(operand_sizes)
+        rest = sum(operand_sizes) - big
+        return 2.0 * rest + max(0, out_bytes - big)
+    return out_bytes + sum(operand_sizes)
+
+
+def _cond_trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"^\s*(-?\d+)", ins.args)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def f32_shadow_bytes(text: str) -> int:
+    """Total bytes of f32 buffers produced by bf16->f32 `convert` ops.
+
+    XLA:CPU has no native bf16 dot: it materializes f32 copies of bf16
+    operands and hoists loop-invariant ones out of while loops (it also
+    strips optimization barriers, so this can't be prevented at HLO
+    level).  On TPU these converts don't exist — the MXU consumes bf16
+    directly — so this figure is subtracted to produce the TPU-adjusted
+    memory estimate reported next to the raw CPU one.
+    """
+    comps = parse_hlo(text)
+    total = 0
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op != "convert" or not ins.shape.startswith("f32"):
+                continue
+            src = _OPERAND_RE.search(ins.args)
+            if not src:
+                continue
+            src_shape = c.shapes.get(src.group(1), "")
+            if src_shape.startswith("bf16"):
+                b, _, _ = _shape_bytes_elems(ins.shape)
+                total += b
+    return total
+
+
+def analyze_hlo(text: str, total_devices: int, hw: HW = HW()) -> dict:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    acc = {"flops": 0.0, "hbm_bytes": 0.0, "cast_bytes": 0.0,
+           "ici_bytes": 0.0, "dcn_bytes": 0.0, "coll_count": 0.0}
+
+    def visit(comp: Computation, mult: float, depth=0):
+        if depth > 64:
+            return
+        # values produced inside a `vreg_fused_*` scope never hit HBM: they
+        # model the Pallas kernels (kernels/) that unpack/scale INT4 in
+        # VREGs — only the packed operands cross HBM.  Consumers of these
+        # values skip the corresponding operand bytes.
+        vreg_names = {ins.name for ins in comp.instrs
+                      if "vreg_fused" in ins.rest}
+        for ins in comp.instrs:
+            op = ins.op
+            if op.endswith("-start"):
+                op = op[:-6]
+            if op.endswith("-done"):
+                continue
+            out_bytes, out_elems, _ = _shape_bytes_elems(ins.shape)
+            if op in COLLECTIVES:
+                p = _group_size(ins.rest, total_devices)
+                link = _collective_bytes(op, out_bytes, p)
+                spans_pod = p > hw.chips_per_pod
+                key = "dcn_bytes" if spans_pod else "ici_bytes"
+                acc[key] += mult * link
+                acc["coll_" + op] = acc.get("coll_" + op, 0.0) + mult * link
+                acc["coll_count"] += mult
+            if op == "dot":
+                acc["flops"] += mult * _dot_flops(ins, comp)
+            elif op == "convolution":
+                first = _OPERAND_RE.findall(ins.args)
+                ker = comp.shapes.get(first[1], "") if len(first) > 1 else ""
+                _, ker_e, ker_dims = _shape_bytes_elems(ker)
+                ch_out = ker_dims[-1] if ker_dims else 1
+                acc["flops"] += mult * 2.0 * out_elems * max(
+                    1, ker_e // max(1, ch_out))
+            if ins.op not in _SKIP_TRAFFIC:
+                if "vreg_fused" in ins.rest:
+                    # only the packed/scale operands are HBM reads
+                    rd = 0
+                    for opname in _OPERAND_RE.findall(ins.args):
+                        if opname in comp.shapes and opname not in vreg_names:
+                            rd += _shape_bytes_elems(comp.shapes[opname])[0]
+                    acc["hbm_bytes"] += mult * rd
+                    continue
+                traffic = mult * _instr_traffic(ins, comp, comps,
+                                                skip=vreg_names)
+                root_op = op
+                if ins.op == "fusion":
+                    root, _ = _fusion_root(ins, comps)
+                    if root is not None:
+                        root_op = root.op
+                if root_op == "convert":
+                    # bf16<->f32 casts: XLA:CPU artifacts (no native bf16
+                    # dot); the MXU consumes bf16 directly -> separate
+                    # bucket, excluded from the TPU memory term.
+                    acc["cast_bytes"] += traffic
+                else:
+                    acc["hbm_bytes"] += traffic
+            # ---- recursion ----
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                elif mc and mc.group(1) in comps:
+                    trips = _cond_trip_count(comps[mc.group(1)])
+                else:
+                    trips = 1
+                if mb and mb.group(1) in comps:
+                    visit(comps[mb.group(1)], mult * trips, depth + 1)
+            elif ins.op == "call":
+                m = re.search(r"to_apply=%?([\w\.\-]+)", ins.rest)
+                if m and m.group(1) in comps:
+                    visit(comps[m.group(1)], mult, depth + 1)
+            elif ins.op == "conditional":
+                for b in re.findall(
+                        r"(?:branch_computations=\{|true_computation=|"
+                        r"false_computation=)([^,}]+)", ins.rest):
+                    for name in b.split(","):
+                        name = name.strip().lstrip("%")
+                        if name in comps:
+                            visit(comps[name], mult, depth + 1)
+
+    visit(entry, 1.0)
+    return acc
+
+
+def roofline_report(acc: dict, hw: HW = HW()) -> dict:
+    t_comp = acc["flops"] / hw.peak_flops
+    t_mem = acc["hbm_bytes"] / hw.hbm_bw
+    t_coll = acc["ici_bytes"] / hw.ici_bw + acc["dcn_bytes"] / hw.dcn_bw
+    bound = max(("compute", t_comp), ("memory", t_mem),
+                ("collective", t_coll), key=lambda kv: kv[1])
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_memory_cpu_cast_s": acc.get("cast_bytes", 0.0) / hw.hbm_bw,
+        "t_collective_s": t_coll,
+        "bottleneck": bound[0],
+        "t_bound_s": bound[1],
+        **acc,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D (train), 2·N_active·D (prefill),
+    2·N_active·b (decode step) — whole-job figures (all chips)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,89 @@
+"""Per-op HBM/FLOP profile from compiled HLO — the dry-run 'profiler' the
+§Perf hypothesis loop reads (no wall clocks on this container).
+
+Aggregates bytes/flops per (op kind, shape) with while-loop trip-count
+multipliers and attributes them to jax-level op_name metadata, so 'what
+dominates the memory term' is answerable at the granularity of model code.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.roofline.analysis import (_OPERAND_RE, _TRIP_RE, COLLECTIVES,
+                                     _SKIP_TRAFFIC, _cond_trip_count,
+                                     _dot_flops, _fusion_root,
+                                     _instr_traffic, _shape_bytes_elems,
+                                     parse_hlo)
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def profile_hlo(text: str, top: int = 25) -> list[dict]:
+    comps = parse_hlo(text)
+    entry = next(c for c in comps.values() if c.entry)
+    agg = defaultdict(lambda: {"bytes": 0.0, "flops": 0.0, "count": 0.0})
+
+    def visit(comp, mult, depth=0):
+        if depth > 64:
+            return
+        for ins in comp.instrs:
+            op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if op.endswith("-done"):
+                continue
+            out_bytes, out_elems, _ = _shape_bytes_elems(ins.shape)
+            if ins.op not in _SKIP_TRAFFIC:
+                traffic = _instr_traffic(ins, comp, comps)
+                meta = _META_RE.search(ins.rest)
+                tag = meta.group(1) if meta else None
+                disp_op = op
+                if tag is None and ins.op == "fusion":
+                    # name anonymous fusions by their root instruction
+                    root, rc = _fusion_root(ins, comps)
+                    if root is not None:
+                        disp_op = f"fusion:{root.op}"
+                        m2 = _META_RE.search(root.rest)
+                        tag = m2.group(1) if m2 else None
+                        if tag is None and rc is not None:
+                            for sub in reversed(rc.instrs):
+                                m3 = _META_RE.search(sub.rest)
+                                if m3:
+                                    tag = m3.group(1)
+                                    break
+                tag = tag or "(no-meta)"
+                tag = "/".join(tag.split("/")[-4:])[:110]
+                key = (disp_op, tag, ins.shape[:40])
+                agg[key]["bytes"] += mult * traffic
+                agg[key]["count"] += mult
+                if op == "dot":
+                    agg[key]["flops"] += mult * _dot_flops(ins, comp)
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                mt = _TRIP_RE.search(ins.rest)
+                trips = (int(mt.group(1)) if mt else
+                         _cond_trip_count(comps[mc.group(1)])
+                         if mc and mc.group(1) in comps else 1)
+                if mb and mb.group(1) in comps:
+                    visit(comps[mb.group(1)], mult * trips, depth + 1)
+            elif ins.op == "call":
+                m = re.search(r"to_apply=%?([\w\.\-]+)", ins.rest)
+                if m and m.group(1) in comps:
+                    visit(comps[m.group(1)], mult, depth + 1)
+
+    visit(entry, 1.0)
+    rows = [{"op": k[0], "tag": k[1], "shape": k[2], **v}
+            for k, v in agg.items()]
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:top]
+
+
+def print_profile(text: str, top: int = 25):
+    rows = profile_hlo(text, top)
+    total = sum(r["bytes"] for r in profile_hlo(text, 10_000))
+    print(f"{'GB':>9} {'%':>5} {'x':>7}  op | shape | jax op_name")
+    for r in rows:
+        print(f"{r['bytes']/1e9:9.2f} {100*r['bytes']/total:5.1f} "
+              f"{r['count']:7.0f}  {r['op']:28s} {r['shape']:36s} {r['tag']}")
+    print(f"{total/1e9:9.2f} total GB")
+    return rows

@@ -1,0 +1,7 @@
+from repro.runtime.compression import (compress_int8, decompress_int8,
+                                       ErrorFeedbackCompressor)
+from repro.runtime.fault_tolerance import (StragglerDetector, TrainRunner,
+                                           RunnerConfig)
+
+__all__ = ["compress_int8", "decompress_int8", "ErrorFeedbackCompressor",
+           "StragglerDetector", "TrainRunner", "RunnerConfig"]

@@ -1,0 +1,55 @@
+"""Gradient compression for the cross-pod (DCN) data-parallel reduction.
+
+int8 quantization with error feedback (Seide et al. / 1-bit-Adam lineage):
+the residual of each round is added back before the next quantization, so
+the long-run bias vanishes — convergence is preserved while the pod axis
+all-reduce moves 4x fewer bytes over the slow DCN links.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x):
+    """x (any shape) -> (int8 values, f32 scale).  Symmetric per-tensor."""
+    m = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(m / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decompress_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+class ErrorFeedbackCompressor:
+    """Stateful per-leaf error feedback around compress/decompress.
+
+    usage per step (pure-functional):
+        comp, residuals = ef.compress(grads, residuals)
+        # all-reduce comp over the pod axis (int8) ...
+        grads = ef.decompress(comp)
+    """
+
+    def init(self, grads: Any):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def compress(self, grads: Any, residuals: Any):
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            q, s = compress_int8(x)
+            err = x - decompress_int8(q, s)
+            return (q, s), err
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(residuals)
+        pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        comp = treedef.unflatten([p[0] for p in pairs])
+        new_r = treedef.unflatten([p[1] for p in pairs])
+        return comp, new_r
+
+    def decompress(self, comp: Any, dtype=jnp.float32):
+        return jax.tree.map(lambda qs: decompress_int8(*qs, dtype=dtype),
+                            comp, is_leaf=lambda x: isinstance(x, tuple))

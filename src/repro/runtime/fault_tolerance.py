@@ -1,0 +1,133 @@
+"""Fault-tolerant training runner: checkpoint/restart, failure injection,
+straggler detection, elastic resume.
+
+At 1000+ nodes the dominant failure mode is a host dying mid-step; the
+contract here:
+  * state = (params, opt, step) only — the data pipeline is step-indexed
+    (data/pipeline.py), so resume needs NO iterator state;
+  * async checkpoint every ``ckpt_every`` steps, atomic rename (a crash
+    during save leaves the previous checkpoint intact);
+  * on restart, `TrainRunner.run` restores the latest step and continues —
+    in tests a ``FailureInjector`` kills the loop mid-run and a fresh
+    runner reproduces the uninterrupted loss trajectory exactly;
+  * ``StragglerDetector`` keeps per-step wall times; on a real pod each
+    host contributes its time via an all_gather and slow hosts (z-score
+    or x-median rule) are reported to the scheduler for eviction /
+    re-sharding — here the detection logic is exercised with injected
+    delays;
+  * elastic: restore accepts a different mesh (checkpoint stores logical
+    arrays; shardings are re-applied), so shrink/grow = rebuild Dist +
+    restore.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint)
+
+
+class FailureInjector(Exception):
+    """Raised inside the loop to simulate a host loss."""
+
+
+@dataclass
+class RunnerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 10
+    keep: int = 3
+    max_steps: int = 100
+
+
+class StragglerDetector:
+    """Per-step wall-time ring buffer + robust outlier rule.
+
+    multi-host: feed ``observe`` with the all-gathered per-host step
+    times; ``stragglers`` returns host indices slower than
+    ``factor`` x median (the standard eviction trigger).
+    """
+
+    def __init__(self, window: int = 32, factor: float = 2.0):
+        self.window = window
+        self.factor = factor
+        self.times: deque = deque(maxlen=window)
+
+    def observe(self, per_host_seconds):
+        self.times.append(np.asarray(per_host_seconds, np.float64))
+
+    def stragglers(self) -> list[int]:
+        if not self.times:
+            return []
+        avg = np.mean(np.stack(self.times), axis=0)
+        med = np.median(avg)
+        return [int(i) for i in np.nonzero(avg > self.factor * med)[0]]
+
+    def step_stats(self) -> dict:
+        if not self.times:
+            return {}
+        t = np.stack(self.times)
+        return {"mean_s": float(t.mean()), "p50_s": float(np.median(t)),
+                "max_s": float(t.max())}
+
+
+class TrainRunner:
+    """Drives step_fn with checkpoint/restart.
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+
+    def __init__(self, cfg: RunnerConfig, step_fn: Callable,
+                 init_state: Callable[[], tuple], data,
+                 shardings: Optional[tuple] = None,
+                 fail_at: Optional[int] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.init_state = init_state
+        self.data = data
+        self.shardings = shardings
+        self.fail_at = fail_at
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.detector = StragglerDetector()
+        self.history: list[float] = []
+
+    def _restore_or_init(self):
+        last = latest_step(self.cfg.ckpt_dir)
+        params, opt_state = self.init_state()
+        if last is None:
+            return params, opt_state, 0
+        tree = {"params": params, "opt": opt_state}
+        sh = None
+        if self.shardings is not None:
+            sh = {"params": self.shardings[0], "opt": self.shardings[1]}
+        restored, manifest = restore_checkpoint(
+            self.cfg.ckpt_dir, last, tree, shardings=sh)
+        return restored["params"], restored["opt"], int(manifest["step"])
+
+    def run(self) -> dict:
+        params, opt_state, start = self._restore_or_init()
+        step = start
+        while step < self.cfg.max_steps:
+            batch = self.data.batch_at(step)
+            t0 = time.perf_counter()
+            if self.fail_at is not None and step == self.fail_at:
+                raise FailureInjector(f"injected failure at step {step}")
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state,
+                {k: v for k, v in batch.items() if k != "step"})
+            loss = float(metrics["loss"])
+            self.history.append(loss)
+            dt = time.perf_counter() - t0
+            self.detector.observe([dt])
+            step += 1
+            if step % self.cfg.ckpt_every == 0 or step == self.cfg.max_steps:
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               meta={"loss": loss})
+        self.ckpt.wait()
+        return {"final_step": step, "losses": self.history,
+                "timing": self.detector.step_stats()}

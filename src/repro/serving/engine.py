@@ -1,0 +1,186 @@
+"""Continuous-batching serving engine with PIPO-style KV host offload.
+
+Slot-based continuous batching over a fixed decode batch (b_max):
+  * requests queue in; a free slot triggers a b=1 prefill whose KV rows are
+    scattered into the slot of the shared decode cache;
+  * each engine step decodes ALL active slots with *ragged* per-slot
+    positions (one jitted decode for the whole batch);
+  * completed slots are freed immediately (no padding to the slowest
+    request);
+  * preempted/finished slots can spill their KV rows to the HostStore and
+    restore on resume (``offload_slot``/``restore_slot``) — the PIPO
+    KV-save/KV-load tasks at serving granularity.
+
+The engine is single-device (the paper's setting); the pod-scale decode
+path lives in launch/ + models (sharded caches).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.offload import HostStore
+from repro.models import Dist, build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (s,) int32
+    max_new: int = 32
+    eos_id: int = -1                   # -1: never stops early
+    # filled by the engine
+    out: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, *, b_max: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.b_max = b_max
+        self.max_len = max_len
+        self.dist = Dist.local()
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
+        self.caches = self.model.init_cache(b_max, max_len)
+        self.host = HostStore()
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * b_max
+        self.pos = np.zeros(b_max, np.int32)           # next write position
+        self.tokens = np.zeros(b_max, np.int32)        # last emitted token
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
+        self._jit()
+
+    def _jit(self):
+        m, dist = self.model, self.dist
+
+        def decode(params, tok, pos, caches):
+            return m.decode_step(params, {"token": tok, "pos": pos}, caches,
+                                 dist)
+        self._decode = jax.jit(decode, donate_argnums=(3,))
+
+        def prefill1(params, toks, cache_len):
+            return m.prefill(params, {"tokens": toks}, dist, cache_len)
+        self._prefill = jax.jit(prefill1, static_argnums=(2,))
+
+    # ---- public API ---------------------------------------------------------
+    def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self._admit()
+            self._decode_step(done)
+        return done
+
+    # ---- internals ----------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            s = len(req.prompt)
+            nt, cache1 = self._prefill(self.params,
+                                       jnp.asarray(req.prompt)[None],
+                                       self.max_len)
+            self.stats["prefills"] += 1
+            # scatter the b=1 cache rows into the slot (KV "admission")
+            self.caches = self._map_slot(
+                self.caches, cache1,
+                lambda big, one, idx: big.at[idx].set(one.astype(big.dtype)),
+                slot)
+            tok = int(np.asarray(nt)[0])
+            req.out.append(tok)
+            req.t_first = time.perf_counter()
+            self.slots[slot] = req
+            self.pos[slot] = s
+            self.tokens[slot] = tok
+            self.stats["tokens_out"] += 1
+
+    @staticmethod
+    def _batch_axis(path) -> int:
+        """Cache leaves under 'pat' are stacked (periods, b, ...); under
+        'rem' they are (b, ...)."""
+        head = str(getattr(path[0], "key", getattr(path[0], "idx", path[0])))
+        return 1 if head == "pat" else 0
+
+    def _map_slot(self, big_tree, one_tree, fn, slot):
+        flat_big, treedef = jax.tree_util.tree_flatten_with_path(big_tree)
+        flat_one = treedef.flatten_up_to(one_tree) if one_tree is not None \
+            else [None] * len(flat_big)
+        out = []
+        for (path, big), one in zip(flat_big, flat_one):
+            ax = self._batch_axis(path)
+            idx = [slice(None)] * big.ndim
+            idx[ax] = slice(slot, slot + 1)
+            out.append(fn(big, one, tuple(idx)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _decode_step(self, done: List[Request]):
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        tok = jnp.asarray(self.tokens)[:, None]
+        pos = jnp.asarray(self.pos)
+        nt, self.caches = self._decode(self.params, tok, pos, self.caches)
+        self.stats["decode_steps"] += 1
+        nt = np.asarray(nt)
+        for i in active:
+            req = self.slots[i]
+            req.out.append(int(nt[i]))
+            self.stats["tokens_out"] += 1
+            self.pos[i] += 1
+            self.tokens[i] = int(nt[i])
+            if (len(req.out) >= req.max_new
+                    or int(nt[i]) == req.eos_id
+                    or self.pos[i] >= self.max_len - 1):
+                req.t_done = time.perf_counter()
+                done.append(req)
+                self.offload_slot(i)
+                self.slots[i] = None
+                self.pos[i] = 0
+
+    # ---- PIPO KV offload at slot granularity --------------------------------
+    def offload_slot(self, slot: int):
+        """KV-save: spill a slot's cache rows to host memory (freeing the
+        device rows for reuse; the PIPO KV-save task at request scope)."""
+        rid = self.slots[slot].rid if self.slots[slot] else slot
+        flat_big, _ = jax.tree_util.tree_flatten_with_path(self.caches)
+        for i, (path, leaf) in enumerate(flat_big):
+            ax = self._batch_axis(path)
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slot
+            self.host.put(f"slot{rid}/{i}", np.asarray(leaf[tuple(idx)]))
+
+    def restore_slot(self, slot: int, rid: int):
+        """KV-load: bring an offloaded request's rows back into a slot."""
+        flat_big, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
+        out = []
+        for i, (path, leaf) in enumerate(flat_big):
+            ax = self._batch_axis(path)
+            row = jnp.asarray(self.host.get(f"slot{rid}/{i}"))
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slot
+            out.append(leaf.at[tuple(idx)].set(row.astype(leaf.dtype)))
+        self.caches = jax.tree_util.tree_unflatten(
+            treedef, out)

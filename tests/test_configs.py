@@ -1,0 +1,61 @@
+"""Config registry: assigned numbers, parameter counts, cell accounting."""
+import pytest
+
+from repro.configs import ASSIGNED, all_cells, get_config, list_archs
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab, ~params B, ~active B)
+    "granite-8b": (36, 4096, 32, 8, 14336, 49152, 8.0, 8.0),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000, 1.1, 1.1),
+    "gemma3-4b": (34, 2560, 8, 4, 10240, 262144, 3.9, 3.9),
+    "qwen3-8b": (36, 4096, 32, 8, 12288, 151936, 8.2, 8.2),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064, 72.7, 72.7),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536, 398, 93),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048, 108, 17.2),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280, 704, 37.6),
+    "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280, 1.34, 1.34),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865, 0.11, 0.11),
+}
+
+
+def test_ten_archs_assigned():
+    assert len(list_archs()) == 10
+    assert set(list_archs()) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_assigned_numbers(arch):
+    L, d, h, kv, ff, V, pb, ab = EXPECTED[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L and cfg.d_model == d
+    assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == V
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_param_counts(arch):
+    _, _, _, _, _, _, pb, ab = EXPECTED[arch]
+    cfg = get_config(arch)
+    total = cfg.param_count() / 1e9
+    active = cfg.param_count(active_only=True) / 1e9
+    assert abs(total - pb) / pb < 0.12, (arch, total)
+    assert abs(active - ab) / ab < 0.12, (arch, active)
+
+
+def test_cell_accounting():
+    cells = all_cells()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    skipped = [c for c in cells if not c[2]]
+    assert len(runnable) == 33 and len(skipped) == 7
+    long_ok = {a for a, s, ok, _ in cells if s == "long_500k" and ok}
+    assert long_ok == {"mamba2-1.3b", "jamba-1.5-large-398b", "gemma3-4b"}
+    for _, _, ok, why in skipped:
+        assert "full-attention" in why
+
+
+def test_pattern_consistency():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        total = len(cfg.pattern) * cfg.num_periods + len(cfg.remainder)
+        assert total == cfg.num_layers, arch

@@ -1,0 +1,73 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.ref import (decode_attention_ref, flash_attention_ref,
+                               int4_matmul_ref)
+from repro.quant.int4 import quantize_int4
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 128), (8, 128, 256),
+                                   (256, 512, 128), (64, 384, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int4_matmul_sweep(M, K, N, dtype):
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (M, K), dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (K, N),
+                          jnp.float32) * 0.1
+    packed, scale = quantize_int4(w)
+    ref = int4_matmul_ref(x, packed, scale)
+    out = int4_matmul(x, packed, scale, block_m=min(128, M),
+                      block_n=min(128, N), interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol,
+                               atol=tol * np.abs(np.asarray(ref)).max())
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("window", [0, 13])
+@pytest.mark.parametrize("blocks", [(16, 16), (32, 64), (64, 32)])
+def test_flash_attention_sweep(h, hkv, window, blocks):
+    bq, bk = blocks
+    b, s, dh = 2, 64, 16
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h, dh))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, hkv, dh))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    b, s, h, hkv, dh = 1, 64, 4, 2, 32
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h, dh), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, dh), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, hkv, dh), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("pos", [0, 63, 127])
+@pytest.mark.parametrize("block_s", [32, 128])
+@pytest.mark.parametrize("h,hkv", [(8, 2), (4, 4)])
+def test_decode_kernel_sweep(pos, block_s, h, hkv):
+    b, S, dh = 2, 128, 16
+    q = jax.random.normal(jax.random.fold_in(KEY, 5), (b, h, dh))
+    kc = jax.random.normal(jax.random.fold_in(KEY, 6), (b, S, hkv, dh))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 7), (b, S, hkv, dh))
+    out = decode_attention_kernel(q, kc, vc, pos, block_s=block_s,
+                                  interpret=True)
+    ref = decode_attention_ref(q[:, None], kc, vc, pos)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,156 @@
+"""PIPO pipeline scheduler: ordering invariants (Algorithm 1) via a mock
+model that logs every event with timestamps."""
+import threading
+import time
+
+import pytest
+
+from repro.core.pipeline import PipelineScheduler
+from repro.core.tasks import Trace
+
+
+class MockModel:
+    """Layer stack [mha, mlp] * n with tunable per-task latencies; records
+    (event, i, j, t) tuples."""
+
+    def __init__(self, n_layers=3, t_load=0.02, t_compute=0.01, t_kv=0.005):
+        self.n = 2 * n_layers
+        self.t_load, self.t_compute, self.t_kv = t_load, t_compute, t_kv
+        self.events = []
+        self._lock = threading.Lock()
+
+    def _log(self, ev, i, j):
+        with self._lock:
+            self.events.append((ev, i, j, time.perf_counter()))
+
+    def is_mha(self, j):
+        return j % 2 == 0
+
+    def load_weights(self, j):
+        time.sleep(self.t_load)
+        self._log("w_done", -1, j)
+        return f"w{j}"
+
+    def release_weights(self, j, h):
+        self._log("w_release", -1, j)
+
+    def load_kv(self, i, j):
+        time.sleep(self.t_kv)
+        self._log("kv_load_done", i, j)
+        return f"kv{i},{j}"
+
+    def save_kv(self, i, j, kv):
+        time.sleep(self.t_kv)
+        self._log("kv_save_done", i, j)
+
+    def compute(self, i, j, x, w, kv):
+        assert w == f"w{j}", (w, j)
+        if self.is_mha(j):
+            assert kv == f"kv{i},{j}"
+        self._log("compute_start", i, j)
+        time.sleep(self.t_compute)
+        self._log("compute_end", i, j)
+        return x + 1, ("new_kv" if self.is_mha(j) else None)
+
+    def finalize(self, i, x):
+        return x
+
+
+@pytest.mark.parametrize("mode", ["performance", "memory", "sequential"])
+def test_all_tasks_execute_in_every_mode(mode):
+    model = MockModel(n_layers=3)
+    sched = PipelineScheduler(model.n, mode)
+    outs = sched.generate(model, lambda i: 0, num_iterations=3)
+    sched.shutdown()
+    assert outs == [model.n, model.n, model.n]  # x incremented per layer
+    ev = [(e, i, j) for e, i, j, _ in model.events]
+    for i in range(3):
+        for j in range(model.n):
+            assert ("compute_start", i, j) in ev
+            if model.is_mha(j):
+                assert ("kv_load_done", i, j) in ev
+                assert ("kv_save_done", i, j) in ev
+
+
+def test_load_completes_before_compute():
+    model = MockModel()
+    sched = PipelineScheduler(model.n, "performance")
+    sched.generate(model, lambda i: 0, num_iterations=2)
+    sched.shutdown()
+    # ordered scan: a layer's weights must be loaded (and not yet released)
+    # when its compute starts.  Events from pool threads may interleave but
+    # each (load -> compute -> release) chain is causally ordered.
+    events = sorted(model.events, key=lambda e: e[3])
+    done_w = set()
+    for e, i, j, ts in events:
+        if e == "w_done":
+            done_w.add(j)
+        if e == "compute_start":
+            assert j in done_w, f"compute {j} before its weight load"
+        if e == "w_release":
+            done_w.discard(j)
+
+
+def test_kv_save_before_next_iteration_load():
+    model = MockModel()
+    sched = PipelineScheduler(model.n, "performance")
+    sched.generate(model, lambda i: 0, num_iterations=3)
+    sched.shutdown()
+    t = {(e, i, j): ts for e, i, j, ts in model.events}
+    for i in range(1, 3):
+        for j in range(model.n):
+            if model.is_mha(j):
+                assert t[("kv_save_done", i - 1, j)] <= \
+                    t[("kv_load_done", i, j)], \
+                    f"kv load ({i},{j}) before save ({i-1},{j}) finished"
+
+
+def test_performance_mode_overlaps_load_with_compute():
+    """In performance mode, some weight load must complete during another
+    layer's compute window (the pipeline's raison d'etre)."""
+    model = MockModel(n_layers=4, t_load=0.02, t_compute=0.02)
+    sched = PipelineScheduler(model.n, "performance")
+    sched.generate(model, lambda i: 0, num_iterations=2)
+    sched.shutdown()
+    starts = {}
+    computes = []
+    for e, i, j, ts in model.events:
+        if e == "compute_start":
+            starts[(i, j)] = ts
+        elif e == "compute_end" and (i, j) in starts:
+            computes.append((starts[(i, j)], ts))
+    loads = [ts for e, i, j, ts in model.events if e == "w_done"]
+    overlapped = sum(1 for ts in loads
+                     if any(s < ts < t for s, t in computes))
+    assert overlapped >= 1, "no load completed inside a compute window"
+
+
+def test_sequential_mode_never_overlaps():
+    model = MockModel(n_layers=3, t_load=0.01, t_compute=0.01)
+    sched = PipelineScheduler(model.n, "sequential")
+    sched.generate(model, lambda i: 0, num_iterations=2)
+    sched.shutdown()
+    # sequential: every event interval is disjoint from compute intervals
+    spans = []
+    start = None
+    for e, i, j, ts in model.events:
+        if e == "compute_start":
+            start = ts
+        elif e == "compute_end":
+            spans.append((start, ts))
+    loads = [ts for e, i, j, ts in model.events if e == "w_done"]
+    overlapped = sum(1 for ts in loads if any(s < ts < t for s, t in spans))
+    assert overlapped == 0
+
+
+def test_busy_fraction_higher_with_pipeline():
+    def run(mode):
+        model = MockModel(n_layers=4, t_load=0.015, t_compute=0.015)
+        trace = Trace()
+        sched = PipelineScheduler(model.n, mode, trace=trace)
+        sched.generate(model, lambda i: 0, num_iterations=3)
+        sched.shutdown()
+        return trace.busy_fraction("compute")
+    busy_seq = run("sequential")
+    busy_perf = run("performance")
+    assert busy_perf > busy_seq

@@ -1,0 +1,124 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.autoconfig import configure
+from repro.core.memory_model import estimate
+from repro.core.offload import MemoryBudget
+from repro.models.common import (empty_partials, finalize_partials,
+                                 merge_partials)
+from repro.models.rope import rope_angles
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax partials: merge is associative + order-independent and
+# finalizing merged partials equals full softmax.
+# ---------------------------------------------------------------------------
+
+def _partials(key, sk, shape=(2, 3)):
+    s = jax.random.normal(key, (*shape, sk))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (sk, 4))
+    m = jnp.max(s, -1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, -1)
+    o = p @ v
+    return (m, l, o), s, v
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(2, 5))
+@settings(max_examples=20, deadline=None)
+def test_merge_partials_equals_full_softmax(seed, n1, n2):
+    key = jax.random.PRNGKey(seed)
+    (pa, sa, va) = _partials(jax.random.fold_in(key, 1), n1)
+    (pb, sb, vb) = _partials(jax.random.fold_in(key, 2), n2)
+    merged = merge_partials(pa, pb)
+    out = finalize_partials(*merged)
+    s = jnp.concatenate([sa, sb], -1)
+    v = jnp.concatenate([va, vb], 0)
+    ref = jax.nn.softmax(s, -1) @ v
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # commutativity
+    out2 = finalize_partials(*merge_partials(pb, pa))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_merge_partials_associative(seed):
+    key = jax.random.PRNGKey(seed)
+    ps = [_partials(jax.random.fold_in(key, i), 3)[0] for i in range(3)]
+    left = merge_partials(merge_partials(ps[0], ps[1]), ps[2])
+    right = merge_partials(ps[0], merge_partials(ps[1], ps[2]))
+    for a, b in zip(left, right):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_merge_with_empty_is_identity():
+    key = jax.random.PRNGKey(0)
+    (p, s, v) = _partials(key, 4)
+    e = empty_partials((2, 3), 4)
+    merged = merge_partials(e, p)
+    np.testing.assert_allclose(np.asarray(finalize_partials(*merged)),
+                               np.asarray(finalize_partials(*p)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Memory model (Appendix B): monotonicity + placement decisions.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 32), st.integers(128, 4096))
+@settings(max_examples=20, deadline=None)
+def test_memory_monotonic_in_batch_and_seq(b, s):
+    cfg = get_config("llama3.1-8b")
+    e1 = estimate(cfg, batch=b, seq=s)
+    e2 = estimate(cfg, batch=b + 1, seq=s)
+    e3 = estimate(cfg, batch=b, seq=s + 128)
+    assert e2.kv_cache > e1.kv_cache and e3.kv_cache > e1.kv_cache
+    assert e2.peak_prefill >= e1.peak_prefill
+    assert e3.peak_prefill >= e1.peak_prefill
+
+
+def test_autoconfig_placements():
+    small = get_config("llama3.2-1b")
+    big = get_config("llama3.1-70b")
+    laptop = MemoryBudget()
+    ac_small = configure(small, batch=1, prompt_len=512, gen_len=32,
+                         budget=laptop)
+    ac_big = configure(big, batch=1, prompt_len=512, gen_len=32,
+                       budget=laptop)
+    assert ac_small.weight_placement == "device"
+    assert ac_big.weight_placement == "disk"   # 140GB > 16GB host
+    ac_8b = configure(get_config("llama3.1-8b"), batch=4, prompt_len=512,
+                      gen_len=32, budget=laptop)
+    assert ac_8b.weight_placement in ("host", "disk")
+    # int4 kernel rule: batch < 16
+    a = configure(small, batch=4, prompt_len=64, gen_len=8, quant="int4")
+    b_ = configure(small, batch=32, prompt_len=64, gen_len=8, quant="int4")
+    assert a.use_int4_kernel and not b_.use_int4_kernel
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_preload_needs_more_memory(b):
+    cfg = get_config("llama3.1-8b")
+    pre = estimate(cfg, batch=b, seq=1024, preload=True)
+    nopre = estimate(cfg, batch=b, seq=1024, preload=False)
+    assert pre.peak_prefill >= nopre.peak_prefill
+    assert pre.peak_decode >= nopre.peak_decode
+
+
+# ---------------------------------------------------------------------------
+# M-RoPE with equal (t,h,w) positions coincides with 1-D RoPE.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_mrope_degenerates_to_rope(seed):
+    pos = jnp.arange(16)
+    a1 = rope_angles(pos, 32, 10000.0)
+    pos3 = jnp.broadcast_to(pos, (3, 16))
+    a2 = rope_angles(pos3, 32, 10000.0, mrope_sections=(6, 5, 5))
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-6)

@@ -1,0 +1,48 @@
+"""INT4 quantization: bijection, error bounds, tree quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.int4 import (dequantize_int4, pack_int4, quantize_int4,
+                              quantize_tree, unpack_int4)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_bijection(kd2, nd2, seed):
+    K, N = 2 * kd2, 2 * nd2
+    q = jax.random.randint(jax.random.PRNGKey(seed), (K, N), -8, 8)
+    assert (unpack_int4(pack_int4(q)) == q).all()
+
+
+def test_quantize_error_bound():
+    w = jax.random.normal(KEY, (512, 64), jnp.float32)
+    packed, scale = quantize_int4(w)
+    deq = dequantize_int4(packed, scale, jnp.float32)
+    # symmetric int4: |err| <= scale/2 per group
+    err = jnp.abs(deq - w)
+    bound = jnp.repeat(scale, 128, axis=0) * 0.5 + 1e-6
+    assert bool((err <= bound).all())
+
+
+def test_quantize_tree_selects_eligible():
+    params = {
+        "big": jnp.ones((256, 512)),
+        "small": jnp.ones((4, 4)),
+        "vec": jnp.ones((256,)),
+        "odd": jnp.ones((100, 64)),  # K not divisible by group
+    }
+    qt, quantized = quantize_tree(params, min_size=1024)
+    assert "big" in quantized and len(quantized) == 1
+    assert set(qt["big"]) == {"packed", "scale"}
+    assert qt["small"].shape == (4, 4)
+
+
+def test_bytes_saved():
+    w = jax.random.normal(KEY, (1024, 256), jnp.float32)
+    packed, scale = quantize_int4(w)
+    ratio = (packed.size + scale.size * 4) / (w.size * 2)  # vs bf16
+    assert ratio < 0.3  # ~4x smaller than bf16

@@ -1,0 +1,206 @@
+"""Data pipeline, checkpointing, fault tolerance, gradient compression,
+serving engine."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.configs import get_config, scaled_down
+from repro.data import DataConfig, DataPipeline, MemmapSource, SyntheticSource
+from repro.models import Dist, build_model
+from repro.optim import AdamW, apply_updates
+from repro.runtime import ErrorFeedbackCompressor, StragglerDetector
+from repro.runtime.fault_tolerance import (FailureInjector, RunnerConfig,
+                                           TrainRunner)
+from repro.serving import Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_host_sharded():
+    cfg = DataConfig(seq_len=16, global_batch=8, vocab_size=100,
+                     host_count=2, host_index=0)
+    p0 = DataPipeline(SyntheticSource(cfg), cfg)
+    b0 = p0.batch_at(5)
+    b0_again = p0.batch_at(5)
+    np.testing.assert_array_equal(b0["tokens"], b0_again["tokens"])
+    cfg1 = DataConfig(seq_len=16, global_batch=8, vocab_size=100,
+                      host_count=2, host_index=1)
+    b1 = DataPipeline(SyntheticSource(cfg1), cfg1).batch_at(5)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])  # disjoint slices
+    assert b0["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+
+
+def test_data_prefetch_thread():
+    cfg = DataConfig(seq_len=8, global_batch=2, vocab_size=50, prefetch=2)
+    p = DataPipeline(SyntheticSource(cfg), cfg).start()
+    batches = [next(p) for _ in range(4)]
+    p.stop()
+    assert [b["step"] for b in batches] == [0, 1, 2, 3]
+
+
+def test_memmap_source(tmp_path):
+    toks = np.arange(10_000, dtype=np.int32) % 777
+    path = str(tmp_path / "corpus.bin")
+    MemmapSource.write_corpus(path, toks)
+    cfg = DataConfig(seq_len=32, global_batch=2, vocab_size=777)
+    src = MemmapSource(cfg, path)
+    a = src.sample(3, 0)
+    b = src.sample(3, 0)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (33,)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    save_checkpoint(str(tmp_path), 7, tree, meta={"note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    restored, manifest = restore_checkpoint(str(tmp_path), 7, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    assert manifest["note"] == "x"
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((4,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 4
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert len(steps) <= 2 and 4 in steps
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: failure injection + resume reproduces the trajectory
+# ---------------------------------------------------------------------------
+
+def _make_training(tmp_path, fail_at=None, max_steps=12):
+    cfg = scaled_down(get_config("tinyllama-1.1b"))
+    m = build_model(cfg)
+    opt = AdamW(lr=1e-3, weight_decay=0.0)
+    dist = Dist.local()
+
+    def init_state():
+        params = m.init(jax.random.PRNGKey(0), jnp.float32)
+        return params, opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: m.train_loss(p, batch, dist))(params)
+        upd, opt_state, _ = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, {"loss": loss}
+
+    dcfg = DataConfig(seq_len=24, global_batch=2, vocab_size=cfg.vocab_size)
+    data = DataPipeline(SyntheticSource(dcfg), dcfg)
+    rcfg = RunnerConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=4,
+                        max_steps=max_steps)
+    return TrainRunner(rcfg, step, init_state, data, fail_at=fail_at)
+
+
+@pytest.mark.slow
+def test_failure_injection_and_resume(tmp_path):
+    # uninterrupted reference run
+    ref = _make_training(tmp_path / "ref").run()
+    # crashed run: dies at step 6 (after the step-4 checkpoint)
+    crashed = _make_training(tmp_path / "crash", fail_at=6)
+    with pytest.raises(FailureInjector):
+        crashed.run()
+    crashed.ckpt.wait()
+    assert latest_step(str((tmp_path / "crash") / "ckpt")) == 4
+    # restart: resumes from step 4, finishes, final losses must match the
+    # uninterrupted run exactly (deterministic data + state-only resume)
+    resumed = _make_training(tmp_path / "crash").run()
+    assert resumed["final_step"] == ref["final_step"]
+    np.testing.assert_allclose(resumed["losses"][-4:], ref["losses"][-4:],
+                               rtol=1e-5)
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=8, factor=2.0)
+    for _ in range(8):
+        det.observe([0.1, 0.1, 0.5, 0.1])   # host 2 is 5x median
+    assert det.stragglers() == [2]
+    stats = det.step_stats()
+    assert stats["max_s"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_unbiased_over_time():
+    ef = ErrorFeedbackCompressor()
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.standard_normal((64,)) * 1e-3)}
+    residual = ef.init(g_true)
+    total_applied = jnp.zeros((64,))
+    for _ in range(50):
+        comp, residual = ef.compress(g_true, residual)
+        total_applied = total_applied + ef.decompress(comp)["w"]
+    # mean applied -> true gradient (error feedback kills the bias)
+    np.testing.assert_allclose(np.asarray(total_applied / 50),
+                               np.asarray(g_true["w"]), atol=1e-6)
+
+
+def test_compression_ratio():
+    from repro.runtime.compression import compress_int8, decompress_int8
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((1024,)))
+    q, s = compress_int8(x)
+    assert q.dtype == jnp.int8
+    rec = decompress_int8(q, s)
+    rel = float(jnp.max(jnp.abs(rec - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.01  # 1/127 quantization grid
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serving_continuous_batching_parity():
+    cfg = scaled_down(get_config("tinyllama-1.1b"))
+    eng = ServingEngine(cfg, b_max=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, (6 + i,)).astype(np.int32), max_new=5)
+        for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 4
+    assert eng.stats["decode_steps"] < 4 * 4  # batching actually shared steps
+    # parity vs single-request decode for the first request
+    import jax.numpy as jnp2
+    m, params, dist = eng.model, eng.params, Dist.local()
+    r0 = reqs[0]
+    nt, caches = m.prefill(params, {"tokens": jnp2.asarray(r0.prompt)[None]},
+                           dist, 64)
+    outs = [int(nt[0])]
+    pos = len(r0.prompt)
+    for _ in range(r0.max_new - 1):
+        nt, caches = m.decode_step(params, {"token": nt[:, None],
+                                            "pos": jnp2.int32(pos)},
+                                   caches, dist)
+        outs.append(int(nt[0]))
+        pos += 1
+    assert outs == r0.out
+    # offload accounting: finished slots spilled KV to host
+    assert eng.host.bytes_used > 0

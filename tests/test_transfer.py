@@ -1,0 +1,64 @@
+"""Data-transfer suite: merging, blockwise reads, pipelined staging."""
+import numpy as np
+import pytest
+
+from repro.core.offload import DiskStore, HostStore
+from repro.core.transfer import (blockwise_disk_to_host, merge_tensors,
+                                 naive_disk_to_host, pipelined_disk_to_device,
+                                 split_views, sweep_block_size)
+
+
+def test_merge_split_roundtrip():
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((32, 16)).astype(np.float32),
+        "b": rng.standard_normal((8,)).astype(np.float32),
+        "c": rng.integers(0, 255, (4, 4)).astype(np.uint8),
+    }
+    buf, man = merge_tensors(tensors)
+    views = split_views(buf, man)
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(views[k], v)
+    assert man.total_bytes == sum(v.nbytes for v in tensors.values())
+
+
+@pytest.mark.parametrize("n_threads", [1, 3])
+@pytest.mark.parametrize("block", [1 << 12, 1 << 16, 1 << 22])
+def test_blockwise_equals_naive(tmp_path, n_threads, block):
+    disk = DiskStore(str(tmp_path))
+    rng = np.random.default_rng(1)
+    arr = rng.standard_normal((512, 257)).astype(np.float32)  # odd size
+    disk.put("x", arr)
+    naive = naive_disk_to_host(disk, "x")
+    blockwise = blockwise_disk_to_host(disk, "x", block_bytes=block,
+                                       n_threads=n_threads)
+    np.testing.assert_array_equal(naive, arr)
+    np.testing.assert_array_equal(blockwise, arr)
+
+
+def test_pipelined_to_device(tmp_path):
+    disk = DiskStore(str(tmp_path))
+    rng = np.random.default_rng(2)
+    arr = rng.standard_normal((1024, 128)).astype(np.float32)
+    disk.put("w", arr)
+    dev = pipelined_disk_to_device(disk, "w", block_bytes=1 << 16)
+    np.testing.assert_array_equal(np.asarray(dev), arr)
+
+
+def test_block_size_sweep_runs(tmp_path):
+    disk = DiskStore(str(tmp_path))
+    arr = np.zeros((1 << 20,), np.uint8)  # 1MB
+    disk.put("s", arr)
+    out = sweep_block_size(disk, "s", sizes=[1 << 18, 1 << 20], repeats=1)
+    assert len(out) == 2 and all(bw > 0 for _, bw in out)
+
+
+def test_store_accounting(tmp_path):
+    host = HostStore()
+    a = np.zeros((1024,), np.float32)
+    host.put("a", a)
+    assert host.bytes_used == a.nbytes
+    host.put("b", a)
+    assert host.peak_bytes == 2 * a.nbytes
+    host.delete("a")
+    assert host.bytes_used == a.nbytes
