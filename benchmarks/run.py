@@ -191,6 +191,53 @@ def fig12_moe():
              f"tok_s={s['throughput_tok_s']:.2f};busy={s['compute_busy']:.2f}")
 
 
+def serving_offload():
+    """Serving through the PIPO pipeline (tentpole scenario): continuous-
+    batching decode with disk-tier weights, performance vs sequential mode
+    on the same config — the Fig. 9 utilization gap at serving granularity."""
+    from repro.serving import OffloadedServingEngine, Request
+    cfg = _bench_cfg(layers=6, d=256, ff=1024)
+    # sim_bw puts a fixed-bandwidth floor under every weight/KV transfer
+    # (TieredWeightStore.sim_bw): on this CPU-only container transfers are
+    # memcpys whose speed swings with CPU contention and page-cache state,
+    # which would make the overlap gap pure noise.  The floor sleeps out
+    # the remainder like a DMA engine, so sequential pays
+    # (weights + KV + compute) per layer while performance mode hides the
+    # link time — the paper's transfer-bound serving regime, deterministic
+    # run to run.  Batch 64 is the offloaded-throughput operating point
+    # (FlexGen-style): decode compute is negligible at small batch.
+    results = {}
+    b_max = 64
+    for mode in ("sequential", "performance"):
+        eng = OffloadedServingEngine(
+            cfg, b_max=b_max, max_len=96, placement="host", pipeline=mode,
+            sim_bw=0.3e9)
+        rng = np.random.default_rng(0)
+        for i in range(b_max):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, (32,)).astype(np.int32), max_new=12))
+        eng._admit()                      # prefill all slots
+        done = []
+        eng._decode_step(done)           # warm the jit caches untimed
+        t0 = time.perf_counter()
+        n0 = eng.stats["tokens_out"]
+        while any(s is not None for s in eng.slots):
+            eng._decode_step(done)
+        dt = time.perf_counter() - t0
+        ntok = eng.stats["tokens_out"] - n0
+        rep = eng.pipeline_report()
+        eng.shutdown()
+        results[mode] = (ntok / dt, rep)
+        emit(f"serving_offload_{mode}", dt / max(1, ntok) * 1e6,
+             f"decode_tok_s={ntok / dt:.2f};util={rep['compute_util']:.2f};"
+             f"bubble={rep['bubble_frac']:.2f}")
+    speedup = results["performance"][0] / max(1e-9, results["sequential"][0])
+    util_gain = (results["performance"][1]["compute_util"]
+                 - results["sequential"][1]["compute_util"])
+    emit("serving_offload_speedup", 0.0,
+         f"decode_speedup={speedup:.2f}x;util_gain={util_gain:+.2f}")
+
+
 def kernel_int4():
     """§3.4: fused INT4 matmul vs dequantize-then-matmul."""
     import jax
@@ -244,7 +291,7 @@ def roofline():
 
 BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            fig9_ablation, table3_latency, table6_memory, fig12_moe,
-           kernel_int4, roofline]
+           serving_offload, kernel_int4, roofline]
 
 
 def main() -> None:

@@ -3,9 +3,13 @@ from repro.core.engine import PipelinedLM
 from repro.core.memory_model import estimate
 from repro.core.offload import (DeviceStore, DiskStore, HostStore,
                                 MemoryBudget)
-from repro.core.pipeline import PipelineScheduler, ThreadPool
-from repro.core.tasks import Task, TaskType, Trace
+from repro.core.pipeline import PipelineScheduler, ThreadPool, VirtualPool
+from repro.core.tasks import (Clock, Task, TaskType, Trace, VirtualClock,
+                              WallClock)
+from repro.core.transfer import TieredWeightStore
 
 __all__ = ["AutoConfig", "configure", "PipelinedLM", "estimate",
            "DeviceStore", "DiskStore", "HostStore", "MemoryBudget",
-           "PipelineScheduler", "ThreadPool", "Task", "TaskType", "Trace"]
+           "PipelineScheduler", "ThreadPool", "VirtualPool",
+           "Clock", "WallClock", "VirtualClock", "Task", "TaskType", "Trace",
+           "TieredWeightStore"]

@@ -27,12 +27,11 @@ from repro.configs.base import MOE, ModelConfig
 from repro.core.offload import DeviceStore, DiskStore, HostStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
 from repro.core.tasks import Trace
-from repro.core.transfer import (Manifest, blockwise_disk_to_host,
-                                 host_to_device, merge_tensors, split_views)
+from repro.core.transfer import Manifest, TieredWeightStore
 from repro.models.attention import decode_attention, ref_attention
 from repro.models.common import rms_norm, silu
 from repro.models.rope import apply_rope, rope_angles
-from repro.quant.int4 import dequantize_int4, quantize_int4
+from repro.quant.int4 import quantize_int4
 
 
 # ---------------------------------------------------------------------------
@@ -83,14 +82,6 @@ def _expert_unit(x, w, *, cfg: ModelConfig):
     return hdn @ w["w_down"]
 
 
-@jax.jit
-def _fused_dequant(packed, scale):
-    """INT4 weights decoded on-device inside jit; XLA fuses the dequant into
-    the consuming matmul — the CPU emulation of the paper's fused kernel
-    (on TPU the Pallas kernel in kernels/int4_matmul.py does this in VREGs)."""
-    return dequantize_int4(packed, scale, jnp.float32)
-
-
 def _embed_unit(tokens, emb):
     return jnp.take(emb, tokens, axis=0)
 
@@ -133,17 +124,17 @@ class PipelinedLM:
         self.placement = placement
         self.cache_on = cache_on
         self.quant = quant
-        self.fused_int4 = fused_int4
-        self.block_bytes = block_bytes
-        self.n_io_threads = n_io_threads
-        self.cold_reads = cold_reads
         self.trace = Trace()
         self.host = HostStore()
         self.device = DeviceStore()
         self.disk = DiskStore(disk_root)
+        self.weights = TieredWeightStore(
+            placement=placement, host=self.host, device=self.device,
+            disk=self.disk, quant=quant, fused_int4=fused_int4,
+            block_bytes=block_bytes, n_io_threads=n_io_threads,
+            cold_reads=cold_reads)
         self.pipeline_mode = pipeline
         self.units: list[UnitSpec] = []
-        self.manifests: Dict[str, Manifest] = {}
         self._build(seed)
         self._kv_init()
         self._jit_units()
@@ -176,14 +167,11 @@ class PipelinedLM:
         return t
 
     def _put_tier(self, key: str, tensors: dict):
-        buf, man = merge_tensors(tensors)
-        self.manifests[key] = man
-        if self.placement == "disk":
-            self.disk.put(key, buf)
-        elif self.placement == "host":
-            self.host.put(key, buf)
-        else:
-            self.device.put(key, buf)
+        self.weights.put(key, tensors)
+
+    @property
+    def manifests(self) -> Dict[str, Manifest]:
+        return self.weights.manifests
 
     def _build(self, seed: int):
         cfg = self.cfg
@@ -246,55 +234,13 @@ class PipelinedLM:
         return self.units[j].kind == "mha"
 
     def _load_key(self, key: str):
-        man = self.manifests[key]
-        if self.placement == "device":
-            buf = self.device.get(key)
-            views = split_views(np.asarray(buf), man)
-        elif self.placement == "host":
-            views = split_views(self.host.get(key), man)
-        else:
-            if self.cold_reads:
-                # evict page cache: measure real NVMe reads (paper regime)
-                self.disk.drop_cache(key)
-            host_buf = blockwise_disk_to_host(
-                self.disk, key, block_bytes=self.block_bytes,
-                n_threads=self.n_io_threads)
-            views = split_views(host_buf.view(np.uint8), man)
-        dev = {}
-        for name, arr in views.items():
-            dev[name] = jax.device_put(arr)
-        for a in dev.values():
-            a.block_until_ready()
-        return self._maybe_dequant(dev)
+        return self.weights.load(key)
 
     def load_weights(self, j: int):
         u = self.units[j]
         if u.kind == "moe" and self.cfg.moe.num_shared == 0:
             return {}
         return self._load_key(u.key)
-
-    def _maybe_dequant(self, dev):
-        if self.quant != "int4":
-            return dev
-        out = {}
-        for name, arr in dev.items():
-            if name.endswith("#q"):
-                base = name[:-2]
-                if self.fused_int4:
-                    # fused path: dequant happens inside the unit's jit —
-                    # emulated here by passing packed+scale through a jitted
-                    # dequant that XLA fuses with the matmul consumer.
-                    out[base] = _fused_dequant(arr, dev[base + "#s"])
-                else:
-                    # unfused baseline: materialize fp32 weights first
-                    out[base] = np.asarray(dequantize_int4(
-                        arr, dev[base + "#s"], jnp.float32))
-                    out[base] = jax.device_put(out[base])
-            elif name.endswith("#s"):
-                continue
-            else:
-                out[name] = arr
-        return out
 
     def release_weights(self, j: int, handle):
         del handle  # device arrays freed by GC; stores unaffected
@@ -411,6 +357,7 @@ class PipelinedLM:
             "compute_busy": self.trace.busy_fraction("compute"),
             "host_peak_gb": self.host.peak_bytes / 2**30,
             "device_peak_gb": self.device.peak_bytes / 2**30,
+            "pipeline": self.trace.report(),
         }
         return toks, stats
 

@@ -26,7 +26,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
-from repro.core.tasks import Task, TaskType, Trace
+from repro.core.tasks import Task, TaskType, Trace, VirtualClock
 
 PIPELINE_MODES = ("performance", "memory", "sequential")
 
@@ -76,6 +76,59 @@ class ThreadPool:
             self._q.put((99, 1 << 30, None))
         for t in self._threads:
             t.join(timeout=5)
+
+
+class VirtualPool:
+    """Deterministic fake transport: same interface as ThreadPool, but every
+    task executes synchronously on the caller thread while its start/end
+    timestamps are assigned on a *virtual* discrete-event timeline with
+    ``n_threads`` parallel transfer slots.
+
+    The timeline models exactly what the scheduler enforces: a submitted
+    task starts at max(submission time, earliest-free worker); a wait()
+    advances the virtual clock to the task's end (the caller blocked until
+    then).  Per-task durations come from ``cost_fn(task)`` — tests supply
+    fixed costs per TaskType, so scheduler ordering invariants (overlap,
+    serialization, save-before-load) are asserted on virtual timestamps
+    with zero sleeps and zero timing races.
+    """
+
+    def __init__(self, n_threads: int = 3, trace: Optional[Trace] = None,
+                 cost_fn: Optional[Callable[[Task], float]] = None,
+                 clock: Optional[VirtualClock] = None):
+        self.clock = clock or VirtualClock()
+        self.trace = trace if trace is not None else Trace(clock=self.clock)
+        self.cost_fn = cost_fn or (lambda task: 1.0)
+        self._free = [0.0] * n_threads
+
+    def submit(self, task: Task, priority: int = 0) -> Task:
+        task.t_submit = self.clock.now()
+        task.run(self.clock)               # side effects happen now
+        w = min(range(len(self._free)), key=lambda k: self._free[k])
+        start = max(self.clock.now(), self._free[w])
+        end = start + float(self.cost_fn(task))
+        task.t_start, task.t_end = start, end
+        self._free[w] = end
+        task.on_wait = self._advance       # waiters block until virtual end
+        self.trace.add(task, f"vpool-{w}")
+        return task
+
+    def _advance(self, task: Task):
+        self.clock.advance_to(task.t_end)
+
+    def run_on_main(self, task: Task) -> Task:
+        start = self.clock.now()
+        task.run(self.clock)
+        end = start + float(self.cost_fn(task))
+        task.t_start, task.t_end = start, end
+        self.clock.advance_to(end)
+        self.trace.add(task, "main")
+        if task.error is not None:
+            raise task.error
+        return task
+
+    def shutdown(self):
+        pass
 
 
 @dataclass

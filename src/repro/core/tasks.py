@@ -10,6 +10,11 @@ Each task carries a threading.Event for *task-level* synchronization —
 the paper's central deviation from FlexGen's device-level sync ('S' boxes
 in Fig. 2): a consumer waits on exactly the producer it needs, nothing
 else.
+
+Clock seam: all timestamps flow through a ``Clock`` so the scheduler can
+run against a ``VirtualClock`` (deterministic discrete-event timeline, no
+sleeps) in tests and the wall clock in production.  See
+``core.pipeline.VirtualPool`` for the fake transport built on top.
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 
 class TaskType(Enum):
@@ -25,6 +30,42 @@ class TaskType(Enum):
     WEIGHT_LOAD = "weight_load"
     KV_LOAD = "kv_load"
     KV_SAVE = "kv_save"
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+
+class Clock:
+    """Timestamp source for tasks/traces."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+
+class WallClock(Clock):
+    def now(self) -> float:
+        return time.perf_counter()
+
+
+class VirtualClock(Clock):
+    """Deterministic logical time: advanced explicitly by the virtual
+    transport (``VirtualPool``), never by sleeping.  Starts at 0 so traces
+    are reproducible run to run."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance_to(self, t: float):
+        if t > self.t:
+            self.t = t
+
+
+WALL_CLOCK = WallClock()
 
 
 @dataclass
@@ -39,19 +80,24 @@ class Task:
     t_submit: float = 0.0
     t_start: float = 0.0
     t_end: float = 0.0
+    # virtual-transport hook: called by wait() once the task is done, so a
+    # VirtualPool can advance its clock to the waiter's sync point.
+    on_wait: Optional[Callable[["Task"], None]] = None
 
-    def run(self):
-        self.t_start = time.perf_counter()
+    def run(self, clock: Clock = WALL_CLOCK):
+        self.t_start = clock.now()
         try:
             self.result = self.fn()
         except BaseException as e:  # propagate to waiter
             self.error = e
         finally:
-            self.t_end = time.perf_counter()
+            self.t_end = clock.now()
             self.done.set()
 
     def wait(self):
         self.done.wait()
+        if self.on_wait is not None:
+            self.on_wait(self)
         if self.error is not None:
             raise self.error
         return self.result
@@ -66,14 +112,33 @@ class TraceEvent:
     thread: str
 
 
+def _merged_busy(intervals) -> float:
+    """Total length of the union of (start, end) intervals."""
+    ivals = sorted(intervals)
+    busy, cur_s, cur_e = 0.0, None, None
+    for s, t in ivals:
+        if cur_s is None:
+            cur_s, cur_e = s, t
+        elif s <= cur_e:
+            cur_e = max(cur_e, t)
+        else:
+            busy += cur_e - cur_s
+            cur_s, cur_e = s, t
+    if cur_s is not None:
+        busy += cur_e - cur_s
+    return busy
+
+
 class Trace:
     """Execution trace for the GPU-utilization analogue (Fig. 8) and the
-    pipeline-overlap benchmarks."""
+    pipeline-overlap benchmarks.  Timestamps are relative to the clock's
+    value at construction (0 for a fresh VirtualClock)."""
 
-    def __init__(self):
+    def __init__(self, clock: Clock = WALL_CLOCK):
         self._events: list[TraceEvent] = []
         self._lock = threading.Lock()
-        self.t0 = time.perf_counter()
+        self.clock = clock
+        self.t0 = clock.now()
 
     def add(self, task: Task, thread: str):
         with self._lock:
@@ -85,25 +150,51 @@ class Trace:
         with self._lock:
             return list(self._events)
 
-    def busy_fraction(self, kind: str = "compute") -> float:
-        """Fraction of the makespan the given task kind was executing —
-        the paper's 'GPU utilization' proxy."""
+    def span(self) -> float:
         evs = self.events()
         if not evs:
             return 0.0
-        end = max(e.t_end for e in evs)
-        start = min(e.t_start for e in evs)
-        span = max(1e-9, end - start)
-        ivals = sorted((e.t_start, e.t_end) for e in evs if e.kind == kind)
-        busy, cur_s, cur_e = 0.0, None, None
-        for s, t in ivals:
-            if cur_s is None:
-                cur_s, cur_e = s, t
-            elif s <= cur_e:
-                cur_e = max(cur_e, t)
-            else:
-                busy += cur_e - cur_s
-                cur_s, cur_e = s, t
-        if cur_s is not None:
-            busy += cur_e - cur_s
-        return busy / span
+        return max(e.t_end for e in evs) - min(e.t_start for e in evs)
+
+    def busy_time(self, kind: str) -> float:
+        """Merged-interval busy seconds for one task kind."""
+        return _merged_busy((e.t_start, e.t_end) for e in self.events()
+                            if e.kind == kind)
+
+    def thread_busy(self, thread: str = "main") -> float:
+        """Merged-interval busy seconds on one executor thread."""
+        return _merged_busy((e.t_start, e.t_end) for e in self.events()
+                            if e.thread == thread)
+
+    def busy_fraction(self, kind: str = "compute") -> float:
+        """Fraction of the makespan the given task kind was executing —
+        the paper's 'GPU utilization' proxy."""
+        span = self.span()
+        if span <= 0:
+            return 0.0
+        return self.busy_time(kind) / max(1e-9, span)
+
+    def report(self) -> Dict[str, Any]:
+        """Pipeline instrumentation (Fig. 8/9 analogue): per-task-type busy
+        time + counts, compute-thread utilization, and bubble accounting
+        (compute-thread idle time = pipeline stalls waiting on transfers)."""
+        evs = self.events()
+        span = self.span()
+        per_kind = {}
+        for kind in (t.value for t in TaskType):
+            ivals = [(e.t_start, e.t_end) for e in evs if e.kind == kind]
+            busy = _merged_busy(ivals)
+            per_kind[kind] = {
+                "busy_s": busy,
+                "count": len(ivals),
+                "busy_frac": busy / span if span > 0 else 0.0,
+            }
+        compute_busy = self.thread_busy("main")
+        return {
+            "span_s": span,
+            "per_kind": per_kind,
+            "compute_util": compute_busy / span if span > 0 else 0.0,
+            "bubble_s": max(0.0, span - compute_busy),
+            "bubble_frac": (max(0.0, span - compute_busy) / span
+                            if span > 0 else 0.0),
+        }

@@ -15,11 +15,13 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.offload import DiskStore
@@ -63,6 +65,119 @@ def split_views(buf: np.ndarray, manifest: Manifest) -> Dict[str, np.ndarray]:
 # ---------------------------------------------------------------------------
 # Transfers
 # ---------------------------------------------------------------------------
+
+
+class TieredWeightStore:
+    """Merged-buffer weight tiering shared by the generation engine
+    (core.engine.PipelinedLM) and the offloaded serving engine
+    (serving.offload_engine.OffloadedServingEngine).
+
+    ``put`` merges a unit's tensors into ONE contiguous buffer + manifest on
+    the placement tier (device/host/disk); ``load`` moves it to the device
+    and splits views, transparently dequantizing INT4 pairs (fused inside
+    jit when ``fused_int4``, else materialized — the Fig. 9 ablation knob).
+
+    ``sim_bw`` (bytes/s) floors each load's wall time at
+    ``total_bytes / sim_bw``, emulating a fixed-bandwidth interconnect
+    (PCIe/NVMe per ``offload.MemoryBudget``).  On this CPU-only container
+    host->"device" copies are memcpys whose speed varies with CPU
+    contention and page-cache state; the floor makes pipeline-overlap
+    benchmarks deterministic, and it sleeps (GIL released) so transfer
+    threads overlap compute exactly like a DMA engine would.
+    """
+
+    def __init__(self, *, placement: str, host, device, disk,
+                 quant: Optional[str] = None, fused_int4: bool = True,
+                 block_bytes: int = DEFAULT_BLOCK, n_io_threads: int = 3,
+                 cold_reads: bool = False, sim_bw: Optional[float] = None):
+        assert placement in ("device", "host", "disk"), placement
+        self.placement = placement
+        self.host, self.device, self.disk = host, device, disk
+        self.quant = quant
+        self.fused_int4 = fused_int4
+        self.block_bytes = block_bytes
+        self.n_io_threads = n_io_threads
+        self.cold_reads = cold_reads
+        self.sim_bw = sim_bw
+        self.manifests: Dict[str, Manifest] = {}
+
+    def put(self, key: str, tensors: Dict[str, np.ndarray]):
+        buf, man = merge_tensors(tensors)
+        self.manifests[key] = man
+        if self.placement == "disk":
+            self.disk.put(key, buf)
+        elif self.placement == "host":
+            self.host.put(key, buf)
+        else:
+            self.device.put(key, buf)
+
+    def nbytes(self, key: str) -> int:
+        return self.manifests[key].total_bytes
+
+    def sim_floor(self, nbytes: int, t0: float):
+        """Sleep out the remainder of ``nbytes / sim_bw`` seconds since t0 —
+        the fixed-bandwidth link model shared by weight and KV transfers."""
+        if self.sim_bw:
+            remain = nbytes / self.sim_bw - (time.perf_counter() - t0)
+            if remain > 0:
+                time.sleep(remain)
+
+    def load(self, key: str) -> Dict[str, np.ndarray]:
+        """Placement tier -> device tensors (one I/O request per unit)."""
+        t0 = time.perf_counter()
+        man = self.manifests[key]
+        if self.placement == "device":
+            buf = self.device.get(key)
+            views = split_views(np.asarray(buf), man)
+        elif self.placement == "host":
+            views = split_views(self.host.get(key), man)
+        else:
+            if self.cold_reads:
+                # evict page cache: measure real NVMe reads (paper regime)
+                self.disk.drop_cache(key)
+            host_buf = blockwise_disk_to_host(
+                self.disk, key, block_bytes=self.block_bytes,
+                n_threads=self.n_io_threads)
+            views = split_views(host_buf.view(np.uint8), man)
+        dev = {}
+        for name, arr in views.items():
+            dev[name] = jax.device_put(arr)
+        for a in dev.values():
+            a.block_until_ready()
+        self.sim_floor(man.total_bytes, t0)
+        return self._maybe_dequant(dev)
+
+    def _maybe_dequant(self, dev):
+        if self.quant != "int4":
+            return dev
+        from repro.quant.int4 import dequantize_int4
+        out = {}
+        for name, arr in dev.items():
+            if name.endswith("#q"):
+                base = name[:-2]
+                if self.fused_int4:
+                    # fused path: dequant happens inside the consumer's jit —
+                    # XLA fuses it with the matmul (paper §3.4 kernel).
+                    out[base] = _fused_dequant(arr, dev[base + "#s"])
+                else:
+                    # unfused baseline: materialize fp32 weights first
+                    out[base] = np.asarray(dequantize_int4(
+                        arr, dev[base + "#s"], jnp.float32))
+                    out[base] = jax.device_put(out[base])
+            elif name.endswith("#s"):
+                continue
+            else:
+                out[name] = arr
+        return out
+
+
+@jax.jit
+def _fused_dequant(packed, scale):
+    """INT4 weights decoded on-device inside jit; XLA fuses the dequant into
+    the consuming matmul — the CPU emulation of the paper's fused kernel
+    (on TPU the Pallas kernel in kernels/int4_matmul.py does this in VREGs)."""
+    from repro.quant.int4 import dequantize_int4
+    return dequantize_int4(packed, scale, jnp.float32)
 
 
 def naive_disk_to_host(disk: DiskStore, key: str) -> np.ndarray:

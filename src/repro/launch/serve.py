@@ -1,7 +1,13 @@
 """Serving launcher: continuous-batching engine over a registry arch.
 
+Resident weights (default):
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --scaled --requests 10
+
+Offloaded weights through the PIPO pipeline (models larger than device
+memory; see serving/offload_engine.py):
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --scaled --offload --placement disk --pipeline performance
 """
 import argparse
 import time
@@ -16,15 +22,30 @@ def main():
     ap.add_argument("--b-max", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--offload", action="store_true",
+                    help="stream weights from host/disk via the PIPO "
+                         "pipeline instead of keeping them resident")
+    ap.add_argument("--placement", default="host",
+                    choices=("host", "disk"),
+                    help="weight tier for --offload")
+    ap.add_argument("--pipeline", default="performance",
+                    choices=("performance", "memory", "sequential"),
+                    help="PIPO scheduling mode for --offload")
     args = ap.parse_args()
 
     from repro.configs import get_config, scaled_down
-    from repro.serving import Request, ServingEngine
+    from repro.serving import (OffloadedServingEngine, Request, ServingEngine)
 
     cfg = get_config(args.arch)
     if args.scaled:
         cfg = scaled_down(cfg)
-    eng = ServingEngine(cfg, b_max=args.b_max, max_len=args.max_len)
+    if args.offload:
+        eng = OffloadedServingEngine(cfg, b_max=args.b_max,
+                                     max_len=args.max_len,
+                                     placement=args.placement,
+                                     pipeline=args.pipeline)
+    else:
+        eng = ServingEngine(cfg, b_max=args.b_max, max_len=args.max_len)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -36,6 +57,12 @@ def main():
     total = sum(len(r.out) for r in done)
     print(f"completed={len(done)} tokens={total} tok_s={total / dt:.1f} "
           f"stats={eng.stats}")
+    if args.offload:
+        rep = eng.pipeline_report()
+        busy = {k: f"{v['busy_s']:.2f}s" for k, v in rep["per_kind"].items()}
+        print(f"pipeline[{args.pipeline}] compute_util={rep['compute_util']:.2f} "
+              f"bubble_frac={rep['bubble_frac']:.2f} busy={busy}")
+        eng.shutdown()
 
 
 if __name__ == "__main__":

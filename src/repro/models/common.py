@@ -87,13 +87,21 @@ def pmean(x, axis):
     return lax.pmean(x, axis) if axis else x
 
 
+def _one_axis_size(a) -> int:
+    """``lax.axis_size`` with a jax<0.6 fallback: psum of the constant 1
+    constant-folds to the (static) axis size under shard_map."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(a)
+    return lax.psum(1, a)
+
+
 def axis_index(axis):
     if not axis:
         return jnp.int32(0)
     if isinstance(axis, (tuple, list)):
         idx = jnp.int32(0)
         for a in axis:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * _one_axis_size(a) + lax.axis_index(a)
         return idx
     return lax.axis_index(axis)
 
@@ -104,9 +112,9 @@ def axis_size(axis):
     if isinstance(axis, (tuple, list)):
         n = 1
         for a in axis:
-            n *= lax.axis_size(a)
+            n *= _one_axis_size(a)
         return n
-    return lax.axis_size(axis)
+    return _one_axis_size(axis)
 
 
 # ---------------------------------------------------------------------------
@@ -168,18 +176,28 @@ def empty_partials(shape_ml, d, dtype=jnp.float32):
     return m, l, o
 
 
+def _abstract_type(x):
+    """``jax.typeof`` with a fallback for jax < 0.6 (no ``typeof``; avals
+    there carry no ``vma`` either, so callers degrade to a no-op)."""
+    typeof = getattr(jax, "typeof", None)
+    if typeof is not None:
+        return typeof(x)
+    return jax.core.get_aval(x)
+
+
 def match_vma(x, like):
     """Promote x's varying-manual-axes to match ``like`` (shard_map carries).
 
     Under shard_map, loop carries initialized with jnp.zeros are 'unvarying'
     while computed outputs vary over the mapped axes; lax.fori_loop/scan then
-    reject the carry.  No-op outside shard_map.
+    reject the carry.  No-op outside shard_map (and on jax versions without
+    the vma machinery).
     """
-    vma = getattr(jax.typeof(like), "vma", None)
+    vma = getattr(_abstract_type(like), "vma", None)
     if not vma:
         return x
     def fix(t):
-        cur = getattr(jax.typeof(t), "vma", frozenset())
+        cur = getattr(_abstract_type(t), "vma", frozenset())
         missing = tuple(sorted(vma - cur))
         if not missing:
             return t

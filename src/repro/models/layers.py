@@ -249,8 +249,11 @@ class Ctx:
 
 
 def _shard_map(ctx: Ctx, fn, in_specs, out_specs):
-    return jax.shard_map(fn, mesh=ctx.dist.mesh, in_specs=in_specs,
-                         out_specs=out_specs)
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # jax < 0.6: experimental namespace
+        from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=ctx.dist.mesh, in_specs=in_specs,
+                     out_specs=out_specs)
 
 
 # ===========================================================================
@@ -538,9 +541,10 @@ def apply_ssm(p, x, ctx: Ctx, cache, spec: LayerSpec):
             # inside shard_map: fetch conv halo from previous shard
             if axis is not None:
                 tail = conv_in[:, -(s_cfg.d_conv - 1):]
+                from repro.models.common import axis_size as _axis_size
                 prev = lax.ppermute(
                     tail, axis,
-                    [(i, i + 1) for i in range(lax.axis_size(axis) - 1)])
+                    [(i, i + 1) for i in range(_axis_size(axis) - 1)])
             else:
                 prev = None
             conv = silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"], prev))

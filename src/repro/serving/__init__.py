@@ -1,3 +1,6 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.base import Request, SlotEngineBase
+from repro.serving.engine import ServingEngine
+from repro.serving.offload_engine import OffloadedServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "SlotEngineBase", "ServingEngine",
+           "OffloadedServingEngine"]

@@ -1,0 +1,206 @@
+"""Slot-based continuous batching shared by both serving engines.
+
+``SlotEngineBase`` owns everything that is *scheduling policy*, not
+compute: the request queue, slot assignment, ragged per-slot positions,
+completion/preemption bookkeeping, and slot-granularity KV spill/restore
+orchestration.  Concrete engines supply the compute:
+
+  * ``ServingEngine`` (serving.engine) — fully-resident weights, one jitted
+    whole-model decode per step.  Fastest when the model fits in device
+    memory.
+  * ``OffloadedServingEngine`` (serving.offload_engine) — weights live on
+    host/disk tiers and stream through the PIPO ``PipelineScheduler``
+    per layer.  Serves models larger than device memory.
+
+Slot KV offload runs as PIPO ``KV_SAVE`` tasks on a transfer pool when one
+is provided (``kv_pool``), overlapping the device->host spill with the
+next decode steps instead of blocking the batch; admission to a spilled
+slot synchronizes on exactly the pending save task (task-level sync, the
+paper's §3.1.2 principle at request scope).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.offload import HostStore
+from repro.core.pipeline import ThreadPool
+from repro.core.tasks import Task, TaskType
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (s,) int32
+    max_new: int = 32
+    eos_id: int = -1                   # -1: never stops early
+    # filled by the engine
+    out: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    # preemption state: >= 0 means this request's KV rows are spilled to the
+    # host store (keyed by rid) and it resumes via restore, not prefill
+    preempt_pos: int = -1
+    resume_token: int = -1
+
+
+class SlotEngineBase:
+    """Continuous batching over a fixed decode batch (b_max): requests
+    queue in; a free slot triggers a b=1 prefill; each engine step decodes
+    ALL active slots with ragged per-slot positions; completed slots free
+    immediately (no padding to the slowest request)."""
+
+    def __init__(self, cfg, *, b_max: int = 4, max_len: int = 256,
+                 kv_pool: Optional[ThreadPool] = None):
+        self.cfg = cfg
+        self.b_max = b_max
+        self.max_len = max_len
+        self.host = HostStore()
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * b_max
+        self.pos = np.zeros(b_max, np.int32)           # next write position
+        self.tokens = np.zeros(b_max, np.int32)        # last emitted token
+        self.stats: Dict[str, int] = {
+            "prefills": 0, "decode_steps": 0, "tokens_out": 0,
+            "slot_saves": 0, "slot_restores": 0}
+        self._kv_pool = kv_pool
+        self._slot_saves: Dict[int, Task] = {}
+
+    # ---- engine-specific compute (implemented by subclasses) ---------------
+    def _prefill_into_slot(self, slot: int, req: Request) -> int:
+        """Run the prompt, scatter KV rows into the slot; returns the first
+        generated token."""
+        raise NotImplementedError
+
+    def _decode_active(self, active: List[int]) -> np.ndarray:
+        """One batched decode step over all slots; returns (b_max,) next
+        tokens (values at inactive slots are ignored)."""
+        raise NotImplementedError
+
+    def offload_slot(self, slot: int):
+        """KV-save: spill a slot's cache rows to host memory keyed by the
+        occupying request's rid (the PIPO KV-save task at request scope)."""
+        rid = self.slots[slot].rid if self.slots[slot] else slot
+        self._offload_write(rid, self._offload_snapshot(slot))
+
+    def restore_slot(self, slot: int, rid: int):
+        """KV-load: bring an offloaded request's rows back into a slot."""
+        raise NotImplementedError
+
+    def _offload_snapshot(self, slot: int):
+        """Capture whatever the spill needs *now* (cheap; no copies for
+        immutable caches) so the write can run on a transfer thread."""
+        raise NotImplementedError
+
+    def _offload_write(self, rid: int, snapshot):
+        raise NotImplementedError
+
+    # ---- public API ---------------------------------------------------------
+    def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self._admit()
+            self._decode_step(done)
+        return done
+
+    def preempt_slot(self, slot: int):
+        """Spill an active request's KV rows and push it back to the queue
+        head; it resumes later via restore_slot (no re-prefill)."""
+        req = self.slots[slot]
+        assert req is not None, f"slot {slot} not active"
+        self._sync_slot(slot)
+        self.offload_slot(slot)                 # sync spill, keyed by rid
+        self.stats["slot_saves"] += 1
+        req.preempt_pos = int(self.pos[slot])
+        req.resume_token = int(self.tokens[slot])
+        self.queue.insert(0, req)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+
+    # ---- internals ----------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _sync_slot(self, slot: int):
+        """Wait for any in-flight async spill of this slot's previous
+        occupant before its rows are reused."""
+        t = self._slot_saves.pop(slot, None)
+        if t is not None:
+            t.wait()
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            self._sync_slot(slot)
+            if req.preempt_pos >= 0:            # resume a preempted request
+                self.restore_slot(slot, req.rid)
+                self.stats["slot_restores"] += 1
+                self.pos[slot] = req.preempt_pos
+                self.tokens[slot] = req.resume_token
+                req.preempt_pos = -1
+                self.slots[slot] = req
+                continue
+            tok = self._prefill_into_slot(slot, req)
+            self.stats["prefills"] += 1
+            req.out.append(tok)
+            req.t_first = time.perf_counter()
+            self.slots[slot] = req
+            self.pos[slot] = len(req.prompt)
+            self.tokens[slot] = tok
+            self.stats["tokens_out"] += 1
+
+    def _decode_step(self, done: List[Request]):
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        nt = self._decode_active(active)
+        self.stats["decode_steps"] += 1
+        for i in active:
+            req = self.slots[i]
+            req.out.append(int(nt[i]))
+            self.stats["tokens_out"] += 1
+            self.pos[i] += 1
+            self.tokens[i] = int(nt[i])
+            if (len(req.out) >= req.max_new
+                    or int(nt[i]) == req.eos_id
+                    or self.pos[i] >= self.max_len - 1):
+                req.t_done = time.perf_counter()
+                done.append(req)
+                self._release_slot(i)
+
+    def _release_slot(self, slot: int):
+        """Free a finished slot; the KV spill overlaps with the next decode
+        steps when a transfer pool is available."""
+        rid = self.slots[slot].rid
+        self.stats["slot_saves"] += 1
+        if self._kv_pool is not None:
+            snap = self._offload_snapshot(slot)
+            t = Task(TaskType.KV_SAVE, f"slot_save[{rid}]",
+                     lambda rid=rid, snap=snap: self._offload_write(rid, snap))
+            self._kv_pool.submit(t, priority=1)   # behind loads, per §3.2.1
+            self._slot_saves[slot] = t
+        else:
+            self.offload_slot(slot)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+
+    def shutdown(self):
+        for t in self._slot_saves.values():
+            t.wait()
+        self._slot_saves.clear()

@@ -1,63 +1,40 @@
-"""Continuous-batching serving engine with PIPO-style KV host offload.
+"""Resident-weight continuous-batching serving engine.
 
-Slot-based continuous batching over a fixed decode batch (b_max):
-  * requests queue in; a free slot triggers a b=1 prefill whose KV rows are
-    scattered into the slot of the shared decode cache;
-  * each engine step decodes ALL active slots with *ragged* per-slot
-    positions (one jitted decode for the whole batch);
-  * completed slots are freed immediately (no padding to the slowest
-    request);
-  * preempted/finished slots can spill their KV rows to the HostStore and
-    restore on resume (``offload_slot``/``restore_slot``) — the PIPO
-    KV-save/KV-load tasks at serving granularity.
+All parameters stay in device memory; each engine step decodes ALL active
+slots with *ragged* per-slot positions (one jitted whole-model decode for
+the batch).  Slot admission / completion / preemption policy lives in
+``serving.base.SlotEngineBase``; the offloaded twin that streams weights
+through the PIPO pipeline is ``serving.offload_engine``.
 
-The engine is single-device (the paper's setting); the pod-scale decode
-path lives in launch/ + models (sharded caches).
+Slot KV spill/restore (``offload_slot``/``restore_slot``) snapshots the
+immutable cache pytree, so when a transfer pool is attached the spill runs
+as a PIPO KV_SAVE task overlapping subsequent decode steps.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.offload import HostStore
+from repro.core.pipeline import ThreadPool
 from repro.models import Dist, build_model
+from repro.serving.base import Request, SlotEngineBase
+
+__all__ = ["Request", "ServingEngine"]
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (s,) int32
-    max_new: int = 32
-    eos_id: int = -1                   # -1: never stops early
-    # filled by the engine
-    out: List[int] = field(default_factory=list)
-    t_submit: float = 0.0
-    t_first: float = 0.0
-    t_done: float = 0.0
-
-
-class ServingEngine:
+class ServingEngine(SlotEngineBase):
     def __init__(self, cfg: ModelConfig, *, b_max: int = 4,
-                 max_len: int = 256, seed: int = 0):
-        self.cfg = cfg
-        self.b_max = b_max
-        self.max_len = max_len
+                 max_len: int = 256, seed: int = 0,
+                 kv_pool: Optional[ThreadPool] = None):
+        super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=kv_pool)
         self.dist = Dist.local()
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
         self.caches = self.model.init_cache(b_max, max_len)
-        self.host = HostStore()
-        self.queue: List[Request] = []
-        self.slots: List[Optional[Request]] = [None] * b_max
-        self.pos = np.zeros(b_max, np.int32)           # next write position
-        self.tokens = np.zeros(b_max, np.int32)        # last emitted token
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
         self._jit()
 
     def _jit(self):
@@ -72,51 +49,25 @@ class ServingEngine:
             return m.prefill(params, {"tokens": toks}, dist, cache_len)
         self._prefill = jax.jit(prefill1, static_argnums=(2,))
 
-    # ---- public API ---------------------------------------------------------
-    def submit(self, req: Request):
-        req.t_submit = time.perf_counter()
-        self.queue.append(req)
+    # ---- compute ------------------------------------------------------------
+    def _prefill_into_slot(self, slot: int, req: Request) -> int:
+        nt, cache1 = self._prefill(self.params,
+                                   jnp.asarray(req.prompt)[None],
+                                   self.max_len)
+        # scatter the b=1 cache rows into the slot (KV "admission")
+        self.caches = self._map_slot(
+            self.caches, cache1,
+            lambda big, one, idx: big.at[idx].set(one.astype(big.dtype)),
+            slot)
+        return int(np.asarray(nt)[0])
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        done: List[Request] = []
-        for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
-                break
-            self._admit()
-            self._decode_step(done)
-        return done
+    def _decode_active(self, active: List[int]) -> np.ndarray:
+        tok = jnp.asarray(self.tokens)[:, None]
+        pos = jnp.asarray(self.pos)
+        nt, self.caches = self._decode(self.params, tok, pos, self.caches)
+        return np.asarray(nt)
 
-    # ---- internals ----------------------------------------------------------
-    def _free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
-
-    def _admit(self):
-        while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.queue.pop(0)
-            s = len(req.prompt)
-            nt, cache1 = self._prefill(self.params,
-                                       jnp.asarray(req.prompt)[None],
-                                       self.max_len)
-            self.stats["prefills"] += 1
-            # scatter the b=1 cache rows into the slot (KV "admission")
-            self.caches = self._map_slot(
-                self.caches, cache1,
-                lambda big, one, idx: big.at[idx].set(one.astype(big.dtype)),
-                slot)
-            tok = int(np.asarray(nt)[0])
-            req.out.append(tok)
-            req.t_first = time.perf_counter()
-            self.slots[slot] = req
-            self.pos[slot] = s
-            self.tokens[slot] = tok
-            self.stats["tokens_out"] += 1
-
+    # ---- slot cache plumbing ------------------------------------------------
     @staticmethod
     def _batch_axis(path) -> int:
         """Cache leaves under 'pat' are stacked (periods, b, ...); under
@@ -136,41 +87,28 @@ class ServingEngine:
             out.append(fn(big, one, tuple(idx)))
         return jax.tree_util.tree_unflatten(treedef, out)
 
-    def _decode_step(self, done: List[Request]):
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        if not active:
-            return
-        tok = jnp.asarray(self.tokens)[:, None]
-        pos = jnp.asarray(self.pos)
-        nt, self.caches = self._decode(self.params, tok, pos, self.caches)
-        self.stats["decode_steps"] += 1
-        nt = np.asarray(nt)
-        for i in active:
-            req = self.slots[i]
-            req.out.append(int(nt[i]))
-            self.stats["tokens_out"] += 1
-            self.pos[i] += 1
-            self.tokens[i] = int(nt[i])
-            if (len(req.out) >= req.max_new
-                    or int(nt[i]) == req.eos_id
-                    or self.pos[i] >= self.max_len - 1):
-                req.t_done = time.perf_counter()
-                done.append(req)
-                self.offload_slot(i)
-                self.slots[i] = None
-                self.pos[i] = 0
-
     # ---- PIPO KV offload at slot granularity --------------------------------
-    def offload_slot(self, slot: int):
-        """KV-save: spill a slot's cache rows to host memory (freeing the
-        device rows for reuse; the PIPO KV-save task at request scope)."""
-        rid = self.slots[slot].rid if self.slots[slot] else slot
+    def _offload_snapshot(self, slot: int):
+        # Slice the slot's rows into fresh device arrays NOW: ``_decode`` is
+        # jitted with donate_argnums, so the current cache buffers are
+        # deleted by the next decode step — a bare reference would be read
+        # after free on the transfer thread.  The slices are small
+        # device-side copies; the expensive device->host transfer still
+        # happens on the pool thread.
         flat_big, _ = jax.tree_util.tree_flatten_with_path(self.caches)
-        for i, (path, leaf) in enumerate(flat_big):
+        rows = []
+        for path, leaf in flat_big:
             ax = self._batch_axis(path)
             idx = [slice(None)] * leaf.ndim
             idx[ax] = slot
-            self.host.put(f"slot{rid}/{i}", np.asarray(leaf[tuple(idx)]))
+            rows.append(leaf[tuple(idx)])
+        for r in rows:
+            r.block_until_ready()
+        return rows
+
+    def _offload_write(self, rid: int, rows):
+        for i, row in enumerate(rows):
+            self.host.put(f"slot{rid}/{i}", np.asarray(row))
 
     def restore_slot(self, slot: int, rid: int):
         """KV-load: bring an offloaded request's rows back into a slot."""

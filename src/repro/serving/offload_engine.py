@@ -1,0 +1,282 @@
+"""Offloaded continuous-batching serving engine: the PIPO pipeline under a
+serving workload.
+
+Where ``ServingEngine`` keeps every parameter resident, this engine keeps
+only the embedding/final-norm on device; each transformer layer's weights
+live as ONE merged buffer (+manifest) on the host or disk tier
+(``TieredWeightStore``, shared with ``core.engine.PipelinedLM``) and
+stream through the 3-thread ``ThreadPool`` + ``PipelineScheduler`` per
+decode step.  The per-layer KV cache lives in host memory and moves as
+``KV_LOAD``/``KV_SAVE`` pipeline tasks, so the repo can serve models whose
+weights + KV exceed device memory — the paper's headline scenario.
+
+Numerics are *identical* to the resident engine: both run the same
+``models.layers.apply_layer`` / ``embed_tokens`` / ``lm_head_argmax``
+functions on params from the same ``model.init`` seed, so decoded tokens
+match exactly (asserted in tests/test_serving_offload.py).
+
+Pipeline modes (pick with ``pipeline=``):
+  * "performance" — preload layer j+1's weights during layer j's compute;
+    highest throughput, two layers resident (default).
+  * "memory"      — single layer resident, KV-save synchronized; lowest
+    device footprint.
+  * "sequential"  — FlexGen-like full serialization; baseline for the
+    utilization benchmark (Fig. 9 analogue in benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, LayerSpec
+from repro.core.offload import DeviceStore, DiskStore
+from repro.core.pipeline import PipelineScheduler, ThreadPool
+from repro.core.tasks import Trace
+from repro.core.transfer import TieredWeightStore
+from repro.models import Dist, build_model
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serving.base import Request, SlotEngineBase
+
+__all__ = ["Request", "OffloadedServingEngine"]
+
+
+@dataclass
+class _Unit:
+    """One schedulable layer: period ``p`` of pattern position ``q``
+    ('pat'), or remainder layer q ('rem')."""
+    group: str          # "pat" | "rem"
+    p: int              # period index (0 for rem)
+    q: int              # pattern / remainder position
+    spec: LayerSpec
+    key: str            # TieredWeightStore key
+
+
+class OffloadedServingEngine(SlotEngineBase):
+    def __init__(self, cfg: ModelConfig, *, b_max: int = 4,
+                 max_len: int = 256, seed: int = 0,
+                 placement: str = "host", pipeline: str = "performance",
+                 disk_root: str = "/tmp/pipo_serve_disk",
+                 block_bytes: int = 8 << 20, n_io_threads: int = 3,
+                 cold_reads: bool = False, sim_bw: Optional[float] = None):
+        assert cfg.rope_theta != 0 and not cfg.enc_dec and \
+            cfg.frontend != "embeds", \
+            "offloaded serving supports token-frontend rope decoder stacks"
+        self.trace = Trace()
+        pool = ThreadPool(3, self.trace)
+        super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=pool)
+        self.dist = Dist.local()
+        self.model = build_model(cfg)
+        self.pipeline_mode = pipeline
+        self.device = DeviceStore()
+        self.disk = DiskStore(disk_root)
+        self.weights = TieredWeightStore(
+            placement=placement, host=self.host, device=self.device,
+            disk=self.disk, block_bytes=block_bytes,
+            n_io_threads=n_io_threads, cold_reads=cold_reads, sim_bw=sim_bw)
+        params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
+        self.units: List[_Unit] = []
+        self._split_params(params)
+        self._kv_init()
+        self.sched = PipelineScheduler(len(self.units), pipeline, pool=pool,
+                                       trace=self.trace)
+        self._jit_units()
+
+    # ---- weight tiering -----------------------------------------------------
+    def _split_params(self, params):
+        """Embeddings/final norm stay on device (small, needed every step);
+        each layer's params merge into one tiered buffer."""
+        self.resident = {
+            "embed": jax.device_put(params["embed"]),
+            "final_norm": jax.device_put(params["final_norm"]),
+        }
+        cfg = self.cfg
+        for p in range(cfg.num_periods):
+            for q, spec in enumerate(cfg.pattern):
+                key = f"u[{p}][{q}]"
+                tensors = {name: np.asarray(leaf[p])
+                           for name, leaf in params["pat"][q].items()}
+                self.weights.put(key, tensors)
+                self.units.append(_Unit("pat", p, q, spec, key))
+        for q, spec in enumerate(cfg.remainder):
+            key = f"rem[{q}]"
+            tensors = {name: np.asarray(leaf)
+                       for name, leaf in params["rem"][q].items()}
+            self.weights.put(key, tensors)
+            self.units.append(_Unit("rem", 0, q, spec, key))
+
+    # ---- host KV ------------------------------------------------------------
+    def _kv_init(self):
+        """Per-unit host-resident cache arrays (the b_max decode cache the
+        resident engine keeps on device, spread over host RAM here)."""
+        struct, kinds = T.cache_struct(self.cfg, self.b_max, self.max_len)
+        self.kv: List[Dict[str, np.ndarray]] = []
+        self.kv_kinds: List[Dict[str, str]] = []
+        for u in self.units:
+            sds = struct[u.group][u.q]
+            shapes = {n: (s.shape[1:] if u.group == "pat" else s.shape, s.dtype)
+                      for n, s in sds.items()}
+            self.kv.append({n: np.zeros(sh, dt) for n, (sh, dt) in
+                            shapes.items()})
+            self.kv_kinds.append(dict(kinds[u.group][u.q]))
+
+    # ---- jitted per-unit compute --------------------------------------------
+    def _jit_units(self):
+        cfg, dist = self.cfg, self.dist
+        self._decode_fns = {}
+        self._prefill_fns = {}
+        for j, u in enumerate(self.units):
+            sig = (u.group, u.q)
+            if sig in self._decode_fns:
+                continue
+            spec, kinds = u.spec, self.kv_kinds[j]
+
+            def decode_fn(w, x, cache, pos, angles, spec=spec, kinds=kinds):
+                ctx = L.Ctx(cfg=cfg, dist=dist, mode="decode", angles=angles,
+                            pos=pos, batch_size=x.shape[0])
+                x, new_cache, _ = L.apply_layer(w, x, ctx, cache, spec)
+                # gather only the newly written sequence rows so KV_SAVE
+                # ships (b, 1, ...) instead of the whole cache
+                rows = {}
+                for name, kind in kinds.items():
+                    leaf = new_cache[name]
+                    if kind == "kv":
+                        idx = pos.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                        rows[name] = jnp.take_along_axis(
+                            leaf, idx.astype(jnp.int32), axis=1)
+                    else:
+                        rows[name] = leaf
+                return x, rows
+
+            def prefill_fn(w, x, angles, spec=spec):
+                ctx = L.Ctx(cfg=cfg, dist=dist, mode="prefill", angles=angles,
+                            cache_len=self.max_len, batch_size=x.shape[0])
+                x, new_cache, _ = L.apply_layer(w, x, ctx, None, spec)
+                return x, new_cache
+
+            self._decode_fns[sig] = jax.jit(decode_fn)
+            self._prefill_fns[sig] = jax.jit(prefill_fn)
+
+        def embed_fn(emb_p, tok, mode):
+            ctx = L.Ctx(cfg=cfg, dist=dist, mode=mode, batch_size=tok.shape[0])
+            return L.embed_tokens(emb_p, tok, ctx)
+
+        def head_fn(emb_p, fn_p, x):
+            ctx = L.Ctx(cfg=cfg, dist=dist, mode="decode",
+                        batch_size=x.shape[0])
+            x = L.rms_norm(x, fn_p["scale"], cfg.norm_eps)
+            return L.lm_head_argmax(emb_p, x[:, -1:], ctx)
+
+        self._embed = jax.jit(embed_fn, static_argnums=(2,))
+        self._head = jax.jit(head_fn)
+
+    # ---- PipelineScheduler callbacks ----------------------------------------
+    def is_mha(self, j: int) -> bool:
+        """'Has streamed KV state' in scheduler terms — true for every
+        cached mixer (ATTN/MLA/SSM), so KV_LOAD/KV_SAVE are scheduled."""
+        return bool(self.kv_kinds[j])
+
+    def load_weights(self, j: int):
+        return self.weights.load(self.units[j].key)
+
+    def release_weights(self, j: int, handle):
+        del handle  # device arrays freed by GC; tier stores unaffected
+
+    def load_kv(self, i: int, j: int):
+        if self._phase != "decode":
+            return None                       # prefill builds fresh caches
+        t0 = time.perf_counter()
+        dev = {n: jax.device_put(a) for n, a in self.kv[j].items()}
+        for a in dev.values():
+            a.block_until_ready()
+        # KV crosses the same simulated link as the weights
+        self.weights.sim_floor(sum(a.nbytes for a in self.kv[j].values()), t0)
+        return dev
+
+    def save_kv(self, i: int, j: int, new_kv):
+        phase, payload, meta = new_kv
+        host_kv, kinds = self.kv[j], self.kv_kinds[j]
+        if phase == "prefill":
+            slot = meta
+            for name, leaf in payload.items():
+                host_kv[name][slot] = np.asarray(leaf[0])
+        else:
+            active, pos = meta
+            rows = {name: np.asarray(leaf) for name, leaf in payload.items()}
+            for name, kind in kinds.items():
+                if kind == "kv":
+                    for s in active:
+                        host_kv[name][s, pos[s]] = rows[name][s, 0]
+                else:
+                    for s in active:
+                        host_kv[name][s] = rows[name][s]
+
+    def compute(self, i: int, j: int, x, weights, kv):
+        u = self.units[j]
+        sig = (u.group, u.q)
+        if self._phase == "prefill":
+            x, cache1 = self._prefill_fns[sig](weights, x, self._angles)
+            return x, ("prefill", cache1, self._slot)
+        x, rows = self._decode_fns[sig](weights, x, kv, self._pos_dev,
+                                        self._angles)
+        return x, ("decode", rows, (self._active, self._pos_snap))
+
+    def finalize(self, i: int, x):
+        tok = self._head(self.resident["embed"], self.resident["final_norm"],
+                         x)
+        return np.asarray(tok)
+
+    # ---- SlotEngineBase compute hooks ---------------------------------------
+    def _prefill_into_slot(self, slot: int, req: Request) -> int:
+        self._phase = "prefill"
+        self._slot = slot
+        s = len(req.prompt)
+        positions = jnp.arange(s)
+        self._angles = T._angles(self.cfg, positions)
+        x0 = self._embed(self.resident["embed"],
+                         jnp.asarray(req.prompt)[None], "prefill")
+        toks = self.sched.generate(self, lambda i: x0, 1)
+        return int(toks[-1][0])
+
+    def _decode_active(self, active: List[int]) -> np.ndarray:
+        self._phase = "decode"
+        self._active = list(active)
+        self._pos_snap = self.pos.copy()
+        self._pos_dev = jnp.asarray(self.pos)
+        self._angles = T._angles(self.cfg, self._pos_dev[:, None])
+        x0 = self._embed(self.resident["embed"],
+                         jnp.asarray(self.tokens)[:, None], "decode")
+        toks = self.sched.generate(self, lambda i: x0, 1)
+        return toks[-1]
+
+    # ---- slot spill/restore (host<->host; rows already offloaded) -----------
+    def _offload_snapshot(self, slot: int):
+        return slot
+
+    def _offload_write(self, rid: int, slot: int):
+        # KV already lives on host: the spill is a row copy out of the shared
+        # decode cache so the slot can be reused while rid is parked.
+        for j, host_kv in enumerate(self.kv):
+            for name, arr in host_kv.items():
+                self.host.put(f"slot{rid}/{j}/{name}", arr[slot].copy())
+
+    def restore_slot(self, slot: int, rid: int):
+        for j, host_kv in enumerate(self.kv):
+            for name, arr in host_kv.items():
+                arr[slot] = self.host.get(f"slot{rid}/{j}/{name}")
+
+    # ---- lifecycle / introspection ------------------------------------------
+    def pipeline_report(self):
+        """Per-task-type busy time, compute-thread utilization and bubble
+        accounting derived from the Trace (paper Fig. 8/9 analogue)."""
+        return self.trace.report()
+
+    def shutdown(self):
+        super().shutdown()
+        self.sched.shutdown()
+        self._kv_pool.shutdown()

@@ -1,6 +1,30 @@
+import os
+
 import pytest
+
+# persistent XLA compilation cache: the suite is compile-bound on CPU, so
+# repeat runs (local dev loops, warm CI caches) skip most of the work.
+# Opt out with JAX_COMPILATION_CACHE_DIR="".
+os.environ.setdefault("JAX_COMPILATION_CACHE_DIR",
+                      "/tmp/pipo_jax_compile_cache")
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow (model-smoke matrix, "
+                          "subprocess/e2e, sweeps)")
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers",
                             "slow: long-running (subprocess / e2e) tests")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -1,0 +1,66 @@
+"""Deterministic fake model for PipelineScheduler tests.
+
+Used with ``core.pipeline.VirtualPool``: every task executes synchronously
+(single-threaded, deterministic call order) while its start/end times are
+assigned on a virtual timeline from the fixed per-type COSTS below —
+ordering invariants are asserted on ``Trace`` virtual timestamps, never on
+wall-clock, so there are no sleeps and no timing races.
+"""
+from repro.core.pipeline import PipelineScheduler, VirtualPool
+from repro.core.tasks import TaskType
+
+# virtual durations: weight loads dominate (the offloading regime), KV
+# transfers cheaper than compute, saves slower than loads (write path)
+COSTS = {TaskType.WEIGHT_LOAD: 10.0, TaskType.COMPUTE: 4.0,
+         TaskType.KV_LOAD: 2.0, TaskType.KV_SAVE: 3.0}
+
+
+def cost_fn(task):
+    return COSTS[task.kind]
+
+
+class FakeModel:
+    """Layer stack [mha, mlp] * n_layers; records scheduler callbacks in
+    call order and validates producer->consumer handles."""
+
+    def __init__(self, n_layers: int = 3):
+        self.n = 2 * n_layers
+        self.calls = []
+
+    def is_mha(self, j):
+        return j % 2 == 0
+
+    def load_weights(self, j):
+        self.calls.append(("w", -1, j))
+        return f"w{j}"
+
+    def release_weights(self, j, handle):
+        self.calls.append(("rel", -1, j))
+
+    def load_kv(self, i, j):
+        self.calls.append(("kv_load", i, j))
+        return f"kv{i},{j}"
+
+    def save_kv(self, i, j, kv):
+        self.calls.append(("kv_save", i, j))
+
+    def compute(self, i, j, x, w, kv):
+        assert w == f"w{j}", (w, j)
+        if self.is_mha(j):
+            assert kv == f"kv{i},{j}", (kv, i, j)
+        self.calls.append(("compute", i, j))
+        return x + 1, ("new_kv" if self.is_mha(j) else None)
+
+    def finalize(self, i, x):
+        return x
+
+
+def run_virtual(mode: str, n_layers: int = 3, iters: int = 3):
+    """Drive the real scheduler over the fake model on a virtual clock;
+    returns (model, trace, outputs)."""
+    model = FakeModel(n_layers)
+    pool = VirtualPool(3, cost_fn=cost_fn)
+    sched = PipelineScheduler(model.n, mode, pool=pool, trace=pool.trace)
+    outs = sched.generate(model, lambda i: 0, iters)
+    sched.shutdown()
+    return model, pool.trace, outs

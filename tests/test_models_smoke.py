@@ -14,6 +14,12 @@ from repro.models import transformer as T
 KEY = jax.random.PRNGKey(42)
 DIST = Dist.local()
 
+# fast default: one dense-GQA arch + one SSM arch; the rest of the matrix
+# runs with --runslow (CI full job / weekly)
+FAST_ARCHS = ("tinyllama-1.1b", "mamba2-1.3b")
+ARCHS = [a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+         for a in list_archs()]
+
 
 def _batch(cfg, b, s, key):
     batch = {"labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
@@ -27,7 +33,7 @@ def _batch(cfg, b, s, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_finite(arch):
     cfg = scaled_down(ASSIGNED[arch])
     m = build_model(cfg)
@@ -38,7 +44,7 @@ def test_train_step_finite(arch):
     assert 2.0 < float(loss) < 12.0, (arch, float(loss))  # ~ln(V) at init
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_decode_consistency(arch):
     """Hidden state after [prefill(s) + decode(token s)] must match the
     full-(s+1) prefill — validates every cache type's semantics."""
@@ -88,7 +94,7 @@ def test_prefill_decode_consistency(arch):
     assert rel < 5e-4, (arch, rel)
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", ARCHS)
 def test_output_shapes(arch):
     cfg = scaled_down(ASSIGNED[arch])
     m = build_model(cfg)

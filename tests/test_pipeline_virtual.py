@@ -1,0 +1,164 @@
+"""PipelineScheduler ordering invariants on the virtual clock.
+
+Unlike tests/test_pipeline.py (real threads + sleeps), these drive the
+real scheduler through ``VirtualPool``: execution is single-threaded and
+deterministic, timestamps are virtual, and every assertion is on Trace
+event order — the invariants hold on every run by construction, not
+probabilistically.
+"""
+import pytest
+
+from fake_model import COSTS, run_virtual
+from repro.core.tasks import TaskType
+
+
+def _by_name(trace):
+    """name -> list of events in submission order (w[j]/c[i,j] repeat
+    across iterations; kv/sv names are unique per (i, j))."""
+    out = {}
+    for e in trace.events():
+        out.setdefault(e.name, []).append(e)
+    return out
+
+
+def _one(ev_map, name):
+    evs = ev_map[name]
+    assert len(evs) == 1, f"{name} expected once, got {len(evs)}"
+    return evs[0]
+
+
+@pytest.mark.parametrize("mode", ["performance", "memory", "sequential"])
+def test_virtual_run_is_deterministic(mode):
+    runs = []
+    for _ in range(2):
+        model, trace, outs = run_virtual(mode, n_layers=3, iters=3)
+        assert outs == [model.n] * 3
+        runs.append(([(e.kind, e.name, e.t_start, e.t_end, e.thread)
+                      for e in trace.events()], list(model.calls)))
+    assert runs[0] == runs[1], "virtual schedule not reproducible"
+
+
+@pytest.mark.parametrize("mode", ["performance", "memory", "sequential"])
+def test_all_tasks_execute_in_every_mode_virtual(mode):
+    model, trace, outs = run_virtual(mode, n_layers=3, iters=2)
+    ev = _by_name(trace)
+    for i in range(2):
+        for j in range(model.n):
+            assert [e for e in ev[f"c[{i},{j}]"]], (i, j)
+            if model.is_mha(j):
+                assert f"kv[{i},{j}]" in ev
+                assert f"sv[{i},{j}]" in ev
+
+
+def test_performance_mode_preloads_next_layer_during_compute():
+    """Performance invariant (§3.1.2): while layer j computes in iteration
+    i, layer j+1's weight load is already in flight — the load's virtual
+    interval overlaps the compute's."""
+    model, trace, _ = run_virtual("performance", n_layers=4, iters=2)
+    ev = _by_name(trace)
+    n = model.n
+    for i in range(2):
+        for j in range(n - 1):
+            c = _one(ev, f"c[{i},{j}]")
+            loads = ev[f"w[{j + 1}]"]
+            assert any(w.t_start < c.t_end and w.t_end > c.t_start
+                       for w in loads), \
+                f"w[{j+1}] not in flight during c[{i},{j}]"
+
+
+def test_performance_mode_weight_load_starts_at_compute_start():
+    """Stronger form: the preload is submitted *before* the compute task
+    runs, so its virtual start is <= the compute's start."""
+    model, trace, _ = run_virtual("performance", n_layers=3, iters=1)
+    ev = _by_name(trace)
+    for j in range(model.n - 1):
+        c = _one(ev, f"c[0,{j}]")
+        w = ev[f"w[{j + 1}]"][0]
+        assert w.t_start <= c.t_start
+
+
+def test_kv_save_completes_before_next_iteration_load_all_modes():
+    """KV-save(i-1, j) must complete before KV-load(i, j) starts — the
+    paper's advanced-by-one-layer completion check (§3.2.1)."""
+    for mode in ("performance", "memory", "sequential"):
+        model, trace, _ = run_virtual(mode, n_layers=3, iters=3)
+        ev = _by_name(trace)
+        for i in range(1, 3):
+            for j in range(model.n):
+                if not model.is_mha(j):
+                    continue
+                save = _one(ev, f"sv[{i - 1},{j}]")
+                load = _one(ev, f"kv[{i},{j}]")
+                assert save.t_end <= load.t_start, \
+                    (mode, i, j, save.t_end, load.t_start)
+
+
+def test_memory_mode_holds_single_layer_resident():
+    """Memory invariant: layer j+1's weight load starts only after layer
+    j's compute finished (previous layer's memory released) — never two
+    weight buffers in flight."""
+    model, trace, _ = run_virtual("memory", n_layers=3, iters=2)
+    ev = _by_name(trace)
+    for i in range(2):
+        for j in range(model.n - 1):
+            c = _one(ev, f"c[{i},{j}]")
+            w = ev[f"w[{j + 1}]"][i]          # i-th load = iteration i
+            assert w.t_start >= c.t_end, \
+                f"memory mode preloaded w[{j+1}] during c[{i},{j}]"
+    # weight loads never overlap each other either
+    loads = sorted([e for e in trace.events() if e.kind == "weight_load"],
+                   key=lambda e: e.t_start)
+    for a, b in zip(loads, loads[1:]):
+        assert b.t_start >= a.t_end
+
+
+def test_memory_mode_syncs_kv_save():
+    """Memory invariant: each KV-save completes before the pipeline moves
+    on (next task on the main thread starts after the save ends)."""
+    model, trace, _ = run_virtual("memory", n_layers=3, iters=2)
+    ev = _by_name(trace)
+    for i in range(2):
+        for j in range(model.n):
+            if not model.is_mha(j):
+                continue
+            save = _one(ev, f"sv[{i},{j}]")
+            nxt = (f"c[{i},{j + 1}]" if j + 1 < model.n
+                   else (f"c[{i + 1},0]" if i + 1 < 2 else None))
+            if nxt is None:
+                continue
+            nxt_ev = _one(ev, nxt)
+            assert save.t_end <= nxt_ev.t_start, (i, j)
+
+
+def test_sequential_mode_fully_serializes():
+    """Sequential baseline: no two task intervals overlap at all (FlexGen
+    device-level sync)."""
+    model, trace, _ = run_virtual("sequential", n_layers=3, iters=2)
+    evs = sorted(trace.events(), key=lambda e: (e.t_start, e.t_end))
+    for a, b in zip(evs, evs[1:]):
+        assert b.t_start >= a.t_end, (a.name, b.name)
+
+
+def test_performance_beats_sequential_on_virtual_makespan():
+    """The pipeline's raison d'etre, asserted on virtual time: overlapping
+    transfers with compute strictly shrinks the makespan."""
+    _, t_perf, _ = run_virtual("performance", n_layers=4, iters=3)
+    _, t_seq, _ = run_virtual("sequential", n_layers=4, iters=3)
+    assert t_perf.span() < t_seq.span()
+    assert (t_perf.busy_fraction("compute")
+            > t_seq.busy_fraction("compute"))
+
+
+def test_trace_report_accounts_busy_time():
+    model, trace, _ = run_virtual("sequential", n_layers=2, iters=1)
+    rep = trace.report()
+    # sequential: span is exactly the sum of all task durations
+    n_mha = sum(1 for j in range(model.n) if model.is_mha(j))
+    expect = (model.n * (COSTS[TaskType.WEIGHT_LOAD]
+                         + COSTS[TaskType.COMPUTE])
+              + n_mha * (COSTS[TaskType.KV_LOAD] + COSTS[TaskType.KV_SAVE]))
+    assert abs(rep["span_s"] - expect) < 1e-9
+    assert abs(rep["per_kind"]["compute"]["busy_s"]
+               - model.n * COSTS[TaskType.COMPUTE]) < 1e-9
+    assert rep["bubble_s"] > 0
+    assert abs(rep["compute_util"] + rep["bubble_frac"] - 1.0) < 1e-9

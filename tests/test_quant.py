@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.quant.int4 import (dequantize_int4, pack_int4, quantize_int4,

@@ -1,0 +1,135 @@
+"""Serving offload round-trips: OffloadedServingEngine (weights streamed
+through the PIPO pipeline) must match the resident ServingEngine token for
+token, and slot offload -> restore -> resume must be lossless."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core.pipeline import ThreadPool
+from repro.serving import OffloadedServingEngine, Request, ServingEngine
+
+
+def _cfg():
+    return scaled_down(get_config("tinyllama-1.1b"))
+
+
+def _prompts(cfg, n=4, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    return [rng.integers(0, cfg.vocab_size, (6 + i,)).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve(eng, prompts, max_new=5):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new=max_new))
+    done = eng.run()
+    out = {r.rid: r.out for r in done}
+    if isinstance(eng, OffloadedServingEngine):
+        eng.shutdown()
+    return out
+
+
+@pytest.fixture(scope="module")
+def resident_tokens():
+    cfg = _cfg()
+    return _serve(ServingEngine(cfg, b_max=2, max_len=64), _prompts(cfg))
+
+
+def test_offload_decode_parity_host(resident_tokens):
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline="performance")
+    assert _serve(eng, _prompts(cfg)) == resident_tokens
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["memory", "sequential"])
+def test_offload_decode_parity_modes(resident_tokens, mode):
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline=mode)
+    assert _serve(eng, _prompts(cfg)) == resident_tokens
+
+
+@pytest.mark.slow
+def test_offload_decode_parity_disk(resident_tokens, tmp_path):
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="disk", pipeline="performance",
+                                 disk_root=str(tmp_path / "weights"))
+    assert _serve(eng, _prompts(cfg)) == resident_tokens
+
+
+def test_slot_offload_restore_resume_parity():
+    """Preempt a mid-flight request (KV spilled to host), resume it via
+    restore_slot, and the full token stream must equal an uninterrupted
+    run — the slot-granularity PIPO KV round-trip."""
+    cfg = _cfg()
+    prompt = _prompts(cfg, 1)[0]
+
+    ref = ServingEngine(cfg, b_max=2, max_len=64)
+    ref.submit(Request(rid=0, prompt=prompt.copy(), max_new=8))
+    uninterrupted = ref.run()[0].out
+
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64, placement="host")
+    eng.submit(Request(rid=0, prompt=prompt.copy(), max_new=8))
+    eng._admit()
+    done = []
+    for _ in range(3):
+        eng._decode_step(done)
+    assert not done
+    eng.preempt_slot(0)
+    assert eng.slots[0] is None and eng.queue     # parked, back in queue
+    done = eng.run()
+    eng.shutdown()
+    assert done[0].out == uninterrupted
+    assert eng.stats["slot_restores"] == 1
+
+
+def test_resident_async_slot_offload_roundtrip():
+    """ServingEngine with a transfer pool spills finished slots as KV_SAVE
+    tasks (overlapped), and the spilled rows still restore exactly.
+
+    The two requests finish on different steps, so the first spill is
+    followed by further decode steps whose jitted _decode donates the old
+    cache buffers — the snapshot must not alias them (read-after-free on
+    the pool thread otherwise)."""
+    cfg = _cfg()
+    pool = ThreadPool(2)
+    eng = ServingEngine(cfg, b_max=2, max_len=48, kv_pool=pool)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=7, prompt=rng.integers(
+        0, cfg.vocab_size, (8,)).astype(np.int32), max_new=3))
+    eng.submit(Request(rid=8, prompt=rng.integers(
+        0, cfg.vocab_size, (9,)).astype(np.int32), max_new=12))
+    done = eng.run()
+    eng.shutdown()                 # drain in-flight slot saves
+    pool.shutdown()
+    assert len(done) == 2
+    assert any(k.startswith("slot7/") for k in eng.host.keys())
+    assert any(k.startswith("slot8/") for k in eng.host.keys())
+    before = jax.tree_util.tree_map(np.asarray, eng.caches)
+    eng.restore_slot(0, 7)
+    # restored rows equal the rows present when the request finished
+    flat, _ = jax.tree_util.tree_flatten_with_path(eng.caches)
+    for i, (path, leaf) in enumerate(flat):
+        ax = eng._batch_axis(path)
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = 0
+        np.testing.assert_array_equal(
+            np.asarray(leaf[tuple(idx)]), eng.host.get(f"slot7/{i}"))
+
+
+def test_offload_pipeline_report_populated():
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64, placement="host")
+    _serve(eng, _prompts(cfg, 2), max_new=3)
+    rep = eng.pipeline_report()
+    assert rep["span_s"] > 0
+    assert rep["per_kind"]["compute"]["count"] > 0
+    assert rep["per_kind"]["weight_load"]["count"] > 0
+    assert rep["per_kind"]["kv_load"]["count"] > 0
+    assert rep["per_kind"]["kv_save"]["count"] > 0
+    assert 0 < rep["compute_util"] <= 1
+    assert abs(rep["compute_util"] + rep["bubble_frac"] - 1.0) < 1e-9
