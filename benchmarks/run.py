@@ -193,25 +193,42 @@ def fig12_moe():
 
 def serving_offload():
     """Serving through the PIPO pipeline (tentpole scenario): continuous-
-    batching decode with disk-tier weights, performance vs sequential mode
-    on the same config — the Fig. 9 utilization gap at serving granularity."""
+    batching decode under the deterministic ``sim_bw`` link floor,
+    comparing four configurations on the same model:
+
+      sequential  — FlexGen-like full serialization (baseline)
+      cold        — performance pipeline, scheduler drained per decode
+                    step (the PR-1 behavior: every step pays a cold w[0])
+      warm        — performance + cross-step preload (step t+1's first
+                    weight/KV loads submitted during step t's tail)
+      warm_int4   — warm + INT4 weight streaming (~1/4 the bytes over
+                    the same link; dequant overlapped on a pool thread)
+
+    sim_bw rationale: on this CPU-only container transfers are memcpys
+    whose speed swings with CPU contention and page-cache state, which
+    would make the overlap gap pure noise.  The floor sleeps out the
+    remainder like a DMA engine (GIL released), so sequential pays
+    (weights + KV + compute) per layer while the pipeline hides the link
+    time — the paper's transfer-bound serving regime, deterministic run
+    to run.  The shape (d=512, ff=2048, b=16) keeps the link
+    weight-dominated — the PIPO weight-offload regime, and the one where
+    INT4's byte reduction shows (KV streams FP32 either way, so a
+    KV-dominated link would mask it)."""
     from repro.serving import OffloadedServingEngine, Request
-    cfg = _bench_cfg(layers=6, d=256, ff=1024)
-    # sim_bw puts a fixed-bandwidth floor under every weight/KV transfer
-    # (TieredWeightStore.sim_bw): on this CPU-only container transfers are
-    # memcpys whose speed swings with CPU contention and page-cache state,
-    # which would make the overlap gap pure noise.  The floor sleeps out
-    # the remainder like a DMA engine, so sequential pays
-    # (weights + KV + compute) per layer while performance mode hides the
-    # link time — the paper's transfer-bound serving regime, deterministic
-    # run to run.  Batch 64 is the offloaded-throughput operating point
-    # (FlexGen-style): decode compute is negligible at small batch.
+    cfg = _bench_cfg(layers=6, d=512, ff=2048)
+    variants = (
+        ("sequential", dict(pipeline="sequential")),
+        ("cold", dict(pipeline="performance", warm=False)),
+        ("warm", dict(pipeline="performance", warm=True)),
+        ("warm_int4", dict(pipeline="performance", warm=True,
+                           quant="int4")),
+    )
     results = {}
-    b_max = 64
-    for mode in ("sequential", "performance"):
+    b_max = 16
+    for name, kw in variants:
         eng = OffloadedServingEngine(
-            cfg, b_max=b_max, max_len=96, placement="host", pipeline=mode,
-            sim_bw=0.3e9)
+            cfg, b_max=b_max, max_len=96, placement="host", sim_bw=0.3e9,
+            **kw)
         rng = np.random.default_rng(0)
         for i in range(b_max):
             eng.submit(Request(rid=i, prompt=rng.integers(
@@ -221,21 +238,26 @@ def serving_offload():
         eng._decode_step(done)           # warm the jit caches untimed
         t0 = time.perf_counter()
         n0 = eng.stats["tokens_out"]
+        s0 = eng.stats["decode_steps"]
         while any(s is not None for s in eng.slots):
             eng._decode_step(done)
         dt = time.perf_counter() - t0
         ntok = eng.stats["tokens_out"] - n0
+        nstep = eng.stats["decode_steps"] - s0
         rep = eng.pipeline_report()
         eng.shutdown()
-        results[mode] = (ntok / dt, rep)
-        emit(f"serving_offload_{mode}", dt / max(1, ntok) * 1e6,
-             f"decode_tok_s={ntok / dt:.2f};util={rep['compute_util']:.2f};"
+        results[name] = (ntok / dt, dt / max(1, nstep), rep)
+        emit(f"serving_offload_{name}", dt / max(1, nstep) * 1e6,
+             f"decode_tok_s={ntok / dt:.2f};"
+             f"step_ms={dt / max(1, nstep) * 1e3:.1f};"
+             f"util={rep['compute_util']:.2f};"
              f"bubble={rep['bubble_frac']:.2f}")
-    speedup = results["performance"][0] / max(1e-9, results["sequential"][0])
-    util_gain = (results["performance"][1]["compute_util"]
-                 - results["sequential"][1]["compute_util"])
     emit("serving_offload_speedup", 0.0,
-         f"decode_speedup={speedup:.2f}x;util_gain={util_gain:+.2f}")
+         f"perf_vs_seq={results['warm'][0] / max(1e-9, results['sequential'][0]):.2f}x;"
+         f"warm_vs_cold={results['warm'][0] / max(1e-9, results['cold'][0]):.2f}x;"
+         f"int4_vs_fp32={results['warm_int4'][0] / max(1e-9, results['warm'][0]):.2f}x;"
+         f"warm_step_ms={results['warm'][1] * 1e3:.1f};"
+         f"cold_step_ms={results['cold'][1] * 1e3:.1f}")
 
 
 def kernel_int4():
@@ -294,9 +316,30 @@ BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            serving_offload, kernel_int4, roofline]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    by_name = {b.__name__: b for b in BENCHES}
+    ap = argparse.ArgumentParser(
+        description="PIPO benchmark harness: one function per paper "
+                    "table/figure (see docs/BENCHMARKS.md for methodology "
+                    "and how to read the output)")
+    ap.add_argument("scenarios", nargs="*", metavar="scenario",
+                    help="scenario names to run (default: all; see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="list scenarios and exit")
+    args = ap.parse_args(argv)
+    if args.list:
+        for b in BENCHES:
+            doc = (b.__doc__ or "").strip().splitlines()[0]
+            print(f"{b.__name__:20s} {doc}")
+        return
+    unknown = [n for n in args.scenarios if n not in by_name]
+    if unknown:
+        ap.error(f"unknown scenario(s) {unknown}; see --list")
+    benches = [by_name[n] for n in args.scenarios] if args.scenarios \
+        else BENCHES
     print("name,us_per_call,derived")
-    for b in BENCHES:
+    for b in benches:
         t0 = time.perf_counter()
         try:
             b()

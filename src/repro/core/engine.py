@@ -242,6 +242,13 @@ class PipelinedLM:
             return {}
         return self._load_key(u.key)
 
+    def weight_nbytes(self, j: int) -> int:
+        """Bytes unit j's base WEIGHT_LOAD moves (trace byte accounting)."""
+        u = self.units[j]
+        if u.kind == "moe" and self.cfg.moe.num_shared == 0:
+            return 0
+        return self.weights.nbytes(u.key)
+
     def release_weights(self, j: int, handle):
         del handle  # device arrays freed by GC; stores unaffected
 
@@ -298,6 +305,7 @@ class PipelinedLM:
         for e in union:
             t = Task(TaskType.WEIGHT_LOAD, f"exp[{u.layer}][{e}]",
                      lambda e=e: self._load_key(f"exp[{u.layer}][{e}]"))
+            t.nbytes = self.weights.nbytes(f"exp[{u.layer}][{e}]")
             self._pool.submit(t)
             tasks.append((e, t))
         out = jnp.zeros_like(x)
@@ -324,8 +332,14 @@ class PipelinedLM:
         b, s = prompt.shape
         assert b == self.batch and s + gen_len <= self.max_len
         cfg = self.cfg
+        # warm: the scheduler persists across the per-token generate()
+        # calls below, pre-submitting token t+1's first weight/KV loads
+        # during token t's tail compute (performance mode only).  load_kv
+        # here is phase-independent (prefill consumes KV too), so warm
+        # preloads are always valid; saves drain at shutdown().
         sched = PipelineScheduler(len(self.units), self.pipeline_mode,
-                                  trace=self.trace)
+                                  trace=self.trace,
+                                  warm=self.pipeline_mode == "performance")
         self._pool = sched.pool
         t0 = time.perf_counter()
         outs = []

@@ -18,6 +18,13 @@ Scheduling modes:
     next save launches (paper's memory-efficient pipeline);
   * "sequential"   — FlexGen-like device-level sync baseline: every task
     completes before the next starts (ablation baseline, Fig. 9).
+
+Warm pipeline (``PipelineScheduler(warm=True)``, performance mode): the
+scheduler keeps its pending-task state alive *across* ``generate()``
+calls and pre-submits the next call's first weight/KV loads while the
+current call's tail layers compute — serving engines that drain the
+scheduler once per decode step get zero cold-start bubble per token
+(see docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -32,7 +39,13 @@ PIPELINE_MODES = ("performance", "memory", "sequential")
 
 
 class ThreadPool:
-    """3 transfer workers pulling from a two-level (priority) queue."""
+    """3 transfer workers pulling from a two-level (priority) queue.
+
+    Thread affinity: ``submit`` is called from the submitter (main)
+    thread and returns immediately — the task's ``fn`` executes later on
+    one of the pool's worker threads.  ``run_on_main`` executes the task
+    synchronously on the *caller's* thread (compute never enters the
+    pool).  ``shutdown`` blocks the caller until the workers exit."""
 
     def __init__(self, n_threads: int = 3, trace: Optional[Trace] = None):
         self.trace = trace or Trace()
@@ -47,6 +60,9 @@ class ThreadPool:
             t.start()
 
     def submit(self, task: Task, priority: int = 0) -> Task:
+        """Enqueue a task (submitter thread; non-blocking).  Lower
+        priority values run first; KV-saves use priority 1 so loads win
+        ties (paper §3.2.1)."""
         import time
         task.t_submit = time.perf_counter()
         with self._lock:
@@ -64,7 +80,8 @@ class ThreadPool:
             self._q.task_done()
 
     def run_on_main(self, task: Task) -> Task:
-        """Compute tasks execute on the caller (main) thread."""
+        """Compute tasks execute synchronously on the caller (main)
+        thread — blocking until the task body returns."""
         task.run()
         self.trace.add(task, "main")
         if task.error is not None:
@@ -72,6 +89,8 @@ class ThreadPool:
         return task
 
     def shutdown(self):
+        """Drain queued tasks and join the workers (caller thread;
+        blocking — sentinel priority 99 runs after all real work)."""
         for _ in self._threads:
             self._q.put((99, 1 << 30, None))
         for t in self._threads:
@@ -102,6 +121,9 @@ class VirtualPool:
         self._free = [0.0] * n_threads
 
     def submit(self, task: Task, priority: int = 0) -> Task:
+        """Run the task NOW on the caller thread (side effects are
+        immediate, single-threaded) while assigning its trace interval
+        on the virtual timeline's earliest-free worker."""
         task.t_submit = self.clock.now()
         task.run(self.clock)               # side effects happen now
         w = min(range(len(self._free)), key=lambda k: self._free[k])
@@ -142,7 +164,13 @@ class LayerTasks:
 class PipelineScheduler:
     """Algorithm 1.  The model supplies callbacks; the scheduler owns all
     ordering/synchronization decisions so they can be tested in isolation
-    (tests assert the event-order invariants).
+    (tests assert the event-order invariants on Trace timestamps).
+
+    Thread affinity: ``generate``/``drop_kv_preloads``/``drain_saves``/
+    ``shutdown`` run on the submitter (main) thread and may block on task
+    completion; the model's ``load_weights``/``load_kv``/``save_kv``
+    callbacks execute on transfer-pool threads and must be thread-safe;
+    ``compute``/``finalize``/``release_weights`` run on the main thread.
 
     Callbacks (all pure-ish, thread-safe):
       load_weights(j) -> device weights      (WEIGHT_LOAD)
@@ -151,21 +179,43 @@ class PipelineScheduler:
       save_kv(i, j, new_kv)                  (KV_SAVE)
       compute(i, j, x, weights, kv) -> (x, new_kv)   (COMPUTE, main thread)
       is_mha(j) -> bool
+      weight_nbytes(j) -> int                (optional; trace byte account)
+
+    Warm mode (``warm=True``, performance pipeline only): pending task
+    state persists *across* ``generate()`` calls.  At the tail of a call,
+    the first weight load (and first KV load) of the NEXT call is
+    pre-submitted so it overlaps the tail layers' compute — a serving
+    engine that drains the scheduler once per decode step then starts
+    every step with its first layer's transfers already resident instead
+    of paying a cold-start bubble per token.  Iteration indices become
+    global (monotonic across calls) so the KV save(i-1,j)-before-
+    load(i,j) check keeps working across call boundaries.
     """
 
     def __init__(self, num_layers: int, mode: str = "performance",
                  pool: Optional[ThreadPool] = None,
-                 trace: Optional[Trace] = None):
+                 trace: Optional[Trace] = None, warm: bool = False):
         assert mode in PIPELINE_MODES, mode
         self.n = num_layers
         self.mode = mode
         self.trace = trace or Trace()
         self.pool = pool or ThreadPool(3, self.trace)
         self._owns_pool = pool is None
+        # cross-call ("warm pipeline") state: preloading across generate()
+        # calls only makes sense in performance mode — memory mode's
+        # single-layer-resident invariant forbids a second in-flight load,
+        # and sequential is a full-serialization baseline by definition.
+        self.warm = bool(warm) and mode == "performance"
+        self._w_tasks: Dict[int, Task] = {}          # j -> pending load
+        self._kv_tasks: Dict[tuple, Task] = {}       # (i, j) -> pending load
+        self._save_tasks: Dict[tuple, Task] = {}     # (i, j) -> pending save
+        self._iter0 = 0                              # global iteration base
 
     # -- helpers ------------------------------------------------------------
-    def _submit(self, kind: TaskType, name: str, fn, priority=0) -> Task:
+    def _submit(self, kind: TaskType, name: str, fn, priority=0,
+                nbytes: int = 0) -> Task:
         t = Task(kind, name, fn)
+        t.nbytes = nbytes            # before submit: VirtualPool traces here
         self.pool.submit(t, priority)
         if self.mode == "sequential":
             t.wait()
@@ -177,22 +227,50 @@ class PipelineScheduler:
                 return k
         return None
 
+    # -- warm-pipeline maintenance (main thread) ----------------------------
+    def drop_kv_preloads(self):
+        """Discard pending cross-call KV preloads (main thread; blocks until
+        the in-flight loads finish so their host-side reads can't race the
+        caller's mutation).  Call before mutating KV state outside the
+        pipeline (e.g. a serving slot restore writes host KV directly) —
+        the preloaded device copies would be stale."""
+        for t in self._kv_tasks.values():
+            try:
+                t.wait()
+            except Exception:
+                pass                  # discarded anyway
+        self._kv_tasks.clear()
+
+    def drain_saves(self):
+        """Block (main thread) until every outstanding KV save has landed.
+        In warm mode saves are NOT drained per generate() call (that sync
+        is itself a bubble); callers that read or write KV storage outside
+        the pipeline must drain first."""
+        for t in self._save_tasks.values():
+            t.wait()
+        self._save_tasks.clear()
+
     # -- Algorithm 1 ----------------------------------------------------------
     def generate(self, model, x0, num_iterations: int):
         """Run ``num_iterations`` full passes over the layer stack (one per
         generated token); x0 is the initial activation provider:
-        callable i -> x input for iteration i."""
+        callable i -> x input for iteration i (call-local index).  Blocks
+        the calling (main) thread; compute runs here, transfers on the
+        pool.  Task/trace names use *global* iteration indices so events
+        from successive warm calls stay distinct."""
         n = self.n
-        w_tasks: Dict[int, Task] = {}
-        kv_tasks: Dict[tuple, Task] = {}
-        save_tasks: Dict[tuple, Task] = {}
+        w_tasks, kv_tasks, save_tasks = (self._w_tasks, self._kv_tasks,
+                                         self._save_tasks)
+        base = self._iter0
         outputs = []
+        nbytes_of = getattr(model, "weight_nbytes", None)
 
         def submit_weight(j):
             if j is not None and j < n and j not in w_tasks:
                 w_tasks[j] = self._submit(
                     TaskType.WEIGHT_LOAD, f"w[{j}]",
-                    lambda j=j: model.load_weights(j))
+                    lambda j=j: model.load_weights(j),
+                    nbytes=nbytes_of(j) if nbytes_of else 0)
 
         def submit_kv(i, j):
             if j is None or not model.is_mha(j):
@@ -202,66 +280,78 @@ class PipelineScheduler:
             # KV-save completion check, advanced one layer early (paper):
             # the save from iteration i-1, layer j must be done before we
             # load layer j's cache in iteration i.
-            prev_save = save_tasks.get((i - 1, j))
+            prev_save = save_tasks.pop((i - 1, j), None)
             if prev_save is not None:
                 prev_save.wait()
             kv_tasks[(i, j)] = self._submit(
                 TaskType.KV_LOAD, f"kv[{i},{j}]",
                 lambda i=i, j=j: model.load_kv(i, j))
 
-        for i in range(num_iterations):
-            x = x0(i)
+        for it in range(num_iterations):
+            gi = base + it                         # global iteration index
+            x = x0(it)
             for j in range(n):
                 # --- CallLoadData(i, j): ensure current loads in flight ----
                 submit_weight(j)                       # no-op if preloaded
-                submit_kv(i, j)                        # no-op if advanced
+                submit_kv(gi, j)                       # no-op if advanced
 
                 # --- SynchronizeLoadTask(i, j) -----------------------------
                 weights = w_tasks.pop(j).wait()
                 kv = None
                 if model.is_mha(j):
-                    kv = kv_tasks.pop((i, j)).wait()
+                    kv = kv_tasks.pop((gi, j)).wait()
 
                 if self.mode == "performance":
                     # Preload: the next weight load starts only after the
                     # previous one completed (= now), overlapping with this
-                    # layer's compute (paper §3.1.2).
+                    # layer's compute (paper §3.1.2).  At the stack tail a
+                    # warm scheduler preloads for the NEXT generate() call.
                     if j + 1 < n:
                         submit_weight(j + 1)
-                    elif i + 1 < num_iterations:
+                    elif it + 1 < num_iterations or self.warm:
                         submit_weight(0)
                     # KV-load advanced one MHA layer ahead (§3.1.2).
                     nm = self._next_mha(model, j)
                     if nm is not None:
-                        submit_kv(i, nm)
-                    elif i + 1 < num_iterations:
+                        submit_kv(gi, nm)
+                    elif it + 1 < num_iterations or self.warm:
                         fm = self._next_mha(model, -1)
-                        if fm is not None:
-                            submit_kv(i + 1, fm)
+                        # fm == n-1 would preload BEFORE this iteration's
+                        # save of that same layer is even submitted (the
+                        # save-before-load check can't see it): skip —
+                        # the next iteration loads it cold, correctly.
+                        if fm is not None and fm < n - 1:
+                            submit_kv(gi + 1, fm)
 
                 # --- Compute(i, j) on the main thread ----------------------
-                ct = Task(TaskType.COMPUTE, f"c[{i},{j}]",
-                          lambda: model.compute(i, j, x, weights, kv))
+                ct = Task(TaskType.COMPUTE, f"c[{gi},{j}]",
+                          lambda: model.compute(gi, j, x, weights, kv))
                 self.pool.run_on_main(ct)
                 x, new_kv = ct.result
 
                 # --- CallStoreCache(i, j) ----------------------------------
                 if model.is_mha(j) and new_kv is not None:
-                    st = self._submit(TaskType.KV_SAVE, f"sv[{i},{j}]",
-                                      lambda i=i, j=j, kv=new_kv:
-                                      model.save_kv(i, j, kv),
+                    st = self._submit(TaskType.KV_SAVE, f"sv[{gi},{j}]",
+                                      lambda gi=gi, j=j, kv=new_kv:
+                                      model.save_kv(gi, j, kv),
                                       priority=1)  # lower priority
-                    save_tasks[(i, j)] = st
+                    save_tasks[(gi, j)] = st
                     if self.mode in ("memory", "sequential"):
                         st.wait()
 
                 model.release_weights(j, weights)
-            outputs.append(model.finalize(i, x))
-        # drain outstanding saves
-        for t in save_tasks.values():
-            t.wait()
+            outputs.append(model.finalize(it, x))
+        self._iter0 = base + num_iterations
+        if not self.warm:
+            # cold pipeline: drain outstanding saves before returning (the
+            # caller may read host KV directly).  Warm pipelines keep saves
+            # in flight across calls; drain_saves()/shutdown() syncs.
+            self.drain_saves()
         return outputs
 
     def shutdown(self):
+        """Drain outstanding saves and stop the pool if owned (main
+        thread; blocking)."""
+        self.drain_saves()
         if self._owns_pool:
             self.pool.shutdown()

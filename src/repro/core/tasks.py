@@ -80,6 +80,12 @@ class Task:
     t_submit: float = 0.0
     t_start: float = 0.0
     t_end: float = 0.0
+    # payload size (bytes moved); 0 when unknown.  Set by the submitter
+    # BEFORE the task is handed to a pool (a VirtualPool traces the task
+    # synchronously inside submit), and copied onto the TraceEvent so
+    # per-task-type transfer volumes are assertable on traces (e.g. the
+    # MoE routed-union invariant: union bytes < whole-bank bytes).
+    nbytes: int = 0
     # virtual-transport hook: called by wait() once the task is done, so a
     # VirtualPool can advance its clock to the waiter's sync point.
     on_wait: Optional[Callable[["Task"], None]] = None
@@ -110,6 +116,7 @@ class TraceEvent:
     t_start: float
     t_end: float
     thread: str
+    nbytes: int = 0
 
 
 def _merged_busy(intervals) -> float:
@@ -144,7 +151,8 @@ class Trace:
         with self._lock:
             self._events.append(TraceEvent(task.kind.value, task.name,
                                            task.t_start - self.t0,
-                                           task.t_end - self.t0, thread))
+                                           task.t_end - self.t0, thread,
+                                           task.nbytes))
 
     def events(self):
         with self._lock:
@@ -174,6 +182,14 @@ class Trace:
             return 0.0
         return self.busy_time(kind) / max(1e-9, span)
 
+    def bytes_moved(self, kind: str, name_prefix: str = "") -> int:
+        """Sum of per-event payload sizes for one task kind (0-byte events
+        are tasks whose submitter didn't know the size).  ``name_prefix``
+        filters events, e.g. 'w[u[0][0]/exp' for one MoE layer's expert
+        loads — the routed-union invariant is asserted on this."""
+        return sum(e.nbytes for e in self.events()
+                   if e.kind == kind and e.name.startswith(name_prefix))
+
     def report(self) -> Dict[str, Any]:
         """Pipeline instrumentation (Fig. 8/9 analogue): per-task-type busy
         time + counts, compute-thread utilization, and bubble accounting
@@ -182,12 +198,14 @@ class Trace:
         span = self.span()
         per_kind = {}
         for kind in (t.value for t in TaskType):
-            ivals = [(e.t_start, e.t_end) for e in evs if e.kind == kind]
+            sub = [e for e in evs if e.kind == kind]
+            ivals = [(e.t_start, e.t_end) for e in sub]
             busy = _merged_busy(ivals)
             per_kind[kind] = {
                 "busy_s": busy,
                 "count": len(ivals),
                 "busy_frac": busy / span if span > 0 else 0.0,
+                "bytes": sum(e.nbytes for e in sub),
             }
         compute_busy = self.thread_busy("main")
         return {

@@ -13,11 +13,13 @@ Block size is picked empirically per device by ``sweep_block_size``
 """
 from __future__ import annotations
 
+import math
 import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
+from functools import partial
 from typing import Dict, Optional
 
 import jax
@@ -42,6 +44,8 @@ class Manifest:
 
 
 def merge_tensors(tensors: Dict[str, np.ndarray]) -> tuple[np.ndarray, Manifest]:
+    """Flatten a unit's tensors (sorted by name) into one contiguous
+    uint8 buffer + manifest, so one layer is ONE I/O request (§3.3)."""
     entries, off = {}, 0
     for name, a in sorted(tensors.items()):
         a = np.ascontiguousarray(a)
@@ -55,11 +59,69 @@ def merge_tensors(tensors: Dict[str, np.ndarray]) -> tuple[np.ndarray, Manifest]
 
 
 def split_views(buf: np.ndarray, manifest: Manifest) -> Dict[str, np.ndarray]:
+    """Zero-copy views back out of a merged buffer (inverse of
+    merge_tensors)."""
     out = {}
     for name, (off, shape, dtype) in manifest.entries.items():
         n = int(np.prod(shape)) * np.dtype(dtype).itemsize
         out[name] = buf[off:off + n].view(dtype).reshape(shape)
     return out
+
+
+# ---------------------------------------------------------------------------
+# INT4 streaming (paper §3.4: W4 weights quarter the transfer bytes)
+# ---------------------------------------------------------------------------
+
+QUANT_MIN_GROUP = 16
+
+
+def int4_group(arr) -> Optional[int]:
+    """The groupwise-quantization group size for one tensor, or None if
+    the tensor streams unquantized.  Eligible: 2-D, an even number of
+    columns, and a contraction dim divisible by a reasonable group (the
+    gcd with the canonical 128 — full-size layers get 128, scaled-down
+    test configs a smaller power of two).  This predicate is THE single
+    source of truth shared by the engines' streaming path and the
+    resident INT4 reference used in parity tests."""
+    from repro.quant.int4 import GROUP
+    shape = getattr(arr, "shape", ())
+    if len(shape) != 2 or shape[1] % 2 != 0:
+        return None
+    g = math.gcd(int(shape[0]), GROUP)
+    return g if g >= QUANT_MIN_GROUP else None
+
+
+def quantize_unit(tensors: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Quantize a unit's eligible tensors to packed INT4: each eligible
+    ``name`` is replaced by ``name#q`` (packed uint8, half the columns)
+    and ``name#s`` (groupwise f32 scales); ineligible tensors (norm
+    vectors, small/odd projections) pass through.  Runs once at engine
+    build time (main thread)."""
+    from repro.quant.int4 import quantize_int4
+    out = {}
+    for name, arr in tensors.items():
+        g = int4_group(arr)
+        if g is None:
+            out[name] = np.asarray(arr)
+            continue
+        packed, scale = quantize_int4(jnp.asarray(arr, jnp.float32), g)
+        out[name + "#q"] = np.asarray(packed)
+        out[name + "#s"] = np.asarray(scale)
+    return out
+
+
+def int4_roundtrip(arr):
+    """quantize -> dequantize one tensor through the exact jitted dequant
+    the streaming path uses — builds the resident INT4 reference whose
+    decode tokens the INT4 offloaded engine must match bit-for-bit.
+    Ineligible tensors return unchanged."""
+    from repro.quant.int4 import quantize_int4
+    g = int4_group(arr)
+    if g is None:
+        return arr
+    packed, scale = quantize_int4(jnp.asarray(arr, jnp.float32), g)
+    return np.asarray(_fused_dequant(jnp.asarray(np.asarray(packed)),
+                                     jnp.asarray(np.asarray(scale)), g))
 
 
 # ---------------------------------------------------------------------------
@@ -100,8 +162,14 @@ class TieredWeightStore:
         self.cold_reads = cold_reads
         self.sim_bw = sim_bw
         self.manifests: Dict[str, Manifest] = {}
+        # per-key load counters (thread-safe enough for CPython dict ops):
+        # benchmarks/tests read these to assert transfer volumes, e.g. the
+        # MoE routed-union invariant (union bytes < whole-bank bytes).
+        self.load_counts: Dict[str, int] = {}
 
     def put(self, key: str, tensors: Dict[str, np.ndarray]):
+        """Merge + place a unit's tensors on the placement tier (main
+        thread, done once at engine build)."""
         buf, man = merge_tensors(tensors)
         self.manifests[key] = man
         if self.placement == "disk":
@@ -112,6 +180,8 @@ class TieredWeightStore:
             self.device.put(key, buf)
 
     def nbytes(self, key: str) -> int:
+        """Bytes one load() of ``key`` moves over the link (packed bytes
+        for INT4 units).  Any thread; non-blocking."""
         return self.manifests[key].total_bytes
 
     def sim_floor(self, nbytes: int, t0: float):
@@ -123,9 +193,12 @@ class TieredWeightStore:
                 time.sleep(remain)
 
     def load(self, key: str) -> Dict[str, np.ndarray]:
-        """Placement tier -> device tensors (one I/O request per unit)."""
+        """Placement tier -> device tensors (one I/O request per unit).
+        Blocking; runs on whatever thread calls it — in the pipeline that
+        is a transfer-pool worker, never the compute (main) thread."""
         t0 = time.perf_counter()
         man = self.manifests[key]
+        self.load_counts[key] = self.load_counts.get(key, 0) + 1
         if self.placement == "device":
             buf = self.device.get(key)
             views = split_views(np.asarray(buf), man)
@@ -148,6 +221,11 @@ class TieredWeightStore:
         return self._maybe_dequant(dev)
 
     def _maybe_dequant(self, dev):
+        """Dequantize INT4 ``#q``/``#s`` pairs after the (cheap, packed)
+        bytes crossed the link.  Called from ``load`` on a transfer-pool
+        thread: the fused path dispatches one jitted dequant whose cost
+        overlaps the main thread's compute on earlier layers — only INT4
+        bytes pay the link floor, the f32 expansion never crosses it."""
         if self.quant != "int4":
             return dev
         from repro.quant.int4 import dequantize_int4
@@ -155,14 +233,19 @@ class TieredWeightStore:
         for name, arr in dev.items():
             if name.endswith("#q"):
                 base = name[:-2]
+                scale = dev[base + "#s"]
+                # group size is implied by the shapes: K split into
+                # K//group scale rows (scaled-down configs use smaller
+                # groups than the canonical 128 — see int4_group).
+                g = arr.shape[0] // scale.shape[0]
                 if self.fused_int4:
-                    # fused path: dequant happens inside the consumer's jit —
+                    # fused path: dequant happens inside jit on-device —
                     # XLA fuses it with the matmul (paper §3.4 kernel).
-                    out[base] = _fused_dequant(arr, dev[base + "#s"])
+                    out[base] = _fused_dequant(arr, scale, g)
                 else:
                     # unfused baseline: materialize fp32 weights first
                     out[base] = np.asarray(dequantize_int4(
-                        arr, dev[base + "#s"], jnp.float32))
+                        arr, scale, jnp.float32, g))
                     out[base] = jax.device_put(out[base])
             elif name.endswith("#s"):
                 continue
@@ -171,13 +254,13 @@ class TieredWeightStore:
         return out
 
 
-@jax.jit
-def _fused_dequant(packed, scale):
+@partial(jax.jit, static_argnums=(2,))
+def _fused_dequant(packed, scale, group: int = 128):
     """INT4 weights decoded on-device inside jit; XLA fuses the dequant into
     the consuming matmul — the CPU emulation of the paper's fused kernel
     (on TPU the Pallas kernel in kernels/int4_matmul.py does this in VREGs)."""
     from repro.quant.int4 import dequantize_int4
-    return dequantize_int4(packed, scale, jnp.float32)
+    return dequantize_int4(packed, scale, jnp.float32, group)
 
 
 def naive_disk_to_host(disk: DiskStore, key: str) -> np.ndarray:
@@ -205,6 +288,8 @@ def blockwise_disk_to_host(disk: DiskStore, key: str,
 
 
 def host_to_device(arr: np.ndarray):
+    """Synchronous host->device copy (blocks the calling thread until
+    the device buffer is materialized)."""
     out = jax.device_put(arr)
     out.block_until_ready()
     return out

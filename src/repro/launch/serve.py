@@ -5,9 +5,14 @@ Resident weights (default):
       --scaled --requests 10
 
 Offloaded weights through the PIPO pipeline (models larger than device
-memory; see serving/offload_engine.py):
+memory; see serving/offload_engine.py).  The pipeline stays warm across
+decode steps by default (cross-step preloading; --no-warm for the cold
+per-step baseline), and --quant int4 streams packed INT4 weights over
+the offload link (~1/4 the bytes, dequant overlapped with compute):
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --scaled --offload --placement disk --pipeline performance
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --scaled --offload --quant int4
 """
 import argparse
 import time
@@ -31,7 +36,22 @@ def main():
     ap.add_argument("--pipeline", default="performance",
                     choices=("performance", "memory", "sequential"),
                     help="PIPO scheduling mode for --offload")
+    ap.add_argument("--quant", default=None, choices=("int4",),
+                    help="stream weights as packed INT4 (--offload only); "
+                         "~1/4 the link bytes, dequant overlapped on the "
+                         "transfer pool")
+    ap.add_argument("--no-warm", action="store_true",
+                    help="disable cross-step preloading (cold per-step "
+                         "pipeline, the pre-warm baseline)")
+    ap.add_argument("--sim-bw", type=float, default=None,
+                    help="simulated link bandwidth floor in bytes/s "
+                         "(deterministic transfer timing; see "
+                         "docs/BENCHMARKS.md)")
     args = ap.parse_args()
+    if not args.offload and (args.quant or args.no_warm
+                             or args.sim_bw is not None):
+        ap.error("--quant/--no-warm/--sim-bw only apply to --offload "
+                 "(the resident engine streams nothing)")
 
     from repro.configs import get_config, scaled_down
     from repro.serving import (OffloadedServingEngine, Request, ServingEngine)
@@ -43,7 +63,10 @@ def main():
         eng = OffloadedServingEngine(cfg, b_max=args.b_max,
                                      max_len=args.max_len,
                                      placement=args.placement,
-                                     pipeline=args.pipeline)
+                                     pipeline=args.pipeline,
+                                     quant=args.quant,
+                                     warm=not args.no_warm,
+                                     sim_bw=args.sim_bw)
     else:
         eng = ServingEngine(cfg, b_max=args.b_max, max_len=args.max_len)
     rng = np.random.default_rng(0)

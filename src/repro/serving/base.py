@@ -21,6 +21,7 @@ paper's §3.1.2 principle at request scope).
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -42,23 +43,40 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
-    # preemption state: >= 0 means this request's KV rows are spilled to the
-    # host store (keyed by rid) and it resumes via restore, not prefill
+    # preemption state: >= 0 means this request's KV rows are spilled to
+    # the host store under ``spill_ns`` and it resumes via restore, not
+    # prefill.  The namespace (not the bare rid) is recorded at spill
+    # time: rids may be reused across run() epochs, and a parked request
+    # must find *its* rows even after the epoch advanced.
     preempt_pos: int = -1
     resume_token: int = -1
+    spill_ns: str = ""
 
 
 class SlotEngineBase:
     """Continuous batching over a fixed decode batch (b_max): requests
     queue in; a free slot triggers a b=1 prefill; each engine step decodes
     ALL active slots with ragged per-slot positions; completed slots free
-    immediately (no padding to the slowest request)."""
+    immediately (no padding to the slowest request).
+
+    Thread affinity: the whole scheduling loop (``submit``/``run``/
+    ``preempt_slot``) runs on the caller's (main) thread; only slot KV
+    spills execute on ``kv_pool`` transfer threads when one is attached.
+
+    Slot KV spills live in ``self.host`` under per-epoch namespaces
+    (``e{epoch}/slot{rid}/...``): the epoch advances on every ``run()``
+    call, so clients that reuse rids across runs can never alias a stale
+    spill.  ``spill_cap`` bounds how many spill namespaces are retained —
+    least-recently-written namespaces are evicted first, except those of
+    currently-parked (preempted) requests, whose rows are still needed to
+    resume."""
 
     def __init__(self, cfg, *, b_max: int = 4, max_len: int = 256,
-                 kv_pool: Optional[ThreadPool] = None):
+                 kv_pool: Optional[ThreadPool] = None, spill_cap: int = 32):
         self.cfg = cfg
         self.b_max = b_max
         self.max_len = max_len
+        self.spill_cap = spill_cap
         self.host = HostStore()
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * b_max
@@ -66,45 +84,67 @@ class SlotEngineBase:
         self.tokens = np.zeros(b_max, np.int32)        # last emitted token
         self.stats: Dict[str, int] = {
             "prefills": 0, "decode_steps": 0, "tokens_out": 0,
-            "slot_saves": 0, "slot_restores": 0}
+            "slot_saves": 0, "slot_restores": 0, "spill_evictions": 0}
         self._kv_pool = kv_pool
         self._slot_saves: Dict[int, Task] = {}
+        self._epoch = 0
+        self._spill_lru: "OrderedDict[str, bool]" = OrderedDict()
+        self._ns_saves: Dict[str, Task] = {}
 
     # ---- engine-specific compute (implemented by subclasses) ---------------
     def _prefill_into_slot(self, slot: int, req: Request) -> int:
         """Run the prompt, scatter KV rows into the slot; returns the first
-        generated token."""
+        generated token.  Main thread."""
         raise NotImplementedError
 
     def _decode_active(self, active: List[int]) -> np.ndarray:
         """One batched decode step over all slots; returns (b_max,) next
-        tokens (values at inactive slots are ignored)."""
+        tokens (values at inactive slots are ignored).  Main thread."""
         raise NotImplementedError
 
-    def offload_slot(self, slot: int):
-        """KV-save: spill a slot's cache rows to host memory keyed by the
-        occupying request's rid (the PIPO KV-save task at request scope)."""
-        rid = self.slots[slot].rid if self.slots[slot] else slot
-        self._offload_write(rid, self._offload_snapshot(slot))
+    def _spill_ns(self, rid: int) -> str:
+        """Host-store namespace for a spill happening NOW: epoch-scoped so
+        rids reused across run() epochs can never collide."""
+        return f"e{self._epoch}/slot{rid}"
 
-    def restore_slot(self, slot: int, rid: int):
-        """KV-load: bring an offloaded request's rows back into a slot."""
+    def offload_slot(self, slot: int):
+        """KV-save: spill a slot's cache rows to host memory under the
+        occupying request's epoch namespace (the PIPO KV-save task at
+        request scope).  Synchronous; main thread."""
+        rid = self.slots[slot].rid if self.slots[slot] else slot
+        ns = self._spill_ns(rid)
+        self._offload_write(ns, self._offload_snapshot(slot))
+        self._record_spill(ns)
+
+    def restore_slot(self, slot: int, ns: str):
+        """KV-load: bring an offloaded request's rows (spill namespace
+        ``ns``, see ``_spill_ns``) back into a slot.  Main thread;
+        blocking."""
         raise NotImplementedError
 
     def _offload_snapshot(self, slot: int):
         """Capture whatever the spill needs *now* (cheap; no copies for
-        immutable caches) so the write can run on a transfer thread."""
+        immutable caches) so the write can run on a transfer thread.
+        Main thread."""
         raise NotImplementedError
 
-    def _offload_write(self, rid: int, snapshot):
+    def _offload_write(self, ns: str, snapshot):
+        """Write a snapshot's rows under host keys ``{ns}/...``.  Runs on
+        a transfer-pool thread when ``kv_pool`` is attached, else on the
+        main thread."""
         raise NotImplementedError
 
     # ---- public API ---------------------------------------------------------
     def submit(self, req: Request):
+        """Enqueue a request (main thread; non-blocking)."""
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive admission + decode until queue and slots drain (main
+        thread; blocking).  Each call is a new spill *epoch*: fresh spill
+        namespaces, so rids reused across runs can't alias old rows."""
+        self._epoch += 1
         done: List[Request] = []
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
@@ -115,15 +155,20 @@ class SlotEngineBase:
 
     def preempt_slot(self, slot: int):
         """Spill an active request's KV rows and push it back to the queue
-        head; it resumes later via restore_slot (no re-prefill)."""
+        head; it resumes later via restore_slot (no re-prefill).  Main
+        thread; the spill is synchronous."""
         req = self.slots[slot]
         assert req is not None, f"slot {slot} not active"
         self._sync_slot(slot)
-        self.offload_slot(slot)                 # sync spill, keyed by rid
-        self.stats["slot_saves"] += 1
+        # mark parked and enqueue BEFORE the spill is recorded: the LRU's
+        # parked-pinning set is built from the queue, and the request's
+        # own fresh spill must already be pinned when eviction runs
+        req.spill_ns = self._spill_ns(req.rid)
         req.preempt_pos = int(self.pos[slot])
         req.resume_token = int(self.tokens[slot])
         self.queue.insert(0, req)
+        self.offload_slot(slot)                 # sync spill, epoch-keyed
+        self.stats["slot_saves"] += 1
         self.slots[slot] = None
         self.pos[slot] = 0
 
@@ -149,11 +194,13 @@ class SlotEngineBase:
             req = self.queue.pop(0)
             self._sync_slot(slot)
             if req.preempt_pos >= 0:            # resume a preempted request
-                self.restore_slot(slot, req.rid)
+                self.restore_slot(slot, req.spill_ns)
+                self._drop_spill(req.spill_ns)  # rows are back in the slot
                 self.stats["slot_restores"] += 1
                 self.pos[slot] = req.preempt_pos
                 self.tokens[slot] = req.resume_token
                 req.preempt_pos = -1
+                req.spill_ns = ""
                 self.slots[slot] = req
                 continue
             tok = self._prefill_into_slot(slot, req)
@@ -186,21 +233,59 @@ class SlotEngineBase:
 
     def _release_slot(self, slot: int):
         """Free a finished slot; the KV spill overlaps with the next decode
-        steps when a transfer pool is available."""
+        steps when a transfer pool is available.  Main thread; the write
+        itself runs on a transfer thread when possible."""
         rid = self.slots[slot].rid
         self.stats["slot_saves"] += 1
         if self._kv_pool is not None:
+            ns = self._spill_ns(rid)
             snap = self._offload_snapshot(slot)
-            t = Task(TaskType.KV_SAVE, f"slot_save[{rid}]",
-                     lambda rid=rid, snap=snap: self._offload_write(rid, snap))
+            t = Task(TaskType.KV_SAVE, f"slot_save[{ns}]",
+                     lambda ns=ns, snap=snap: self._offload_write(ns, snap))
             self._kv_pool.submit(t, priority=1)   # behind loads, per §3.2.1
             self._slot_saves[slot] = t
+            self._ns_saves[ns] = t
+            self._record_spill(ns)
         else:
             self.offload_slot(slot)
         self.slots[slot] = None
         self.pos[slot] = 0
 
+    # ---- spill retention (LRU with parked-request pinning) ------------------
+    def _record_spill(self, ns: str):
+        """Mark ``ns`` most-recently-written and evict over-cap spills.
+        Main thread."""
+        self._spill_lru.pop(ns, None)
+        self._spill_lru[ns] = True
+        parked = {r.spill_ns for r in self.queue if r.preempt_pos >= 0}
+        while len(self._spill_lru) > self.spill_cap:
+            victim = next((n for n in self._spill_lru if n not in parked),
+                          None)
+            if victim is None:
+                return          # every retained spill is resumable: keep all
+            self._spill_lru.pop(victim)
+            t = self._ns_saves.pop(victim, None)
+            if t is not None:
+                t.wait()        # never delete under an in-flight write
+            self._delete_spill_keys(victim)
+            self.stats["spill_evictions"] += 1
+
+    def _drop_spill(self, ns: str):
+        """Forget a namespace after its rows were restored into a slot."""
+        self._spill_lru.pop(ns, None)
+        t = self._ns_saves.pop(ns, None)
+        if t is not None:
+            t.wait()
+        self._delete_spill_keys(ns)
+
+    def _delete_spill_keys(self, ns: str):
+        for k in list(self.host.keys()):
+            if k.startswith(ns + "/"):
+                self.host.delete(k)
+
     def shutdown(self):
+        """Drain in-flight slot spills (main thread; blocking)."""
         for t in self._slot_saves.values():
             t.wait()
         self._slot_saves.clear()
+        self._ns_saves.clear()

@@ -29,8 +29,9 @@ __all__ = ["Request", "ServingEngine"]
 class ServingEngine(SlotEngineBase):
     def __init__(self, cfg: ModelConfig, *, b_max: int = 4,
                  max_len: int = 256, seed: int = 0,
-                 kv_pool: Optional[ThreadPool] = None):
-        super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=kv_pool)
+                 kv_pool: Optional[ThreadPool] = None, spill_cap: int = 32):
+        super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=kv_pool,
+                         spill_cap=spill_cap)
         self.dist = Dist.local()
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
@@ -106,17 +107,20 @@ class ServingEngine(SlotEngineBase):
             r.block_until_ready()
         return rows
 
-    def _offload_write(self, rid: int, rows):
+    def _offload_write(self, ns: str, rows):
+        """Device->host spill of one slot's cache rows under ``{ns}/{i}``
+        keys.  Runs on a transfer-pool thread when kv_pool is attached."""
         for i, row in enumerate(rows):
-            self.host.put(f"slot{rid}/{i}", np.asarray(row))
+            self.host.put(f"{ns}/{i}", np.asarray(row))
 
-    def restore_slot(self, slot: int, rid: int):
-        """KV-load: bring an offloaded request's rows back into a slot."""
+    def restore_slot(self, slot: int, ns: str):
+        """KV-load: bring an offloaded request's rows (namespace ``ns``)
+        back into a slot.  Main thread; blocking."""
         flat_big, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
         out = []
         for i, (path, leaf) in enumerate(flat_big):
             ax = self._batch_axis(path)
-            row = jnp.asarray(self.host.get(f"slot{rid}/{i}"))
+            row = jnp.asarray(self.host.get(f"{ns}/{i}"))
             idx = [slice(None)] * leaf.ndim
             idx[ax] = slot
             out.append(leaf.at[tuple(idx)].set(row.astype(leaf.dtype)))

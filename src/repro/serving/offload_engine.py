@@ -2,22 +2,47 @@
 serving workload.
 
 Where ``ServingEngine`` keeps every parameter resident, this engine keeps
-only the embedding/final-norm on device; each transformer layer's weights
-live as ONE merged buffer (+manifest) on the host or disk tier
-(``TieredWeightStore``, shared with ``core.engine.PipelinedLM``) and
-stream through the 3-thread ``ThreadPool`` + ``PipelineScheduler`` per
-decode step.  The per-layer KV cache lives in host memory and moves as
-``KV_LOAD``/``KV_SAVE`` pipeline tasks, so the repo can serve models whose
-weights + KV exceed device memory — the paper's headline scenario.
+only the embedding/final-norm (and MoE routers) on device; each
+transformer layer's weights live as ONE merged buffer (+manifest) on the
+host or disk tier (``TieredWeightStore``, shared with
+``core.engine.PipelinedLM``) and stream through the 3-thread
+``ThreadPool`` + ``PipelineScheduler`` per decode step.  The per-layer KV
+cache lives in host memory and moves as ``KV_LOAD``/``KV_SAVE`` pipeline
+tasks, so the repo can serve models whose weights + KV exceed device
+memory — the paper's headline scenario.
+
+Warm pipeline (default in performance mode): the scheduler persists
+across ``generate()`` calls (``PipelineScheduler(warm=True)``), so while
+step *t*'s tail layers compute, step *t+1*'s first weight load and first
+KV load are already in flight — steady-state decode pays no cold-start
+transfer bubble per token (ROADMAP item; FlexInfer-style cross-step
+preloading).  Disable with ``warm=False`` to reproduce the cold per-step
+baseline.
+
+INT4 weight streaming (``quant="int4"``): eligible 2-D projections are
+stored packed (uint8 nibbles + groupwise scales), so only a quarter-ish
+of the FP32 bytes cross the offload link; the dequant runs on a
+transfer-pool thread as one jitted op overlapping the main thread's
+compute (paper §3.4).  Decoded tokens are bit-identical to a resident
+engine holding the same quantize->dequantize roundtripped weights
+(``quant_roundtrip_params`` builds that reference).
+
+MoE layers load only the *union of routed experts* per step (paper
+Appendix C.4, ported from ``core.engine.PipelinedLM``): the tiny router
+stays device-resident, each expert is its own tiered buffer, and after
+the gate runs (the paper's sync point) only the experts the batch routed
+to are submitted as WEIGHT_LOAD tasks — the shared expert computes while
+they stream.  Union bytes << whole-bank bytes at decode batch sizes.
 
 Numerics are *identical* to the resident engine: both run the same
-``models.layers.apply_layer`` / ``embed_tokens`` / ``lm_head_argmax``
-functions on params from the same ``model.init`` seed, so decoded tokens
-match exactly (asserted in tests/test_serving_offload.py).
+``models.layers`` / ``models.moe`` functions on params from the same
+``model.init`` seed, so decoded tokens match exactly (asserted in
+tests/test_serving_offload.py).
 
 Pipeline modes (pick with ``pipeline=``):
   * "performance" — preload layer j+1's weights during layer j's compute;
-    highest throughput, two layers resident (default).
+    highest throughput, two layers resident (default; ``warm`` adds the
+    cross-step preload on top).
   * "memory"      — single layer resident, KV-save synchronized; lowest
     device footprint.
   * "sequential"  — FlexGen-like full serialization; baseline for the
@@ -26,71 +51,138 @@ Pipeline modes (pick with ``pipeline=``):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, LayerSpec
+from repro.configs.base import MOE, ModelConfig, LayerSpec
 from repro.core.offload import DeviceStore, DiskStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
-from repro.core.tasks import Trace
-from repro.core.transfer import TieredWeightStore
+from repro.core.tasks import Task, TaskType, Trace
+from repro.core.transfer import TieredWeightStore, int4_roundtrip, quantize_unit
 from repro.models import Dist, build_model
 from repro.models import layers as L
+from repro.models import moe as moe_mod
 from repro.models import transformer as T
+from repro.models.common import silu
 from repro.serving.base import Request, SlotEngineBase
 
-__all__ = ["Request", "OffloadedServingEngine"]
+__all__ = ["Request", "OffloadedServingEngine", "quant_roundtrip_params"]
 
 
 @dataclass
 class _Unit:
     """One schedulable layer: period ``p`` of pattern position ``q``
-    ('pat'), or remainder layer q ('rem')."""
+    ('pat'), or remainder layer q ('rem').  MoE layers additionally carry
+    a device-resident router and one tiered store key per expert."""
     group: str          # "pat" | "rem"
     p: int              # period index (0 for rem)
     q: int              # pattern / remainder position
     spec: LayerSpec
-    key: str            # TieredWeightStore key
+    key: str            # TieredWeightStore key (mixer + norms + shared)
+    moe: bool = False
+    router: Any = None                     # device (d, E) gate weights
+    expert_keys: List[str] = field(default_factory=list)
+
+
+def quant_roundtrip_params(cfg: ModelConfig, params):
+    """INT4 quantize->dequantize exactly the leaves the offloaded engine
+    streams as INT4 — per-layer 2-D projections and per-expert MoE slices
+    — leaving embeddings/final-norm/routers (device-resident, never
+    streamed) untouched.  Feeding the result to a resident
+    ``ServingEngine`` builds the reference the INT4 offloaded engine must
+    match token-for-token (tests/test_serving_offload.py)."""
+    def do_tab(tab, spec, stacked):
+        out = {}
+        for name, leaf in tab.items():
+            arr = np.asarray(leaf)
+            if spec.ffn == MOE and name == "wg":
+                out[name] = leaf                      # router: resident
+            elif spec.ffn == MOE and name in ("w_gate", "w_up", "w_down"):
+                if stacked:                           # (periods, E, ..)
+                    new = np.stack([
+                        np.stack([int4_roundtrip(arr[p, e])
+                                  for e in range(arr.shape[1])])
+                        for p in range(arr.shape[0])])
+                else:
+                    new = np.stack([int4_roundtrip(arr[e])
+                                    for e in range(arr.shape[0])])
+                out[name] = jnp.asarray(new)
+            elif stacked:
+                out[name] = jnp.asarray(np.stack(
+                    [int4_roundtrip(arr[p]) for p in range(arr.shape[0])]))
+            else:
+                out[name] = jnp.asarray(int4_roundtrip(arr))
+        return out
+
+    return {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "pat": tuple(do_tab(params["pat"][q], cfg.pattern[q], True)
+                     for q in range(len(cfg.pattern))),
+        "rem": tuple(do_tab(params["rem"][q], cfg.remainder[q], False)
+                     for q in range(len(cfg.remainder))),
+    }
 
 
 class OffloadedServingEngine(SlotEngineBase):
+    """See module docstring.  Main-thread object: all public methods run
+    on the caller's thread; weight/KV transfers run on the internal
+    3-thread pool per Algorithm 1."""
+
     def __init__(self, cfg: ModelConfig, *, b_max: int = 4,
                  max_len: int = 256, seed: int = 0,
                  placement: str = "host", pipeline: str = "performance",
+                 quant: Optional[str] = None, fused_int4: bool = True,
+                 warm: Optional[bool] = None,
                  disk_root: str = "/tmp/pipo_serve_disk",
                  block_bytes: int = 8 << 20, n_io_threads: int = 3,
-                 cold_reads: bool = False, sim_bw: Optional[float] = None):
+                 cold_reads: bool = False, sim_bw: Optional[float] = None,
+                 spill_cap: int = 32):
         assert cfg.rope_theta != 0 and not cfg.enc_dec and \
             cfg.frontend != "embeds", \
             "offloaded serving supports token-frontend rope decoder stacks"
+        assert quant in (None, "int4"), quant
         self.trace = Trace()
         pool = ThreadPool(3, self.trace)
-        super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=pool)
+        super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=pool,
+                         spill_cap=spill_cap)
         self.dist = Dist.local()
         self.model = build_model(cfg)
         self.pipeline_mode = pipeline
+        self.quant = quant
+        self.warm = (pipeline == "performance") if warm is None else \
+            bool(warm)
         self.device = DeviceStore()
         self.disk = DiskStore(disk_root)
         self.weights = TieredWeightStore(
             placement=placement, host=self.host, device=self.device,
-            disk=self.disk, block_bytes=block_bytes,
-            n_io_threads=n_io_threads, cold_reads=cold_reads, sim_bw=sim_bw)
+            disk=self.disk, quant=quant, fused_int4=fused_int4,
+            block_bytes=block_bytes, n_io_threads=n_io_threads,
+            cold_reads=cold_reads, sim_bw=sim_bw)
         params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
+        self._phase = "prefill"           # until the first _decode_active
         self.units: List[_Unit] = []
         self._split_params(params)
         self._kv_init()
         self.sched = PipelineScheduler(len(self.units), pipeline, pool=pool,
-                                       trace=self.trace)
+                                       trace=self.trace, warm=self.warm)
         self._jit_units()
 
     # ---- weight tiering -----------------------------------------------------
+    def _maybe_quant(self, tensors):
+        return quantize_unit(tensors) if self.quant == "int4" else tensors
+
     def _split_params(self, params):
         """Embeddings/final norm stay on device (small, needed every step);
-        each layer's params merge into one tiered buffer."""
+        each layer's params merge into one tiered buffer.  MoE layers
+        split further: the router stays on device (tiny; needed before
+        any expert prefetch), each expert becomes its own tiered buffer so
+        decode can load just the routed union (paper Appendix C.4).
+        Main thread, build time only."""
         self.resident = {
             "embed": jax.device_put(params["embed"]),
             "final_norm": jax.device_put(params["final_norm"]),
@@ -101,14 +193,31 @@ class OffloadedServingEngine(SlotEngineBase):
                 key = f"u[{p}][{q}]"
                 tensors = {name: np.asarray(leaf[p])
                            for name, leaf in params["pat"][q].items()}
-                self.weights.put(key, tensors)
-                self.units.append(_Unit("pat", p, q, spec, key))
+                self.units.append(self._make_unit("pat", p, q, spec, key,
+                                                  tensors))
         for q, spec in enumerate(cfg.remainder):
             key = f"rem[{q}]"
             tensors = {name: np.asarray(leaf)
                        for name, leaf in params["rem"][q].items()}
-            self.weights.put(key, tensors)
-            self.units.append(_Unit("rem", 0, q, spec, key))
+            self.units.append(self._make_unit("rem", 0, q, spec, key,
+                                              tensors))
+
+    def _make_unit(self, group, p, q, spec, key, tensors) -> _Unit:
+        u = _Unit(group, p, q, spec, key)
+        if spec.ffn == MOE:
+            u.moe = True
+            m = self.cfg.moe
+            u.router = jax.device_put(jnp.asarray(tensors.pop("wg")))
+            wga = tensors.pop("w_gate")
+            wup = tensors.pop("w_up")
+            wdn = tensors.pop("w_down")
+            for e in range(m.num_experts):
+                ek = f"{key}/exp[{e}]"
+                self.weights.put(ek, self._maybe_quant(
+                    {"w_gate": wga[e], "w_up": wup[e], "w_down": wdn[e]}))
+                u.expert_keys.append(ek)
+        self.weights.put(key, self._maybe_quant(tensors))
+        return u
 
     # ---- host KV ------------------------------------------------------------
     def _kv_init(self):
@@ -130,11 +239,17 @@ class OffloadedServingEngine(SlotEngineBase):
         cfg, dist = self.cfg, self.dist
         self._decode_fns = {}
         self._prefill_fns = {}
+        self._moe_fns = {}
         for j, u in enumerate(self.units):
             sig = (u.group, u.q)
             if sig in self._decode_fns:
                 continue
-            spec, kinds = u.spec, self.kv_kinds[j]
+            kinds = self.kv_kinds[j]
+            # MoE units run the mixer through apply_layer with a DENSE ffn
+            # spec: the base params carry no dense "w_gate", so the ffn
+            # half no-ops and the MoE ffn runs in _compute_moe (expert
+            # loads overlap compute there).
+            spec = (LayerSpec(u.spec.mixer) if u.moe else u.spec)
 
             def decode_fn(w, x, cache, pos, angles, spec=spec, kinds=kinds):
                 ctx = L.Ctx(cfg=cfg, dist=dist, mode="decode", angles=angles,
@@ -161,6 +276,8 @@ class OffloadedServingEngine(SlotEngineBase):
 
             self._decode_fns[sig] = jax.jit(decode_fn)
             self._prefill_fns[sig] = jax.jit(prefill_fn)
+            if u.moe:
+                self._moe_fns[sig] = self._jit_moe_fns()
 
         def embed_fn(emb_p, tok, mode):
             ctx = L.Ctx(cfg=cfg, dist=dist, mode=mode, batch_size=tok.shape[0])
@@ -175,19 +292,70 @@ class OffloadedServingEngine(SlotEngineBase):
         self._embed = jax.jit(embed_fn, static_argnums=(2,))
         self._head = jax.jit(head_fn)
 
+    def _jit_moe_fns(self):
+        """Four jitted stages replicating ``layers.apply_moe_ffn`` exactly
+        (same ops, same order -> bit-identical to the resident engine)
+        while exposing the gate output early enough to prefetch only the
+        routed experts."""
+        cfg = self.cfg
+        m = cfg.moe
+
+        def pre_fn(w, x):
+            return L.rms_norm(x, w["norm_ffn"], cfg.norm_eps)
+
+        def gate_fn(xn, wg):
+            b, s, d = xn.shape
+            logits = (xn.reshape(b * s, d) @ wg).astype(jnp.float32)
+            _, ids = moe_mod.router_topk(logits, m.top_k)
+            return ids
+
+        def shared_fn(w, xn):
+            if not m.num_shared:
+                return jnp.zeros_like(xn)
+            h = silu(xn @ w["ws_gate"]) * (xn @ w["ws_up"])
+            return h @ w["ws_down"]
+
+        def combine_fn(x, xn, wg, wga, wup, wdn, shared_term):
+            b, s, d = x.shape
+            out, _ = moe_mod.moe_ffn(
+                xn.reshape(b * s, d),
+                dict(wg=wg, w_gate=wga, w_up=wup, w_down=wdn), m, axis=None)
+            x = x + out.reshape(b, s, d)
+            if m.num_shared:
+                x = x + shared_term
+            return x
+
+        return (jax.jit(pre_fn), jax.jit(gate_fn), jax.jit(shared_fn),
+                jax.jit(combine_fn))
+
     # ---- PipelineScheduler callbacks ----------------------------------------
     def is_mha(self, j: int) -> bool:
         """'Has streamed KV state' in scheduler terms — true for every
-        cached mixer (ATTN/MLA/SSM), so KV_LOAD/KV_SAVE are scheduled."""
+        cached mixer (ATTN/MLA/SSM), so KV_LOAD/KV_SAVE are scheduled.
+        Called on the main (submitter) thread."""
         return bool(self.kv_kinds[j])
 
     def load_weights(self, j: int):
+        """WEIGHT_LOAD body: tier -> device for unit j's base buffer
+        (mixer + norms + shared expert).  Transfer-pool thread; blocking
+        on the simulated link."""
         return self.weights.load(self.units[j].key)
+
+    def weight_nbytes(self, j: int) -> int:
+        """Bytes unit j's base WEIGHT_LOAD moves (INT4: packed bytes) —
+        recorded on trace events for transfer-volume assertions."""
+        return self.weights.nbytes(self.units[j].key)
 
     def release_weights(self, j: int, handle):
         del handle  # device arrays freed by GC; tier stores unaffected
 
     def load_kv(self, i: int, j: int):
+        """KV_LOAD body: host cache -> device copies for unit j.  Runs on
+        a transfer-pool thread; pays the same simulated link floor as
+        weights.  Returns None during prefill (fresh caches are built by
+        the prefill compute) — warm cross-step preloads issued at the
+        tail of a prefill call are therefore poisoned and dropped by
+        ``_prefill_into_slot``."""
         if self._phase != "decode":
             return None                       # prefill builds fresh caches
         t0 = time.perf_counter()
@@ -199,6 +367,9 @@ class OffloadedServingEngine(SlotEngineBase):
         return dev
 
     def save_kv(self, i: int, j: int, new_kv):
+        """KV_SAVE body: scatter freshly-written cache rows back into the
+        host arrays.  Transfer-pool thread; the scheduler guarantees the
+        save lands before iteration i+1's KV_LOAD of the same unit."""
         phase, payload, meta = new_kv
         host_kv, kinds = self.kv[j], self.kv_kinds[j]
         if phase == "prefill":
@@ -217,14 +388,62 @@ class OffloadedServingEngine(SlotEngineBase):
                         host_kv[name][s] = rows[name][s]
 
     def compute(self, i: int, j: int, x, weights, kv):
+        """COMPUTE body (main thread): one unit's jitted forward.  MoE
+        units additionally gate, prefetch the routed-expert union through
+        the pool, and combine (see _compute_moe)."""
         u = self.units[j]
         sig = (u.group, u.q)
         if self._phase == "prefill":
             x, cache1 = self._prefill_fns[sig](weights, x, self._angles)
-            return x, ("prefill", cache1, self._slot)
-        x, rows = self._decode_fns[sig](weights, x, kv, self._pos_dev,
-                                        self._angles)
-        return x, ("decode", rows, (self._active, self._pos_snap))
+            payload = ("prefill", cache1, self._slot)
+        else:
+            x, rows = self._decode_fns[sig](weights, x, kv, self._pos_dev,
+                                            self._angles)
+            payload = ("decode", rows, (self._active, self._pos_snap))
+        if u.moe:
+            x = self._compute_moe(u, x, weights)
+        return x, payload
+
+    def _compute_moe(self, u: _Unit, x, weights):
+        """Routed-union MoE (paper Appendix C.4, serving port): the gate
+        forces a sync (experts unknown until it runs); then ONLY the union
+        of routed experts streams through the pool as WEIGHT_LOAD tasks
+        while the shared expert computes.  Numerics match
+        ``layers.apply_moe_ffn`` bit-for-bit: unrouted experts enter the
+        dispatch einsum as zero weights, and zero-weight rows are never
+        gathered back.  Main thread (loads on pool threads).
+
+        The zero-padded full-bank stacks keep the combine einsum's
+        shapes identical to the resident engine's (the parity
+        guarantee); the cost is a bank-sized host->device copy per MoE
+        layer per step, which is a memcpy on this CPU container but
+        would matter over real PCIe — a compact (|union|,...) combine
+        with remapped expert ids is the known follow-up (ROADMAP)."""
+        m = self.cfg.moe
+        pre, gate, shared, combine = self._moe_fns[(u.group, u.q)]
+        xn = pre(weights, x)
+        ids = np.asarray(gate(xn, u.router))      # sync point (paper)
+        union = sorted({int(e) for e in ids.reshape(-1)})
+        tasks = []
+        for e in union:
+            key = u.expert_keys[e]
+            t = Task(TaskType.WEIGHT_LOAD, f"w[{key}]",
+                     lambda key=key: self.weights.load(key))
+            t.nbytes = self.weights.nbytes(key)
+            self.sched.pool.submit(t)
+            tasks.append((e, t))
+        shared_term = shared(weights, xn)         # overlaps expert loads
+        d, f = self.cfg.d_model, m.expert_d_ff
+        wga = np.zeros((m.num_experts, d, f), np.float32)
+        wup = np.zeros((m.num_experts, d, f), np.float32)
+        wdn = np.zeros((m.num_experts, f, d), np.float32)
+        for e, t in tasks:
+            we = t.wait()
+            wga[e] = np.asarray(we["w_gate"])
+            wup[e] = np.asarray(we["w_up"])
+            wdn[e] = np.asarray(we["w_down"])
+        return combine(x, xn, u.router, jnp.asarray(wga), jnp.asarray(wup),
+                       jnp.asarray(wdn), shared_term)
 
     def finalize(self, i: int, x):
         tok = self._head(self.resident["embed"], self.resident["final_norm"],
@@ -233,6 +452,10 @@ class OffloadedServingEngine(SlotEngineBase):
 
     # ---- SlotEngineBase compute hooks ---------------------------------------
     def _prefill_into_slot(self, slot: int, req: Request) -> int:
+        """b=1 prompt pass through the pipeline (main thread).  Any warm
+        KV preload issued at the tail of this call captured the prefill
+        phase (value None) and is dropped — the next decode step reloads
+        fresh; its weight preload stays valid (weights are immutable)."""
         self._phase = "prefill"
         self._slot = slot
         s = len(req.prompt)
@@ -241,9 +464,13 @@ class OffloadedServingEngine(SlotEngineBase):
         x0 = self._embed(self.resident["embed"],
                          jnp.asarray(req.prompt)[None], "prefill")
         toks = self.sched.generate(self, lambda i: x0, 1)
+        self.sched.drop_kv_preloads()
         return int(toks[-1][0])
 
     def _decode_active(self, active: List[int]) -> np.ndarray:
+        """One batched decode step through the pipeline (main thread).
+        With a warm scheduler the step's first weight/KV loads were
+        pre-submitted during the previous step's tail compute."""
         self._phase = "decode"
         self._active = list(active)
         self._pos_snap = self.pos.copy()
@@ -256,27 +483,42 @@ class OffloadedServingEngine(SlotEngineBase):
 
     # ---- slot spill/restore (host<->host; rows already offloaded) -----------
     def _offload_snapshot(self, slot: int):
+        """The KV already lives on host, so the snapshot is just the slot
+        id — but in warm mode pipeline saves may still be in flight, and
+        the spill's row reads must not race them (main thread; blocks on
+        outstanding saves)."""
+        self.sched.drain_saves()
         return slot
 
-    def _offload_write(self, rid: int, slot: int):
-        # KV already lives on host: the spill is a row copy out of the shared
-        # decode cache so the slot can be reused while rid is parked.
+    def _offload_write(self, ns: str, slot: int):
+        """Spill: row copies out of the shared decode cache under
+        ``{ns}/{unit}/{name}`` keys so the slot can be reused while the
+        request is parked.  Transfer-pool thread when async."""
         for j, host_kv in enumerate(self.kv):
             for name, arr in host_kv.items():
-                self.host.put(f"slot{rid}/{j}/{name}", arr[slot].copy())
+                self.host.put(f"{ns}/{j}/{name}", arr[slot].copy())
 
-    def restore_slot(self, slot: int, rid: int):
+    def restore_slot(self, slot: int, ns: str):
+        """Bring a parked request's rows back into a slot (main thread).
+        Mutates host KV outside the pipeline, so outstanding saves are
+        drained first and any warm KV preloads (now stale device copies)
+        are dropped."""
+        self.sched.drain_saves()
+        self.sched.drop_kv_preloads()
         for j, host_kv in enumerate(self.kv):
             for name, arr in host_kv.items():
-                arr[slot] = self.host.get(f"slot{rid}/{j}/{name}")
+                arr[slot] = self.host.get(f"{ns}/{j}/{name}")
 
     # ---- lifecycle / introspection ------------------------------------------
     def pipeline_report(self):
-        """Per-task-type busy time, compute-thread utilization and bubble
-        accounting derived from the Trace (paper Fig. 8/9 analogue)."""
+        """Per-task-type busy time/bytes, compute-thread utilization and
+        bubble accounting derived from the Trace (paper Fig. 8/9
+        analogue).  Main thread; safe while transfers are in flight."""
         return self.trace.report()
 
     def shutdown(self):
+        """Drain slot spills + pipeline saves, stop the pool (main
+        thread; blocking)."""
         super().shutdown()
         self.sched.shutdown()
         self._kv_pool.shutdown()

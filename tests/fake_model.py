@@ -1,13 +1,19 @@
-"""Deterministic fake model for PipelineScheduler tests.
+"""Deterministic fake models for PipelineScheduler tests.
 
 Used with ``core.pipeline.VirtualPool``: every task executes synchronously
 (single-threaded, deterministic call order) while its start/end times are
 assigned on a virtual timeline from the fixed per-type COSTS below —
 ordering invariants are asserted on ``Trace`` virtual timestamps, never on
 wall-clock, so there are no sleeps and no timing races.
+
+``FakeModel`` is the plain dense stack.  ``FakeMoEModel`` mirrors the
+engines' routed-union MoE path: its MoE units gate first, then submit one
+WEIGHT_LOAD per *routed* expert through the pool from inside the compute
+callback — exactly how ``OffloadedServingEngine._compute_moe`` overlaps
+expert streaming with compute.
 """
 from repro.core.pipeline import PipelineScheduler, VirtualPool
-from repro.core.tasks import TaskType
+from repro.core.tasks import Task, TaskType
 
 # virtual durations: weight loads dominate (the offloading regime), KV
 # transfers cheaper than compute, saves slower than loads (write path)
@@ -55,12 +61,81 @@ class FakeModel:
         return x
 
 
-def run_virtual(mode: str, n_layers: int = 3, iters: int = 3):
+class FakeMoEModel(FakeModel):
+    """[mha, moe] * n_layers with ``n_experts`` experts per MoE unit.
+    ``routed(i, j)`` gives the per-iteration routed union; the compute
+    callback submits one expert WEIGHT_LOAD per routed expert through the
+    pool (set by ``run_virtual_moe``) and waits them — the routed-union
+    streaming pattern of the engines, visible on the virtual trace."""
+
+    EXPERT_NBYTES = 1000
+
+    def __init__(self, n_layers: int = 2, n_experts: int = 4, top_k: int = 2):
+        super().__init__(n_layers)
+        self.n_experts = n_experts
+        self.top_k = top_k
+        self.pool = None               # injected by run_virtual_moe
+        self.expert_loads = []         # (i, j, e) in load order
+
+    def is_moe(self, j):
+        return j % 2 == 1
+
+    def routed(self, i, j):
+        """Deterministic routed union: top_k distinct experts rotating
+        with the iteration so successive steps hit different subsets."""
+        return sorted({(i + j + k) % self.n_experts
+                       for k in range(self.top_k)})
+
+    def compute(self, i, j, x, w, kv):
+        assert w == f"w{j}", (w, j)
+        if self.is_mha(j):
+            assert kv == f"kv{i},{j}", (kv, i, j)
+        self.calls.append(("compute", i, j))
+        if self.is_moe(j):
+            tasks = []
+            for e in self.routed(i, j):
+                t = Task(TaskType.WEIGHT_LOAD, f"exp[{j}][{e}]",
+                         lambda i=i, j=j, e=e: self._load_expert(i, j, e))
+                t.nbytes = self.EXPERT_NBYTES
+                self.pool.submit(t)
+                tasks.append(t)
+            for t in tasks:
+                t.wait()
+        return x + 1, ("new_kv" if self.is_mha(j) else None)
+
+    def _load_expert(self, i, j, e):
+        self.expert_loads.append((i, j, e))
+        return f"exp{j},{e}"
+
+
+def run_virtual(mode: str, n_layers: int = 3, iters: int = 3,
+                warm: bool = False, calls: int = 1):
     """Drive the real scheduler over the fake model on a virtual clock;
-    returns (model, trace, outputs)."""
+    ``calls`` generate() invocations of ``iters`` iterations each (warm
+    schedulers keep their pipeline state across calls).  Returns
+    (model, trace, outputs-of-last-call)."""
     model = FakeModel(n_layers)
     pool = VirtualPool(3, cost_fn=cost_fn)
-    sched = PipelineScheduler(model.n, mode, pool=pool, trace=pool.trace)
-    outs = sched.generate(model, lambda i: 0, iters)
+    sched = PipelineScheduler(model.n, mode, pool=pool, trace=pool.trace,
+                              warm=warm)
+    outs = None
+    for _ in range(calls):
+        outs = sched.generate(model, lambda i: 0, iters)
+    sched.shutdown()
+    return model, pool.trace, outs
+
+
+def run_virtual_moe(mode: str = "performance", n_layers: int = 2,
+                    iters: int = 2, warm: bool = False, calls: int = 1):
+    """Same as run_virtual but over FakeMoEModel (routed-union expert
+    loads submitted from inside compute)."""
+    model = FakeMoEModel(n_layers)
+    pool = VirtualPool(3, cost_fn=cost_fn)
+    sched = PipelineScheduler(model.n, mode, pool=pool, trace=pool.trace,
+                              warm=warm)
+    model.pool = sched.pool
+    outs = None
+    for _ in range(calls):
+        outs = sched.generate(model, lambda i: 0, iters)
     sched.shutdown()
     return model, pool.trace, outs

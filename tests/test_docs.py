@@ -1,0 +1,27 @@
+"""The CI docs job, runnable locally: dead intra-repo links/paths in
+README + docs/*.md fail, and the documented quickstart commands must
+still parse (--help / --list dry form).  tools/check_docs.py is the
+single implementation; this wrapper keeps it in the tier-1 loop."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_docs_health():
+    r = subprocess.run([sys.executable, str(ROOT / "tools/check_docs.py")],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"\n{r.stdout}\n{r.stderr}"
+
+
+def test_docs_exist_and_linked():
+    """Cheap tier-1 subset: the docs tree exists and README links it."""
+    assert (ROOT / "docs/ARCHITECTURE.md").exists()
+    assert (ROOT / "docs/BENCHMARKS.md").exists()
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/BENCHMARKS.md" in readme

@@ -97,10 +97,12 @@ def test_serving_offload_restore_roundtrip():
         0, cfg.vocab_size, (8,)).astype(np.int32), max_new=3))
     done = eng.run()
     assert len(done) == 1
-    # the finished slot spilled its rows; wipe slot 0 and restore
+    # the finished slot spilled its rows (epoch-1 namespace since spills
+    # are namespaced per run()); wipe slot 0 and restore
+    ns = eng._spill_ns(7)
     before = [np.asarray(l) for l in jax.tree_util.tree_leaves(eng.caches)]
     eng.caches = jax.tree.map(jnp.zeros_like, eng.caches)
-    eng.restore_slot(0, 7)
+    eng.restore_slot(0, ns)
     after = [np.asarray(l) for l in jax.tree_util.tree_leaves(eng.caches)]
     diffs = sum(float(np.abs(a).sum()) for a in after)
     assert diffs > 0, "restore_slot wrote nothing"
@@ -112,4 +114,4 @@ def test_serving_offload_restore_roundtrip():
         idx[ax] = 0
         np.testing.assert_array_equal(
             np.asarray(leaf[tuple(idx)], np.float32),
-            np.asarray(eng.host.get(f"slot7/{i}"), np.float32))
+            np.asarray(eng.host.get(f"{ns}/{i}"), np.float32))

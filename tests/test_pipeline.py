@@ -1,5 +1,14 @@
-"""PIPO pipeline scheduler: ordering invariants (Algorithm 1) via a mock
-model that logs every event with timestamps."""
+"""Real-thread PipelineScheduler integration smoke.
+
+The scheduler's *ordering invariants* (preload overlap, single-layer
+residency, save-before-load, full serialization, warm cross-call
+preloads, MoE union streaming) are asserted deterministically on the
+virtual clock in tests/test_pipeline_virtual.py.  This module keeps one
+genuine 3-thread integration check: the real ThreadPool + Events path
+completes every task, respects causality (a layer's weights are loaded
+and unreleased when its compute starts), and the warm scheduler survives
+repeated generate() calls without deadlock — no timing-window
+assertions, so no flakes."""
 import threading
 import time
 
@@ -10,10 +19,11 @@ from repro.core.tasks import Trace
 
 
 class MockModel:
-    """Layer stack [mha, mlp] * n with tunable per-task latencies; records
-    (event, i, j, t) tuples."""
+    """Layer stack [mha, mlp] * n with small real sleeps; records
+    (event, i, j, t) tuples thread-safely."""
 
-    def __init__(self, n_layers=3, t_load=0.02, t_compute=0.01, t_kv=0.005):
+    def __init__(self, n_layers=3, t_load=0.005, t_compute=0.002,
+                 t_kv=0.002):
         self.n = 2 * n_layers
         self.t_load, self.t_compute, self.t_kv = t_load, t_compute, t_kv
         self.events = []
@@ -57,12 +67,17 @@ class MockModel:
 
 
 @pytest.mark.parametrize("mode", ["performance", "memory", "sequential"])
-def test_all_tasks_execute_in_every_mode(mode):
+def test_real_threads_complete_and_causally_ordered(mode):
+    """Every task executes; weights are loaded-and-unreleased when their
+    compute starts; save(i-1,j) lands before load(i,j).  These are
+    causal facts (each chain synchronizes through Events), not timing
+    windows, so they hold on loaded CI machines too."""
     model = MockModel(n_layers=3)
-    sched = PipelineScheduler(model.n, mode)
+    trace = Trace()
+    sched = PipelineScheduler(model.n, mode, trace=trace)
     outs = sched.generate(model, lambda i: 0, num_iterations=3)
     sched.shutdown()
-    assert outs == [model.n, model.n, model.n]  # x incremented per layer
+    assert outs == [model.n, model.n, model.n]
     ev = [(e, i, j) for e, i, j, _ in model.events]
     for i in range(3):
         for j in range(model.n):
@@ -70,16 +85,7 @@ def test_all_tasks_execute_in_every_mode(mode):
             if model.is_mha(j):
                 assert ("kv_load_done", i, j) in ev
                 assert ("kv_save_done", i, j) in ev
-
-
-def test_load_completes_before_compute():
-    model = MockModel()
-    sched = PipelineScheduler(model.n, "performance")
-    sched.generate(model, lambda i: 0, num_iterations=2)
-    sched.shutdown()
-    # ordered scan: a layer's weights must be loaded (and not yet released)
-    # when its compute starts.  Events from pool threads may interleave but
-    # each (load -> compute -> release) chain is causally ordered.
+    # causal scan: weights loaded (not yet released) at compute start
     events = sorted(model.events, key=lambda e: e[3])
     done_w = set()
     for e, i, j, ts in events:
@@ -89,68 +95,33 @@ def test_load_completes_before_compute():
             assert j in done_w, f"compute {j} before its weight load"
         if e == "w_release":
             done_w.discard(j)
-
-
-def test_kv_save_before_next_iteration_load():
-    model = MockModel()
-    sched = PipelineScheduler(model.n, "performance")
-    sched.generate(model, lambda i: 0, num_iterations=3)
-    sched.shutdown()
+    # save-before-next-load (the §3.2.1 advanced completion check)
     t = {(e, i, j): ts for e, i, j, ts in model.events}
     for i in range(1, 3):
         for j in range(model.n):
             if model.is_mha(j):
                 assert t[("kv_save_done", i - 1, j)] <= \
-                    t[("kv_load_done", i, j)], \
-                    f"kv load ({i},{j}) before save ({i-1},{j}) finished"
+                    t[("kv_load_done", i, j)]
 
 
-def test_performance_mode_overlaps_load_with_compute():
-    """In performance mode, some weight load must complete during another
-    layer's compute window (the pipeline's raison d'etre)."""
-    model = MockModel(n_layers=4, t_load=0.02, t_compute=0.02)
-    sched = PipelineScheduler(model.n, "performance")
-    sched.generate(model, lambda i: 0, num_iterations=2)
+def test_real_threads_warm_scheduler_across_calls():
+    """Warm pipeline on real threads: repeated single-iteration calls
+    (the serving decode-step pattern) complete with correct outputs and
+    the cross-call KV ordering intact; drop_kv_preloads/drain_saves
+    don't deadlock mid-stream."""
+    model = MockModel(n_layers=2)
+    sched = PipelineScheduler(model.n, "performance", warm=True)
+    outs = []
+    for step in range(4):
+        outs += sched.generate(model, lambda i: 0, num_iterations=1)
+        if step == 1:
+            sched.drain_saves()
+            sched.drop_kv_preloads()   # simulates a slot restore
     sched.shutdown()
-    starts = {}
-    computes = []
-    for e, i, j, ts in model.events:
-        if e == "compute_start":
-            starts[(i, j)] = ts
-        elif e == "compute_end" and (i, j) in starts:
-            computes.append((starts[(i, j)], ts))
-    loads = [ts for e, i, j, ts in model.events if e == "w_done"]
-    overlapped = sum(1 for ts in loads
-                     if any(s < ts < t for s, t in computes))
-    assert overlapped >= 1, "no load completed inside a compute window"
-
-
-def test_sequential_mode_never_overlaps():
-    model = MockModel(n_layers=3, t_load=0.01, t_compute=0.01)
-    sched = PipelineScheduler(model.n, "sequential")
-    sched.generate(model, lambda i: 0, num_iterations=2)
-    sched.shutdown()
-    # sequential: every event interval is disjoint from compute intervals
-    spans = []
-    start = None
-    for e, i, j, ts in model.events:
-        if e == "compute_start":
-            start = ts
-        elif e == "compute_end":
-            spans.append((start, ts))
-    loads = [ts for e, i, j, ts in model.events if e == "w_done"]
-    overlapped = sum(1 for ts in loads if any(s < ts < t for s, t in spans))
-    assert overlapped == 0
-
-
-def test_busy_fraction_higher_with_pipeline():
-    def run(mode):
-        model = MockModel(n_layers=4, t_load=0.015, t_compute=0.015)
-        trace = Trace()
-        sched = PipelineScheduler(model.n, mode, trace=trace)
-        sched.generate(model, lambda i: 0, num_iterations=3)
-        sched.shutdown()
-        return trace.busy_fraction("compute")
-    busy_seq = run("sequential")
-    busy_perf = run("performance")
-    assert busy_perf > busy_seq
+    assert outs == [model.n] * 4
+    t = {(e, i, j): ts for e, i, j, ts in model.events}
+    for i in range(1, 4):
+        for j in range(model.n):
+            if model.is_mha(j) and ("kv_load_done", i, j) in t:
+                assert t[("kv_save_done", i - 1, j)] <= \
+                    t[("kv_load_done", i, j)]

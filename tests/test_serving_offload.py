@@ -1,6 +1,7 @@
 """Serving offload round-trips: OffloadedServingEngine (weights streamed
 through the PIPO pipeline) must match the resident ServingEngine token for
-token, and slot offload -> restore -> resume must be lossless."""
+token — warm or cold pipeline, FP16 or INT4 streaming, dense or MoE — and
+slot offload -> restore -> resume must be lossless."""
 import jax
 import numpy as np
 import pytest
@@ -8,10 +9,15 @@ import pytest
 from repro.configs import get_config, scaled_down
 from repro.core.pipeline import ThreadPool
 from repro.serving import OffloadedServingEngine, Request, ServingEngine
+from repro.serving.offload_engine import quant_roundtrip_params
 
 
 def _cfg():
     return scaled_down(get_config("tinyllama-1.1b"))
+
+
+def _moe_cfg():
+    return scaled_down(get_config("llama4-scout-17b-a16e"))
 
 
 def _prompts(cfg, n=4, rng_seed=0):
@@ -40,6 +46,17 @@ def test_offload_decode_parity_host(resident_tokens):
     cfg = _cfg()
     eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
                                  placement="host", pipeline="performance")
+    assert eng.warm                    # warm pipeline is the default
+    assert _serve(eng, _prompts(cfg)) == resident_tokens
+
+
+def test_offload_decode_parity_cold(resident_tokens):
+    """warm=False reproduces the PR-1 cold-per-step pipeline; tokens are
+    identical either way (warm is a scheduling change only)."""
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline="performance",
+                                 warm=False)
     assert _serve(eng, _prompts(cfg)) == resident_tokens
 
 
@@ -59,6 +76,127 @@ def test_offload_decode_parity_disk(resident_tokens, tmp_path):
                                  placement="disk", pipeline="performance",
                                  disk_root=str(tmp_path / "weights"))
     assert _serve(eng, _prompts(cfg)) == resident_tokens
+
+
+# ---------------------------------------------------------------------------
+# INT4 weight streaming
+# ---------------------------------------------------------------------------
+
+
+def test_offload_int4_decode_parity():
+    """INT4 streaming decodes token-identical to a resident engine holding
+    the same quantize->dequantize roundtripped weights (the 'INT4
+    resident path'), and the streamed bytes actually shrink."""
+    cfg = _cfg()
+    ref = ServingEngine(cfg, b_max=2, max_len=64)
+    ref.params = quant_roundtrip_params(cfg, ref.params)
+    ref_tokens = _serve(ref, _prompts(cfg))
+
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline="performance",
+                                 quant="int4")
+    int4_bytes = sum(eng.weights.nbytes(u.key) for u in eng.units)
+    assert _serve(eng, _prompts(cfg)) == ref_tokens
+
+    fp32 = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                  placement="host")
+    fp32_bytes = sum(fp32.weights.nbytes(u.key) for u in fp32.units)
+    fp32.shutdown()
+    assert int4_bytes < 0.5 * fp32_bytes      # packed nibbles + scales
+
+
+def test_int4_quant_changes_tokens_vs_fp16():
+    """Sanity: the INT4 path really quantizes (its reference differs from
+    the plain FP32 params for at least one leaf)."""
+    cfg = _cfg()
+    eng = ServingEngine(cfg, b_max=1, max_len=32)
+    q = quant_roundtrip_params(cfg, eng.params)
+    diffs = 0
+    for a, b in zip(jax.tree_util.tree_leaves(eng.params),
+                    jax.tree_util.tree_leaves(q)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            diffs += 1
+    assert diffs > 0
+
+
+# ---------------------------------------------------------------------------
+# MoE routed-union serving
+# ---------------------------------------------------------------------------
+
+
+def test_offload_moe_decode_parity():
+    """MoE serving (router resident, per-expert streaming) matches the
+    resident engine token for token."""
+    cfg = _moe_cfg()
+    prompts = _prompts(cfg, 3)
+    ref = _serve(ServingEngine(cfg, b_max=2, max_len=48), prompts,
+                 max_new=4)
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=48,
+                                 placement="host", pipeline="performance")
+    assert _serve(eng, prompts, max_new=4) == ref
+
+
+def test_offload_moe_loads_routed_union_only():
+    """Decode loads only the routed-expert union per MoE layer — asserted
+    on trace bytes: expert WEIGHT_LOAD volume over the decode steps is
+    exactly union-size * per-expert bytes, strictly below the whole
+    bank."""
+    cfg = _moe_cfg()              # scaled llama4: 4 experts, top_k=1
+    m = cfg.moe
+    eng = OffloadedServingEngine(cfg, b_max=1, max_len=48,
+                                 placement="host", pipeline="performance")
+    eng.submit(Request(rid=0, prompt=_prompts(cfg, 1)[0], max_new=4))
+    eng._admit()                               # prefill (routes per-token)
+    expert_keys = [k for u in eng.units if u.moe for k in u.expert_keys]
+    snap = dict(eng.weights.load_counts)
+    done = []
+    while eng.slots[0] is not None:
+        eng._decode_step(done)
+    assert len(done) == 1
+
+    n_moe_units = sum(1 for u in eng.units if u.moe)
+    steps = eng.stats["decode_steps"]
+    decode_loads = sum(eng.weights.load_counts.get(k, 0) - snap.get(k, 0)
+                       for k in expert_keys)
+    # b=1, top_k=1: the routed union is exactly ONE expert per MoE unit
+    # per decode step — 4x below the whole bank
+    assert decode_loads == steps * n_moe_units
+    assert decode_loads < steps * n_moe_units * m.num_experts
+    # and the trace carries the byte accounting: expert WEIGHT_LOAD bytes
+    # equal loads * per-expert buffer size (scheduler-named unit loads use
+    # 'w[0]'-style names; expert tasks are named by their store key)
+    per_expert = {k: eng.weights.nbytes(k) for k in expert_keys}
+    traced = eng.trace.bytes_moved("weight_load", "w[u")
+    assert traced == sum(eng.weights.load_counts.get(k, 0) * b
+                         for k, b in per_expert.items())
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Warm pipeline on the live engine
+# ---------------------------------------------------------------------------
+
+
+def test_warm_engine_preloads_across_decode_steps():
+    """On the live engine the warm scheduler leaves at most one pending
+    weight preload between steps, and steady-state decode produces more
+    w[0] loads than decode steps would cold-start (the preloads ARE the
+    per-step loads)."""
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline="performance")
+    _serve(eng, _prompts(cfg, 2), max_new=4)
+    # every generate() call left a w[0] preload pending for the next one;
+    # totals: one w[0] per call + one dangling => calls + 1
+    calls = eng.stats["prefills"] + eng.stats["decode_steps"]
+    w0 = [e for e in eng.trace.events()
+          if e.kind == "weight_load" and e.name == "w[0]"]
+    assert len(w0) == calls + 1
+
+
+# ---------------------------------------------------------------------------
+# Slot spill: epoch namespacing + LRU retention
+# ---------------------------------------------------------------------------
 
 
 def test_slot_offload_restore_resume_parity():
@@ -81,6 +219,7 @@ def test_slot_offload_restore_resume_parity():
     assert not done
     eng.preempt_slot(0)
     assert eng.slots[0] is None and eng.queue     # parked, back in queue
+    assert eng.queue[0].spill_ns                  # namespace recorded
     done = eng.run()
     eng.shutdown()
     assert done[0].out == uninterrupted
@@ -107,10 +246,10 @@ def test_resident_async_slot_offload_roundtrip():
     eng.shutdown()                 # drain in-flight slot saves
     pool.shutdown()
     assert len(done) == 2
-    assert any(k.startswith("slot7/") for k in eng.host.keys())
-    assert any(k.startswith("slot8/") for k in eng.host.keys())
-    before = jax.tree_util.tree_map(np.asarray, eng.caches)
-    eng.restore_slot(0, 7)
+    ns7, ns8 = eng._spill_ns(7), eng._spill_ns(8)   # epoch 1 namespaces
+    assert any(k.startswith(ns7 + "/") for k in eng.host.keys())
+    assert any(k.startswith(ns8 + "/") for k in eng.host.keys())
+    eng.restore_slot(0, ns7)
     # restored rows equal the rows present when the request finished
     flat, _ = jax.tree_util.tree_flatten_with_path(eng.caches)
     for i, (path, leaf) in enumerate(flat):
@@ -118,7 +257,92 @@ def test_resident_async_slot_offload_roundtrip():
         idx = [slice(None)] * leaf.ndim
         idx[ax] = 0
         np.testing.assert_array_equal(
-            np.asarray(leaf[tuple(idx)]), eng.host.get(f"slot7/{i}"))
+            np.asarray(leaf[tuple(idx)]), eng.host.get(f"{ns7}/{i}"))
+
+
+def test_spill_epoch_namespacing_across_runs():
+    """Reused rids across run() calls land in distinct namespaces, so a
+    later run can never alias (or clobber) an earlier run's spill."""
+    cfg = _cfg()
+    eng = ServingEngine(cfg, b_max=1, max_len=48)
+    p = _prompts(cfg, 1)[0]
+    eng.submit(Request(rid=0, prompt=p.copy(), max_new=2))
+    eng.run()
+    eng.submit(Request(rid=0, prompt=p.copy(), max_new=2))
+    eng.run()
+    eng.shutdown()
+    keys = eng.host.keys()
+    assert any(k.startswith("e1/slot0/") for k in keys)
+    assert any(k.startswith("e2/slot0/") for k in keys)
+
+
+def test_spill_lru_eviction_prefers_finished_over_parked():
+    """With spill_cap=1: a finished request's spill is evicted when the
+    cap is exceeded, but a parked (preempted) request's spill is pinned —
+    it must survive to resume losslessly."""
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=1, max_len=64,
+                                 placement="host", spill_cap=1)
+    prompts = _prompts(cfg, 2)
+    # park rid=0 mid-flight: its spill namespace becomes pinned
+    eng.submit(Request(rid=0, prompt=prompts[0].copy(), max_new=8))
+    eng._admit()
+    done = []
+    eng._decode_step(done)
+    eng.preempt_slot(0)
+    parked_ns = eng.queue[0].spill_ns
+    assert parked_ns
+    # slip rid=1 in FRONT of the parked request so it occupies the single
+    # slot; the parked one stays queued (and therefore pinned) meanwhile
+    eng.submit(Request(rid=1, prompt=prompts[1].copy(), max_new=2))
+    eng.queue.reverse()                # [rid1, parked rid0]
+    eng._admit()
+    assert eng.slots[0] is not None and eng.slots[0].rid == 1
+    while eng.slots[0] is not None:    # finish rid1 -> its slot spills
+        eng._decode_step(done)
+    # cap=1 with two spills (parked + rid1's): rid1's was evicted, the
+    # parked one survived the LRU pass despite being older
+    assert eng.stats["spill_evictions"] == 1
+    assert any(k.startswith(parked_ns + "/") for k in eng.host.keys()), \
+        "parked request's spill was evicted"
+    assert not any(k.startswith(eng._spill_ns(1) + "/")
+                   for k in eng.host.keys())
+    # the parked request still resumes losslessly after the eviction
+    resumed = eng.run()
+    eng.shutdown()
+    ref = OffloadedServingEngine(cfg, b_max=1, max_len=64,
+                                 placement="host")
+    ref.submit(Request(rid=0, prompt=prompts[0].copy(), max_new=8))
+    expect = ref.run()[0].out
+    ref.shutdown()
+    assert [r.out for r in resumed if r.rid == 0] == [expect]
+
+
+def test_spill_cap_never_evicts_a_just_preempted_request():
+    """Regression: the request being preempted must already count as
+    parked when its own spill is recorded — with spill_cap=1 and another
+    parked request pinning the LRU, the second preemption's spill used
+    to be evicted immediately, and its resume raised KeyError."""
+    cfg = _cfg()
+    eng = ServingEngine(cfg, b_max=2, max_len=64, spill_cap=1)
+    prompts = _prompts(cfg, 2)
+    for rid in (0, 1):
+        eng.submit(Request(rid=rid, prompt=prompts[rid].copy(), max_new=8))
+    eng._admit()
+    done = []
+    eng._decode_step(done)
+    eng.preempt_slot(0)               # parks A (pins its spill)
+    eng.preempt_slot(1)               # parks B — must be pinned too
+    for r in eng.queue:
+        assert any(k.startswith(r.spill_ns + "/")
+                   for k in eng.host.keys()), f"rid {r.rid} spill evicted"
+    resumed = {r.rid: r.out for r in eng.run()}
+    # both resumed losslessly: same tokens as an uninterrupted run
+    ref = ServingEngine(cfg, b_max=2, max_len=64)
+    for rid in (0, 1):
+        ref.submit(Request(rid=rid, prompt=prompts[rid].copy(), max_new=8))
+    expect = {r.rid: r.out for r in ref.run()}
+    assert resumed == expect
 
 
 def test_offload_pipeline_report_populated():
@@ -129,6 +353,7 @@ def test_offload_pipeline_report_populated():
     assert rep["span_s"] > 0
     assert rep["per_kind"]["compute"]["count"] > 0
     assert rep["per_kind"]["weight_load"]["count"] > 0
+    assert rep["per_kind"]["weight_load"]["bytes"] > 0
     assert rep["per_kind"]["kv_load"]["count"] > 0
     assert rep["per_kind"]["kv_save"]["count"] > 0
     assert 0 < rep["compute_util"] <= 1

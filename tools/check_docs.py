@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Docs health check: fail CI when the docs rot.
+
+Three checks over README.md and docs/*.md:
+
+1. markdown links: every relative `[text](path)` target exists;
+2. inline code paths: every backtick-quoted repo path (`docs/...`,
+   `tests/...`, `benchmarks/...`, `src/...`, or a `src/repro`-relative
+   module path like `core/pipeline.py`, optionally with a `::symbol`
+   suffix) resolves to a real file;
+3. quickstart commands: every `PYTHONPATH=src python ...` command found
+   in fenced code blocks is executed in --help / --list / compile-only
+   form, so a renamed flag or moved entry point fails the check instead
+   of rotting silently.
+
+Run locally:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#\s]+)\)")
+CODEPATH_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|examples|tools|core|serving|models|"
+    r"quant|launch|kernels|configs)/[A-Za-z0-9_./-]+\.(?:py|md|yml|yaml))"
+    r"(?:::[A-Za-z0-9_.]+)?`")
+FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+
+
+def resolve_code_path(p: str):
+    for base in (ROOT, ROOT / "src" / "repro"):
+        if (base / p).exists():
+            return base / p
+    return None
+
+
+def extract_commands(block: str):
+    """`PYTHONPATH=src python ...` lines, with backslash continuations
+    folded in."""
+    out = []
+    lines = block.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i].strip()
+        if line.startswith("PYTHONPATH=src python"):
+            cmd = line
+            while cmd.endswith("\\") and i + 1 < len(lines):
+                i += 1
+                cmd = cmd[:-1].rstrip() + " " + lines[i].strip()
+            out.append(cmd)
+        i += 1
+    return out
+
+
+def check_file(md: Path, errors: list):
+    text = md.read_text()
+    rel = md.relative_to(ROOT)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not (md.parent / target).exists() and not (ROOT / target).exists():
+            errors.append(f"{rel}: dead link -> {target}")
+    for m in CODEPATH_RE.finditer(text):
+        if resolve_code_path(m.group(1)) is None:
+            errors.append(f"{rel}: dead code path -> `{m.group(1)}`")
+    cmds = []
+    for block in FENCE_RE.findall(text):
+        cmds += extract_commands(block)
+    return cmds
+
+
+def dry_form(cmd: str):
+    """Map a quickstart command to a cheap dry invocation (argparse
+    --help exits before heavy imports; benchmarks use --list)."""
+    argv = cmd.split()
+    assert argv[0] == "PYTHONPATH=src" and argv[1] == "python"
+    rest = argv[2:]
+    if rest[0] == "-m" and rest[1] == "pytest":
+        return None                       # running the suite is CI's job
+    if rest[0] == "-m":
+        return [sys.executable, "-m", rest[1], "--help"]
+    if rest[0].endswith("benchmarks/run.py"):
+        return [sys.executable, rest[0], "--list"]
+    if rest[0].endswith(".py"):
+        # plain script: syntax-check only (examples may run long)
+        return [sys.executable, "-m", "py_compile", rest[0]]
+    return None
+
+
+def main() -> int:
+    errors: list[str] = []
+    commands: list[str] = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"missing doc file: {md.relative_to(ROOT)}")
+            continue
+        commands += check_file(md, errors)
+    if not any(md.name == "ARCHITECTURE.md" for md in DOC_FILES):
+        errors.append("docs/ARCHITECTURE.md missing")
+    if not any(md.name == "BENCHMARKS.md" for md in DOC_FILES):
+        errors.append("docs/BENCHMARKS.md missing")
+
+    env = {**os.environ, "PYTHONPATH": "src"}
+    seen = set()
+    for cmd in commands:
+        dry = dry_form(cmd)
+        if dry is None or tuple(dry) in seen:
+            continue
+        seen.add(tuple(dry))
+        try:
+            r = subprocess.run(dry, cwd=ROOT, capture_output=True,
+                               text=True, env=env, timeout=180)
+        except subprocess.TimeoutExpired:
+            errors.append(f"quickstart dry-run timed out: {' '.join(dry)}")
+            continue
+        if r.returncode != 0:
+            errors.append(f"quickstart dry-run failed ({' '.join(dry)}):\n"
+                          f"{r.stderr.strip()[-400:]}")
+
+    if errors:
+        print("docs check FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"docs check OK: {len(DOC_FILES)} files, {len(seen)} quickstart "
+          f"commands dry-run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
