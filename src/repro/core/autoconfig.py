@@ -2,8 +2,15 @@
 
 Inputs: model, batch, lengths, precision, tier capacities/bandwidths.
 Outputs: weight placement (device/host/disk), pipeline mode
-(performance-optimized vs memory-efficient), block size, and whether the
-INT4 fused kernel is enabled (batch < 16, per §3.5).
+(performance-optimized vs memory-efficient), preload depth (how many
+layers the performance pipeline keeps in flight — sized from the device
+headroom left after the KV cache, per ``memory_model.depth_capacity``),
+block size, and whether the INT4 fused kernel is enabled (batch < 16,
+per §3.5).  ``serving_preload_depth`` is the serving-engine entry point:
+same sizing, plus a host-side sanity check that the weight tier, KV
+cache, and retained slot spills (``spill_cap``) actually coexist in host
+RAM — when they can't, deep windows only amplify thrash, so it falls
+back to depth 1.  docs/TUNING.md walks a worked example.
 """
 from __future__ import annotations
 
@@ -11,7 +18,8 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.memory_model import MemoryEstimate, estimate
+from repro.core.memory_model import (MemoryEstimate, depth_capacity,
+                                     estimate, quant_weight_ratio)
 from repro.core.offload import MemoryBudget
 
 
@@ -23,6 +31,7 @@ class AutoConfig:
     use_int4_kernel: bool
     est: MemoryEstimate
     reason: str
+    preload_depth: int = 1      # performance-pipeline resident window - 1
 
 
 def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
@@ -32,12 +41,10 @@ def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
               block_bytes: int = 32 << 20) -> AutoConfig:
     budget = budget or MemoryBudget()
     s = prompt_len + gen_len
-    p = precision_bytes if quant is None else 0.5
-    p_eff = max(1, int(p * 2)) / 2  # keep fractional int4 byte-costs honest
 
     est_pre = estimate(cfg, batch=batch, seq=s, p=precision_bytes,
                        preload=True)
-    ratio = p / precision_bytes
+    ratio = quant_weight_ratio(precision_bytes, quant)
     W = int(est_pre.weights * ratio)
     C = est_pre.kv_cache
     # quantization shrinks only the *weight* component of peak M; the
@@ -65,5 +72,41 @@ def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
                 - (est_min.w_mha + est_min.w_mlp) * (1.0 - ratio))
 
     use_int4 = (quant == "int4") and batch < 16   # §3.5
+    if pipeline == "performance":
+        depth = depth_capacity(cfg, batch=batch, seq=s, p=precision_bytes,
+                               budget_bytes=budget.device, quant=quant)
+    else:
+        depth = 1           # memory mode: single-layer residency, no window
     return AutoConfig(placement, pipeline, block_bytes, use_int4, est_pre,
-                      why)
+                      why, depth)
+
+
+def serving_preload_depth(cfg: ModelConfig, *, b_max: int, max_len: int,
+                          precision_bytes: int = 4,
+                          quant: Optional[str] = None, spill_cap: int = 0,
+                          placement: str = "host",
+                          budget: Optional[MemoryBudget] = None,
+                          depth_cap: int = 8) -> int:
+    """Preload depth for an offloaded serving engine (the ``depth=None``
+    default of ``OffloadedServingEngine``): ``depth_capacity`` against the
+    device budget, with one serving-specific guard — the host tier must
+    hold the full decode KV cache, up to ``spill_cap`` retained slot
+    spills (each one request's KV rows), and — for host placement — the
+    weights themselves (packed under quant; disk placement keeps only
+    in-flight buffers in host RAM, so weights don't count there).  When
+    the host can't, it is already the bottleneck and a deeper window
+    just queues more transfers behind a thrashing tier: fall back to
+    depth 1."""
+    budget = budget or MemoryBudget()
+    est = estimate(cfg, batch=b_max, seq=max_len, p=precision_bytes,
+                   preload=1)
+    spill_bytes = spill_cap * (est.kv_cache // max(1, b_max))
+    # host weights sit packed under quant (the engine quantizes at put());
+    # same byte convention as configure()/depth_capacity
+    w_host = int(est.weights * quant_weight_ratio(precision_bytes, quant)) \
+        if placement == "host" else 0
+    if w_host + est.kv_cache + spill_bytes > budget.host:
+        return 1
+    return depth_capacity(cfg, batch=b_max, seq=max_len, p=precision_bytes,
+                          budget_bytes=budget.device, quant=quant,
+                          depth_cap=depth_cap)

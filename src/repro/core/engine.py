@@ -109,6 +109,8 @@ class PipelinedLM:
     live (paper's Weight-on GPU/CPU/Disk).  cache_on: "host" | "device".
     pipeline: "performance" | "memory" | "sequential".
     quant: None | "int4".
+    depth: performance-pipeline preload window (layers in flight beyond
+    the computing one; 1 = the paper's two-resident-layer invariant).
     """
 
     def __init__(self, cfg: ModelConfig, *, batch: int, max_len: int,
@@ -116,7 +118,7 @@ class PipelinedLM:
                  pipeline: str = "performance", quant: Optional[str] = None,
                  fused_int4: bool = True, disk_root: str = "/tmp/pipo_disk",
                  block_bytes: int = 8 << 20, n_io_threads: int = 3,
-                 cold_reads: bool = False, seed: int = 0):
+                 cold_reads: bool = False, seed: int = 0, depth: int = 1):
         assert placement in ("device", "host", "disk")
         self.cfg = cfg
         self.batch = batch
@@ -124,6 +126,7 @@ class PipelinedLM:
         self.placement = placement
         self.cache_on = cache_on
         self.quant = quant
+        self.depth = depth
         self.trace = Trace()
         self.host = HostStore()
         self.device = DeviceStore()
@@ -252,6 +255,14 @@ class PipelinedLM:
     def release_weights(self, j: int, handle):
         del handle  # device arrays freed by GC; stores unaffected
 
+    def kv_nbytes(self, i: int, j: int) -> int:
+        """Bytes unit j's KV_LOAD moves over the link (0 when the cache is
+        device-resident and nothing crosses)."""
+        if self.cache_on == "device" or not self.is_mha(j):
+            return 0
+        l = self.units[j].layer
+        return self.host.get(f"kc[{l}]").nbytes * 2
+
     def load_kv(self, i: int, j: int):
         l = self.units[j].layer
         if self.cache_on == "device":
@@ -339,7 +350,8 @@ class PipelinedLM:
         # preloads are always valid; saves drain at shutdown().
         sched = PipelineScheduler(len(self.units), self.pipeline_mode,
                                   trace=self.trace,
-                                  warm=self.pipeline_mode == "performance")
+                                  warm=self.pipeline_mode == "performance",
+                                  depth=self.depth)
         self._pool = sched.pool
         t0 = time.perf_counter()
         outs = []

@@ -8,6 +8,13 @@ heads, d_h MLP hidden dim.
   W = 2*W_embed + l*(W_mha + W_mlp)
   C = 2*p*b*s*l*d*(h_kv/h)                (total KV cache)
   peak M = max(M_mha, M_mlp, M_embed) with/without preloading
+
+``preload`` generalizes the paper's boolean to an integer *depth*: the
+number of extra resident layers the pipeline keeps in flight beyond the
+computing one (``PipelineScheduler(depth=D)`` holds D+1 layers).  The
+paper's performance pipeline is depth 1, the memory pipeline depth 0.
+``depth_capacity`` inverts the model: the largest depth whose resident
+window still fits a device budget.
 """
 from __future__ import annotations
 
@@ -47,7 +54,7 @@ def weight_sizes(cfg: ModelConfig, p: int):
 
 
 def estimate(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
-             preload: bool = True) -> MemoryEstimate:
+             preload: "bool | int" = True) -> MemoryEstimate:
     d, V, l = cfg.d_model, cfg.vocab_size, cfg.num_layers
     b, s = batch, seq
     h = max(1, cfg.num_heads)
@@ -59,7 +66,7 @@ def estimate(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
     C = int(2 * p * b * s * l * d * hkv_ratio)
     C_layer = C // max(1, l)
 
-    pre_n = 1 if preload else 0       # extra resident layer when preloading
+    pre_n = int(preload)              # extra resident layers (preload depth)
 
     # ---- prefill stage (Appendix B.1) ----
     m_mha_pre = (p * b * s * (5 * d + h * s)
@@ -82,3 +89,38 @@ def estimate(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
     return MemoryEstimate(int(W), int(C), int(peak_prefill),
                           int(peak_decode), int(w_mha), int(w_mlp),
                           int(w_embed))
+
+
+def quant_weight_ratio(p: int, quant: "str | None") -> float:
+    """Streamed-weight byte ratio under quantization: INT4 packs two
+    nibbles per byte (+ scales), so weights cost ~0.5 bytes each against
+    a p-byte baseline.  The single source for the convention shared by
+    ``configure``, ``depth_capacity``, and ``serving_preload_depth``."""
+    return (0.5 / p) if quant == "int4" else 1.0
+
+
+def depth_capacity(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
+                   budget_bytes: int, quant: "str | None" = None,
+                   depth_cap: int = 8) -> int:
+    """Largest preload depth whose resident window fits ``budget_bytes``
+    of device memory.
+
+    Depth D keeps D+1 schedulable layers resident: the computing layer
+    plus D in-flight preloads, each pinning its weights and its decode KV
+    working copy.  Activations are depth-independent, so the marginal
+    cost of one more depth step is one layer's weights (quant-scaled:
+    INT4 units cross the link and sit in flight packed, the same
+    convention ``autoconfig.configure`` uses for placement) plus one
+    layer's KV slab; the base cost is the depth-0 peak.  Always returns
+    at least 1 — the pipeline's minimum useful window — even when the
+    budget is already blown (placement, not depth, is the knob there)."""
+    est0 = estimate(cfg, batch=batch, seq=seq, p=p, preload=0)
+    base = max(est0.peak_prefill, est0.peak_decode)
+    w_layer = int(max(est0.w_mha, est0.w_mlp)
+                  * quant_weight_ratio(p, quant))
+    kv_layer = est0.kv_cache // max(1, cfg.num_layers)
+    per_extra = max(1, w_layer + kv_layer)
+    headroom = budget_bytes - base
+    if headroom < per_extra:
+        return 1
+    return int(max(1, min(depth_cap, headroom // per_extra)))

@@ -11,8 +11,9 @@ Thread-pool principles (paper §3.2.1):
     the same layer's KV-load in the next token loop.
 
 Scheduling modes:
-  * "performance"  — preload layer j+1's weights during layer j's compute
-    (two layers resident; paper's performance-optimized pipeline);
+  * "performance"  — preload the next ``depth`` layers' weights during
+    layer j's compute (``depth + 1`` layers resident; ``depth=1`` is the
+    paper's two-resident-layer performance pipeline);
   * "memory"       — single layer resident; loads start only after the
     previous layer's memory is released; KV-save synchronized before the
     next save launches (paper's memory-efficient pipeline);
@@ -21,10 +22,11 @@ Scheduling modes:
 
 Warm pipeline (``PipelineScheduler(warm=True)``, performance mode): the
 scheduler keeps its pending-task state alive *across* ``generate()``
-calls and pre-submits the next call's first weight/KV loads while the
-current call's tail layers compute — serving engines that drain the
-scheduler once per decode step get zero cold-start bubble per token
-(see docs/ARCHITECTURE.md).
+calls and pre-submits the next call's first ``depth`` weight loads (and
+the window's KV loads) while the current call's tail layers compute —
+serving engines that drain the scheduler once per decode step get zero
+cold-start bubble per token (see docs/ARCHITECTURE.md and
+docs/TUNING.md for sizing ``depth``).
 """
 from __future__ import annotations
 
@@ -181,37 +183,77 @@ class PipelineScheduler:
       is_mha(j) -> bool
       weight_nbytes(j) -> int                (optional; trace byte account)
 
+    Preload depth (``depth``, performance pipeline only): the scheduler
+    keeps the weight loads of the next ``depth`` schedulable positions in
+    flight while the current layer computes — ``depth + 1`` layers
+    resident, ``depth=1`` reproduces the paper's two-resident-layer
+    invariant.  On weight-dominated links a deeper window hides more
+    transfer time behind the same compute (up to the pool's parallelism);
+    ``core.autoconfig`` sizes it from the memory budget.  ``depth`` is
+    clamped to ``num_layers - 1`` so no layer can ever have two loads
+    pending under the same key.
+
     Warm mode (``warm=True``, performance pipeline only): pending task
     state persists *across* ``generate()`` calls.  At the tail of a call,
-    the first weight load (and first KV load) of the NEXT call is
-    pre-submitted so it overlaps the tail layers' compute — a serving
-    engine that drains the scheduler once per decode step then starts
-    every step with its first layer's transfers already resident instead
-    of paying a cold-start bubble per token.  Iteration indices become
-    global (monotonic across calls) so the KV save(i-1,j)-before-
-    load(i,j) check keeps working across call boundaries.
+    the first ``depth`` weight loads (and the window's KV loads) of the
+    NEXT call are pre-submitted so they overlap the tail layers' compute
+    — a serving engine that drains the scheduler once per decode step
+    then starts every step with its first layers' transfers already
+    resident instead of paying a cold-start bubble per token.  Iteration
+    indices become global (monotonic across calls) so the KV
+    save(i-1,j)-before-load(i,j) check keeps working across call
+    boundaries.
     """
 
     def __init__(self, num_layers: int, mode: str = "performance",
                  pool: Optional[ThreadPool] = None,
-                 trace: Optional[Trace] = None, warm: bool = False):
+                 trace: Optional[Trace] = None, warm: bool = False,
+                 depth: int = 1):
         assert mode in PIPELINE_MODES, mode
         self.n = num_layers
         self.mode = mode
         self.trace = trace or Trace()
-        self.pool = pool or ThreadPool(3, self.trace)
-        self._owns_pool = pool is None
         # cross-call ("warm pipeline") state: preloading across generate()
         # calls only makes sense in performance mode — memory mode's
         # single-layer-resident invariant forbids a second in-flight load,
         # and sequential is a full-serialization baseline by definition.
         self.warm = bool(warm) and mode == "performance"
+        self.depth = self.clamp_depth(mode, num_layers, depth)
+        self.pool = pool or ThreadPool(self.pool_size(self.depth),
+                                       self.trace)
+        self._owns_pool = pool is None
         self._w_tasks: Dict[int, Task] = {}          # j -> pending load
         self._kv_tasks: Dict[tuple, Task] = {}       # (i, j) -> pending load
         self._save_tasks: Dict[tuple, Task] = {}     # (i, j) -> pending save
         self._iter0 = 0                              # global iteration base
 
     # -- helpers ------------------------------------------------------------
+    @staticmethod
+    def clamp_depth(mode: str, num_layers: int, depth: int) -> int:
+        """Effective preload depth: > 1 only exists in performance mode,
+        and the clamp to n-1 keeps every pending weight load's layer key
+        unique (window positions p+1..p+depth are distinct mod n iff
+        depth <= n-1).  Engines that pre-build the transfer pool must use
+        this + ``pool_size`` so their pool matches the scheduler's
+        window."""
+        if mode != "performance":
+            return 1
+        return max(1, min(int(depth), max(1, num_layers - 1)))
+
+    @staticmethod
+    def pool_size(depth: int) -> int:
+        """Transfer workers for a depth-D window: depth workers for the
+        window's weight loads plus 2 of KV headroom (depth=1 -> the
+        paper's one-worker-per-transfer-type pool of 3).  The window can
+        also hold up to depth KV *pre*loads, but those are short-lived
+        relative to weight loads (cache rows vs merged layer buffers)
+        and share the headroom; what the sizing must prevent is weight
+        loads monopolizing every worker — with a fixed 3-worker pool,
+        depth>=2 queued far-future weight preloads in front of the
+        imminent KV traffic and measurably REGRESSED KV-heavy links
+        (see docs/BENCHMARKS.md)."""
+        return depth + 2
+
     def _submit(self, kind: TaskType, name: str, fn, priority=0,
                 nbytes: int = 0) -> Task:
         t = Task(kind, name, fn)
@@ -221,19 +263,17 @@ class PipelineScheduler:
             t.wait()
         return t
 
-    def _next_mha(self, model, j):
-        for k in range(j + 1, self.n):
-            if model.is_mha(k):
-                return k
-        return None
-
     # -- warm-pipeline maintenance (main thread) ----------------------------
     def drop_kv_preloads(self):
-        """Discard pending cross-call KV preloads (main thread; blocks until
-        the in-flight loads finish so their host-side reads can't race the
-        caller's mutation).  Call before mutating KV state outside the
-        pipeline (e.g. a serving slot restore writes host KV directly) —
-        the preloaded device copies would be stale."""
+        """Discard ALL pending cross-call KV preloads — with ``depth > 1``
+        a warm call's tail leaves up to ``depth`` of them in flight (one
+        per MHA position in the window), not just the next layer's.  Main
+        thread; blocks until every in-flight load finishes so its
+        host-side reads can't race the caller's mutation.  Call before
+        mutating KV state outside the pipeline (e.g. a serving slot
+        restore writes host KV directly) — every preloaded device copy
+        would be stale.  Weight preloads are untouched (weights are
+        immutable)."""
         for t in self._kv_tasks.values():
             try:
                 t.wait()
@@ -262,8 +302,10 @@ class PipelineScheduler:
         w_tasks, kv_tasks, save_tasks = (self._w_tasks, self._kv_tasks,
                                          self._save_tasks)
         base = self._iter0
+        total = n * num_iterations             # call-local position count
         outputs = []
         nbytes_of = getattr(model, "weight_nbytes", None)
+        kv_nbytes_of = getattr(model, "kv_nbytes", None)
 
         def submit_weight(j):
             if j is not None and j < n and j not in w_tasks:
@@ -272,20 +314,58 @@ class PipelineScheduler:
                     lambda j=j: model.load_weights(j),
                     nbytes=nbytes_of(j) if nbytes_of else 0)
 
-        def submit_kv(i, j):
+        def submit_kv(i, j, blocking=True):
             if j is None or not model.is_mha(j):
                 return
             if (i, j) in kv_tasks:
                 return
-            # KV-save completion check, advanced one layer early (paper):
+            # KV-save completion check, advanced ahead of the load (paper):
             # the save from iteration i-1, layer j must be done before we
-            # load layer j's cache in iteration i.
-            prev_save = save_tasks.pop((i - 1, j), None)
+            # load layer j's cache in iteration i.  A *pre*load must not
+            # stall the main thread on an unfinished save — skip it; a
+            # later window pass (or the blocking just-in-time submit)
+            # retries once the save has landed.
+            prev_save = save_tasks.get((i - 1, j))
             if prev_save is not None:
+                if not blocking and not prev_save.done.is_set():
+                    return
+                save_tasks.pop((i - 1, j))
                 prev_save.wait()
             kv_tasks[(i, j)] = self._submit(
                 TaskType.KV_LOAD, f"kv[{i},{j}]",
-                lambda i=i, j=j: model.load_kv(i, j))
+                lambda i=i, j=j: model.load_kv(i, j),
+                nbytes=kv_nbytes_of(i, j) if kv_nbytes_of else 0)
+
+        def preload_window(pc):
+            """Keep the next ``depth`` positions' weight loads — and the
+            window's KV loads, plus the paper's advance-one-MHA rule — in
+            flight while position ``pc`` computes.  Positions past the
+            call's tail belong to the NEXT call (warm pipelines only)."""
+            for d in range(1, self.depth + 1):
+                p = pc + d
+                if p >= total and not self.warm:
+                    break
+                submit_weight(p % n)
+            # KV preload of (i, j) is legal only once compute(i-1, j) has
+            # been issued — before that, the save it must trail is not
+            # even in save_tasks, so the save-before-load check couldn't
+            # see it.  Structurally that bounds the lookahead to n-1
+            # positions (the distance to the same layer one iteration
+            # earlier).
+            seen_mha = False
+            for d in range(1, n):
+                p = pc + d
+                if p >= total and not self.warm:
+                    break
+                jp = p % n
+                if not model.is_mha(jp):
+                    continue
+                if d > self.depth and seen_mha:
+                    break              # beyond the window AND advanced one
+                submit_kv(base + p // n, jp, blocking=False)
+                seen_mha = True
+                if d >= self.depth:
+                    break
 
         for it in range(num_iterations):
             gi = base + it                         # global iteration index
@@ -302,26 +382,13 @@ class PipelineScheduler:
                     kv = kv_tasks.pop((gi, j)).wait()
 
                 if self.mode == "performance":
-                    # Preload: the next weight load starts only after the
-                    # previous one completed (= now), overlapping with this
-                    # layer's compute (paper §3.1.2).  At the stack tail a
-                    # warm scheduler preloads for the NEXT generate() call.
-                    if j + 1 < n:
-                        submit_weight(j + 1)
-                    elif it + 1 < num_iterations or self.warm:
-                        submit_weight(0)
-                    # KV-load advanced one MHA layer ahead (§3.1.2).
-                    nm = self._next_mha(model, j)
-                    if nm is not None:
-                        submit_kv(gi, nm)
-                    elif it + 1 < num_iterations or self.warm:
-                        fm = self._next_mha(model, -1)
-                        # fm == n-1 would preload BEFORE this iteration's
-                        # save of that same layer is even submitted (the
-                        # save-before-load check can't see it): skip —
-                        # the next iteration loads it cold, correctly.
-                        if fm is not None and fm < n - 1:
-                            submit_kv(gi + 1, fm)
+                    # Preload: each window load starts only after the one
+                    # ``depth`` positions back completed (= now),
+                    # overlapping with this layer's compute (paper §3.1.2;
+                    # depth=1 is the paper's next-layer preload).  At the
+                    # stack tail a warm scheduler preloads for the NEXT
+                    # generate() call.
+                    preload_window(it * n + j)
 
                 # --- Compute(i, j) on the main thread ----------------------
                 ct = Task(TaskType.COMPUTE, f"c[{gi},{j}]",

@@ -84,7 +84,10 @@ class Task:
     # BEFORE the task is handed to a pool (a VirtualPool traces the task
     # synchronously inside submit), and copied onto the TraceEvent so
     # per-task-type transfer volumes are assertable on traces (e.g. the
-    # MoE routed-union invariant: union bytes < whole-bank bytes).
+    # MoE routed-union invariant: union bytes < whole-bank bytes).  The
+    # scheduler fills it for WEIGHT_LOADs (model.weight_nbytes) and
+    # KV_LOADs (model.kv_nbytes) when the model exposes those hooks, so
+    # report() splits link volume by task kind.
     nbytes: int = 0
     # virtual-transport hook: called by wait() once the task is done, so a
     # VirtualPool can advance its clock to the waiter's sync point.

@@ -7,8 +7,10 @@ Resident weights (default):
 Offloaded weights through the PIPO pipeline (models larger than device
 memory; see serving/offload_engine.py).  The pipeline stays warm across
 decode steps by default (cross-step preloading; --no-warm for the cold
-per-step baseline), and --quant int4 streams packed INT4 weights over
-the offload link (~1/4 the bytes, dequant overlapped with compute):
+per-step baseline), keeps a budget-sized window of layers in flight
+(--preload-depth to override; docs/TUNING.md walks the sizing), and
+--quant int4 streams packed INT4 weights over the offload link (~1/4
+the bytes, dequant overlapped with compute):
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --scaled --offload --placement disk --pipeline performance
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
@@ -43,15 +45,23 @@ def main():
     ap.add_argument("--no-warm", action="store_true",
                     help="disable cross-step preloading (cold per-step "
                          "pipeline, the pre-warm baseline)")
+    ap.add_argument("--preload-depth", type=int, default=None,
+                    metavar="D",
+                    help="layers kept in flight beyond the computing one "
+                         "(--offload, performance pipeline); default: "
+                         "sized from the memory budget "
+                         "(autoconfig.serving_preload_depth, see "
+                         "docs/TUNING.md)")
     ap.add_argument("--sim-bw", type=float, default=None,
                     help="simulated link bandwidth floor in bytes/s "
                          "(deterministic transfer timing; see "
                          "docs/BENCHMARKS.md)")
     args = ap.parse_args()
     if not args.offload and (args.quant or args.no_warm
-                             or args.sim_bw is not None):
-        ap.error("--quant/--no-warm/--sim-bw only apply to --offload "
-                 "(the resident engine streams nothing)")
+                             or args.sim_bw is not None
+                             or args.preload_depth is not None):
+        ap.error("--quant/--no-warm/--sim-bw/--preload-depth only apply to "
+                 "--offload (the resident engine streams nothing)")
 
     from repro.configs import get_config, scaled_down
     from repro.serving import (OffloadedServingEngine, Request, ServingEngine)
@@ -66,6 +76,7 @@ def main():
                                      pipeline=args.pipeline,
                                      quant=args.quant,
                                      warm=not args.no_warm,
+                                     depth=args.preload_depth,
                                      sim_bw=args.sim_bw)
     else:
         eng = ServingEngine(cfg, b_max=args.b_max, max_len=args.max_len)
@@ -83,7 +94,8 @@ def main():
     if args.offload:
         rep = eng.pipeline_report()
         busy = {k: f"{v['busy_s']:.2f}s" for k, v in rep["per_kind"].items()}
-        print(f"pipeline[{args.pipeline}] compute_util={rep['compute_util']:.2f} "
+        print(f"pipeline[{args.pipeline}] depth={eng.sched.depth} "
+              f"compute_util={rep['compute_util']:.2f} "
               f"bubble_frac={rep['bubble_frac']:.2f} busy={busy}")
         eng.shutdown()
 

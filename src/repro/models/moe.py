@@ -118,6 +118,37 @@ def moe_ffn(x, params, cfg: MoEConfig, *, axis: Optional[str] = None,
     return jnp.sum(gathered, axis=1), aux
 
 
+def moe_ffn_union(x, w, ids, params, capacity: int):
+    """Compact routed-union combine for offloaded serving: the expert
+    stacks in ``params`` hold ONLY the ``U`` routed experts of this step
+    (``w_gate``/``w_up`` ``(U, d, f)``, ``w_down`` ``(U, f, d)``) and
+    ``ids`` (T, k) are remapped into ``[0, U)`` — so every dispatch
+    buffer and einsum here is union-sized, never bank-sized.
+
+    Bit parity with the full-bank ``moe_ffn`` path holds because (a) the
+    caller passes the SAME router outputs ``w``/``ids`` (remap done
+    outside), (b) ``capacity`` is computed from the FULL bank exactly as
+    ``moe_ffn`` does, and (c) the id remap is order-preserving (sorted
+    union -> rank), so the stable dispatch sort assigns identical slots
+    and drops identical overflow tokens; each expert's batched einsum is
+    independent of the other bank rows, so its values are unchanged."""
+    T, d = x.shape
+    U = params["w_gate"].shape[0]
+    k = ids.shape[1]
+    e_id, slot, valid = _dispatch_indices(ids, U, capacity)
+    slot_c = jnp.minimum(slot, capacity - 1)
+    buf = jnp.zeros((U, capacity, d), x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    buf = buf.at[e_id.reshape(-1), slot_c.reshape(-1)].add(
+        jnp.where(valid.reshape(-1, 1), x[flat_t], 0))
+    out_buf = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
+                          buf)
+    gathered = out_buf[e_id.reshape(-1), slot_c.reshape(-1)]
+    gathered = jnp.where(valid.reshape(-1, 1), gathered, 0)
+    gathered = gathered.reshape(T, k, d) * w[..., None].astype(x.dtype)
+    return jnp.sum(gathered, axis=1)
+
+
 def moe_ffn_replicated(x, params, cfg: MoEConfig, *, axis: Optional[str]):
     """Decode-mode EP: tokens x (T, d) are *replicated* over ``axis`` while
     experts stay sharded.  Every shard routes all T tokens, computes only its

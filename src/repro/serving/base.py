@@ -17,6 +17,14 @@ is provided (``kv_pool``), overlapping the device->host spill with the
 next decode steps instead of blocking the batch; admission to a spilled
 slot synchronizes on exactly the pending save task (task-level sync, the
 paper's §3.1.2 principle at request scope).
+
+Warm-pipeline engines (OffloadedServingEngine with
+``PipelineScheduler(warm=True, depth=D)``) carry in-flight cross-step
+state between the steps this class drives: up to D weight preloads and
+the window's KV preloads.  Any path here that mutates KV rows outside
+the pipeline (restore into a slot, spill reads) must go through the
+engine's drain hooks (``drain_saves`` + ``drop_kv_preloads``) first —
+with D > 1 there are *several* stale preloads to discard, not one.
 """
 from __future__ import annotations
 

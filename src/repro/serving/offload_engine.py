@@ -13,11 +13,20 @@ memory — the paper's headline scenario.
 
 Warm pipeline (default in performance mode): the scheduler persists
 across ``generate()`` calls (``PipelineScheduler(warm=True)``), so while
-step *t*'s tail layers compute, step *t+1*'s first weight load and first
-KV load are already in flight — steady-state decode pays no cold-start
-transfer bubble per token (ROADMAP item; FlexInfer-style cross-step
-preloading).  Disable with ``warm=False`` to reproduce the cold per-step
-baseline.
+step *t*'s tail layers compute, step *t+1*'s first weight/KV loads are
+already in flight — steady-state decode pays no cold-start transfer
+bubble per token (ROADMAP item; FlexInfer-style cross-step preloading).
+Disable with ``warm=False`` to reproduce the cold per-step baseline.
+
+Preload depth (``depth``): how many layers' transfers the pipeline keeps
+in flight beyond the computing one (``depth + 1`` resident).  The
+default ``depth=None`` sizes it from the memory budget
+(``autoconfig.serving_preload_depth``: device headroom after the KV
+cache, host headroom after ``spill_cap`` retained spills, quant mode);
+pass an int (or ``launch.serve --preload-depth``) to override.  On
+weight-dominated links depth >= 2 keeps multiple transfer workers busy
+and cuts ms/step below the paper's two-resident-layer invariant — see
+docs/TUNING.md.
 
 INT4 weight streaming (``quant="int4"``): eligible 2-D projections are
 stored packed (uint8 nibbles + groupwise scales), so only a quarter-ish
@@ -137,7 +146,7 @@ class OffloadedServingEngine(SlotEngineBase):
                  max_len: int = 256, seed: int = 0,
                  placement: str = "host", pipeline: str = "performance",
                  quant: Optional[str] = None, fused_int4: bool = True,
-                 warm: Optional[bool] = None,
+                 warm: Optional[bool] = None, depth: Optional[int] = None,
                  disk_root: str = "/tmp/pipo_serve_disk",
                  block_bytes: int = 8 << 20, n_io_threads: int = 3,
                  cold_reads: bool = False, sim_bw: Optional[float] = None,
@@ -146,8 +155,16 @@ class OffloadedServingEngine(SlotEngineBase):
             cfg.frontend != "embeds", \
             "offloaded serving supports token-frontend rope decoder stacks"
         assert quant in (None, "int4"), quant
+        if depth is None:
+            from repro.core.autoconfig import serving_preload_depth
+            depth = serving_preload_depth(cfg, b_max=b_max, max_len=max_len,
+                                          quant=quant, spill_cap=spill_cap,
+                                          placement=placement)
+        depth = PipelineScheduler.clamp_depth(pipeline, self._n_units(cfg),
+                                              depth)
         self.trace = Trace()
-        pool = ThreadPool(3, self.trace)
+        # pool sized to the window (depth weight loads + KV load + KV save)
+        pool = ThreadPool(PipelineScheduler.pool_size(depth), self.trace)
         super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=pool,
                          spill_cap=spill_cap)
         self.dist = Dist.local()
@@ -165,12 +182,24 @@ class OffloadedServingEngine(SlotEngineBase):
             cold_reads=cold_reads, sim_bw=sim_bw)
         params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
         self._phase = "prefill"           # until the first _decode_active
+        # bytes staged device-side into compact MoE combine stacks — the
+        # |union|-proportionality proof (tests assert it equals loaded
+        # experts x per-expert fp32 bytes, strictly below the full bank)
+        self.stats["moe_stack_bytes"] = 0
         self.units: List[_Unit] = []
         self._split_params(params)
         self._kv_init()
+        assert len(self.units) == self._n_units(cfg)
         self.sched = PipelineScheduler(len(self.units), pipeline, pool=pool,
-                                       trace=self.trace, warm=self.warm)
+                                       trace=self.trace, warm=self.warm,
+                                       depth=depth)
         self._jit_units()
+
+    @staticmethod
+    def _n_units(cfg: ModelConfig) -> int:
+        """Schedulable unit count (needed before the units are built, to
+        size the transfer pool from the clamped preload depth)."""
+        return cfg.num_periods * len(cfg.pattern) + len(cfg.remainder)
 
     # ---- weight tiering -----------------------------------------------------
     def _maybe_quant(self, tensors):
@@ -296,7 +325,10 @@ class OffloadedServingEngine(SlotEngineBase):
         """Four jitted stages replicating ``layers.apply_moe_ffn`` exactly
         (same ops, same order -> bit-identical to the resident engine)
         while exposing the gate output early enough to prefetch only the
-        routed experts."""
+        routed experts.  The combine is the compact ``moe_ffn_union``:
+        its expert stacks are (|union|, ...)-shaped with remapped ids, so
+        nothing bank-sized is ever materialized — it retraces per union
+        size, which is bounded by ``num_experts`` distinct shapes."""
         cfg = self.cfg
         m = cfg.moe
 
@@ -306,8 +338,7 @@ class OffloadedServingEngine(SlotEngineBase):
         def gate_fn(xn, wg):
             b, s, d = xn.shape
             logits = (xn.reshape(b * s, d) @ wg).astype(jnp.float32)
-            _, ids = moe_mod.router_topk(logits, m.top_k)
-            return ids
+            return moe_mod.router_topk(logits, m.top_k)
 
         def shared_fn(w, xn):
             if not m.num_shared:
@@ -315,11 +346,15 @@ class OffloadedServingEngine(SlotEngineBase):
             h = silu(xn @ w["ws_gate"]) * (xn @ w["ws_up"])
             return h @ w["ws_down"]
 
-        def combine_fn(x, xn, wg, wga, wup, wdn, shared_term):
+        def combine_fn(x, xn, gate_w, ids_u, wga, wup, wdn, shared_term):
             b, s, d = x.shape
-            out, _ = moe_mod.moe_ffn(
-                xn.reshape(b * s, d),
-                dict(wg=wg, w_gate=wga, w_up=wup, w_down=wdn), m, axis=None)
+            # full-bank capacity formula (moe_ffn's) — slot assignment and
+            # overflow drops must match the resident path bit-for-bit
+            capacity = int(m.capacity_factor * b * s * m.top_k
+                           / m.num_experts) + 1
+            out = moe_mod.moe_ffn_union(
+                xn.reshape(b * s, d), gate_w, ids_u,
+                dict(w_gate=wga, w_up=wup, w_down=wdn), capacity)
             x = x + out.reshape(b, s, d)
             if m.num_shared:
                 x = x + shared_term
@@ -366,6 +401,15 @@ class OffloadedServingEngine(SlotEngineBase):
         self.weights.sim_floor(sum(a.nbytes for a in self.kv[j].values()), t0)
         return dev
 
+    def kv_nbytes(self, i: int, j: int) -> int:
+        """Bytes unit j's KV_LOAD moves over the link (the whole per-unit
+        decode cache; 0 during prefill, which builds fresh caches) —
+        recorded on trace events so KV transfer volume shows up in
+        ``Trace.report()`` alongside weight bytes."""
+        if self._phase != "decode":
+            return 0
+        return sum(a.nbytes for a in self.kv[j].values())
+
     def save_kv(self, i: int, j: int, new_kv):
         """KV_SAVE body: scatter freshly-written cache rows back into the
         host arrays.  Transfer-pool thread; the scheduler guarantees the
@@ -408,42 +452,38 @@ class OffloadedServingEngine(SlotEngineBase):
         """Routed-union MoE (paper Appendix C.4, serving port): the gate
         forces a sync (experts unknown until it runs); then ONLY the union
         of routed experts streams through the pool as WEIGHT_LOAD tasks
-        while the shared expert computes.  Numerics match
-        ``layers.apply_moe_ffn`` bit-for-bit: unrouted experts enter the
-        dispatch einsum as zero weights, and zero-weight rows are never
-        gathered back.  Main thread (loads on pool threads).
-
-        The zero-padded full-bank stacks keep the combine einsum's
-        shapes identical to the resident engine's (the parity
-        guarantee); the cost is a bank-sized host->device copy per MoE
-        layer per step, which is a memcpy on this CPU container but
-        would matter over real PCIe — a compact (|union|,...) combine
-        with remapped expert ids is the known follow-up (ROADMAP)."""
+        while the shared expert computes.  The combine is *compact*:
+        expert ids are remapped onto the sorted union and the loaded
+        device buffers are stacked into (|union|, ...) arrays, so the
+        host->device boundary moves |union|-proportional bytes — the only
+        link crossings are the per-expert WEIGHT_LOADs themselves (traced
+        with their nbytes), never a bank-sized padded stack.  Numerics
+        still match ``layers.apply_moe_ffn`` bit-for-bit (see
+        ``moe.moe_ffn_union``).  Main thread (loads on pool threads)."""
         m = self.cfg.moe
         pre, gate, shared, combine = self._moe_fns[(u.group, u.q)]
         xn = pre(weights, x)
-        ids = np.asarray(gate(xn, u.router))      # sync point (paper)
-        union = sorted({int(e) for e in ids.reshape(-1)})
+        gate_w, ids = gate(xn, u.router)          # sync point (paper)
+        ids = np.asarray(ids)
+        union = np.unique(ids.reshape(-1))        # sorted routed experts
         tasks = []
         for e in union:
-            key = u.expert_keys[e]
+            key = u.expert_keys[int(e)]
             t = Task(TaskType.WEIGHT_LOAD, f"w[{key}]",
                      lambda key=key: self.weights.load(key))
             t.nbytes = self.weights.nbytes(key)
             self.sched.pool.submit(t)
-            tasks.append((e, t))
+            tasks.append(t)
         shared_term = shared(weights, xn)         # overlaps expert loads
-        d, f = self.cfg.d_model, m.expert_d_ff
-        wga = np.zeros((m.num_experts, d, f), np.float32)
-        wup = np.zeros((m.num_experts, d, f), np.float32)
-        wdn = np.zeros((m.num_experts, f, d), np.float32)
-        for e, t in tasks:
-            we = t.wait()
-            wga[e] = np.asarray(we["w_gate"])
-            wup[e] = np.asarray(we["w_up"])
-            wdn[e] = np.asarray(we["w_down"])
-        return combine(x, xn, u.router, jnp.asarray(wga), jnp.asarray(wup),
-                       jnp.asarray(wdn), shared_term)
+        ids_u = np.searchsorted(union, ids)       # order-preserving remap
+        loaded = [t.wait() for t in tasks]        # device arrays (deq'd)
+        wga = jnp.stack([we["w_gate"] for we in loaded])
+        wup = jnp.stack([we["w_up"] for we in loaded])
+        wdn = jnp.stack([we["w_down"] for we in loaded])
+        self.stats["moe_stack_bytes"] += int(wga.nbytes + wup.nbytes
+                                             + wdn.nbytes)
+        return combine(x, xn, gate_w, jnp.asarray(ids_u), wga, wup, wdn,
+                       shared_term)
 
     def finalize(self, i: int, x):
         tok = self._head(self.resident["embed"], self.resident["final_norm"],

@@ -109,15 +109,15 @@ class FakeMoEModel(FakeModel):
 
 
 def run_virtual(mode: str, n_layers: int = 3, iters: int = 3,
-                warm: bool = False, calls: int = 1):
+                warm: bool = False, calls: int = 1, depth: int = 1):
     """Drive the real scheduler over the fake model on a virtual clock;
     ``calls`` generate() invocations of ``iters`` iterations each (warm
-    schedulers keep their pipeline state across calls).  Returns
-    (model, trace, outputs-of-last-call)."""
+    schedulers keep their pipeline state across calls; ``depth`` is the
+    preload window).  Returns (model, trace, outputs-of-last-call)."""
     model = FakeModel(n_layers)
     pool = VirtualPool(3, cost_fn=cost_fn)
     sched = PipelineScheduler(model.n, mode, pool=pool, trace=pool.trace,
-                              warm=warm)
+                              warm=warm, depth=depth)
     outs = None
     for _ in range(calls):
         outs = sched.generate(model, lambda i: 0, iters)
@@ -126,13 +126,14 @@ def run_virtual(mode: str, n_layers: int = 3, iters: int = 3,
 
 
 def run_virtual_moe(mode: str = "performance", n_layers: int = 2,
-                    iters: int = 2, warm: bool = False, calls: int = 1):
+                    iters: int = 2, warm: bool = False, calls: int = 1,
+                    depth: int = 1):
     """Same as run_virtual but over FakeMoEModel (routed-union expert
     loads submitted from inside compute)."""
     model = FakeMoEModel(n_layers)
     pool = VirtualPool(3, cost_fn=cost_fn)
     sched = PipelineScheduler(model.n, mode, pool=pool, trace=pool.trace,
-                              warm=warm)
+                              warm=warm, depth=depth)
     model.pool = sched.pool
     outs = None
     for _ in range(calls):

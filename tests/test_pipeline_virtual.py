@@ -225,6 +225,155 @@ def test_warm_disabled_for_memory_and_sequential():
 
 
 # ---------------------------------------------------------------------------
+# Depth-D preload window
+# ---------------------------------------------------------------------------
+
+
+def _paired_residency(model, trace):
+    """[(position, load_event, release_t)] pairing each weight load with
+    the compute that consumes it (the k-th w[j] event belongs to global
+    iteration k; release = that compute's end).  Dangling warm preloads
+    (no compute ever consumed them) are skipped."""
+    ev = _by_name(trace)
+    out = []
+    for j in range(model.n):
+        for k, w in enumerate(ev.get(f"w[{j}]", [])):
+            name = f"c[{k},{j}]"
+            if name in ev:
+                out.append((k * model.n + j, w, _one(ev, name).t_end))
+    return sorted(out, key=lambda p: p[0])
+
+
+def test_depth_window_loads_start_in_stack_order():
+    """No preload overtakes an unevicted resident layer: weight loads
+    start in schedulable-position order even when ``depth`` of them are
+    in flight across the transfer workers."""
+    model, trace, _ = run_virtual("performance", n_layers=4, iters=2,
+                                  depth=3)
+    starts = [w.t_start for _, w, _ in _paired_residency(model, trace)]
+    assert starts == sorted(starts)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_depth_window_bounds_weight_residency(depth):
+    """At most depth+1 weight buffers are ever resident (interval = load
+    start -> consuming compute's end, when the layer is released), and a
+    deep window actually reaches that bound — the depth knob is real."""
+    model, trace, _ = run_virtual("performance", n_layers=4, iters=3,
+                                  depth=depth)
+    events = []
+    for _, w, release in _paired_residency(model, trace):
+        events.append((w.t_start, 1))
+        events.append((release, -1))
+    cur = peak = 0
+    for _, delta in sorted(events):      # (t, -1) sorts before (t, +1)
+        cur += delta
+        peak = max(peak, cur)
+    assert peak <= depth + 1, f"depth {depth} held {peak} layers resident"
+    assert peak == depth + 1, f"depth {depth} window never filled ({peak})"
+
+
+def test_depth_tokens_and_call_order_match_depth1():
+    """Depth is a scheduling change only: outputs and the compute call
+    sequence are identical at every depth."""
+    ref, _, ref_outs = run_virtual("performance", n_layers=3, iters=2,
+                                   depth=1)
+    ref_computes = [c for c in ref.calls if c[0] == "compute"]
+    for depth in (2, 3, 5):
+        m, _, outs = run_virtual("performance", n_layers=3, iters=2,
+                                 depth=depth)
+        assert outs == ref_outs == [m.n] * 2
+        assert [c for c in m.calls if c[0] == "compute"] == ref_computes
+
+
+def test_kv_save_before_load_holds_at_depth():
+    """The save(i-1,j)-before-load(i,j) invariant survives deep windows:
+    a KV preload is deferred until the save it trails has been issued
+    (structural n-1 bound) and completed (non-blocking skip)."""
+    model, trace, _ = run_virtual("performance", n_layers=3, iters=3,
+                                  depth=4)
+    ev = _by_name(trace)
+    for i in range(1, 3):
+        for j in range(model.n):
+            if not model.is_mha(j):
+                continue
+            save = _one(ev, f"sv[{i - 1},{j}]")
+            for load in ev[f"kv[{i},{j}]"]:
+                assert save.t_end <= load.t_start, (i, j)
+
+
+def test_warm_depth2_beats_warm_depth1_beats_cold():
+    """The acceptance-criterion shape on the virtual clock: a deeper
+    warm window strictly shrinks the makespan of a decode-step sequence
+    (weight-dominated costs; 3 virtual transfer slots)."""
+    spans = {}
+    for depth in (1, 2, 3):
+        _, t, _ = run_virtual("performance", n_layers=3, iters=1,
+                              warm=True, calls=4, depth=depth)
+        spans[depth] = t.span()
+    _, t_cold, _ = run_virtual("performance", n_layers=3, iters=1,
+                               warm=False, calls=4, depth=1)
+    assert spans[2] < spans[1] < t_cold.span()
+    assert spans[3] <= spans[2]
+
+
+def test_warm_depth_window_preloads_next_call_layers():
+    """With depth=3 the tail of call t has the next call's first THREE
+    weight loads in flight before the tail compute finishes — not just
+    w[0]."""
+    model, trace, _ = run_virtual("performance", n_layers=3, iters=1,
+                                  warm=True, calls=2, depth=3)
+    ev = _by_name(trace)
+    tail_c = _one(ev, f"c[0,{model.n - 1}]")
+    for j in range(3):
+        loads = ev[f"w[{j}]"]
+        assert len(loads) >= 2, f"w[{j}] not preloaded for call 1"
+        assert loads[1].t_start <= tail_c.t_end, \
+            f"w[{j}] preload missed call 0's tail window"
+
+
+def test_drop_kv_preloads_discards_all_depth_preloads():
+    """depth > 1 leaves SEVERAL cross-call KV preloads pending at a warm
+    call's tail; drop_kv_preloads must discard all of them, and the next
+    call must reload fresh while still honoring save-before-load."""
+    from repro.core.pipeline import PipelineScheduler, VirtualPool
+    from fake_model import FakeModel, cost_fn
+    model = FakeModel(3)
+    pool = VirtualPool(3, cost_fn=cost_fn)
+    sched = PipelineScheduler(model.n, "performance", pool=pool,
+                              trace=pool.trace, warm=True, depth=4)
+    outs = sched.generate(model, lambda i: 0, 1)
+    assert len(sched._kv_tasks) >= 2, \
+        "depth-4 warm tail should leave multiple KV preloads in flight"
+    sched.drop_kv_preloads()
+    assert not sched._kv_tasks
+    outs2 = sched.generate(model, lambda i: 0, 1)
+    assert outs2 == outs
+    sched.shutdown()
+    ev = _by_name(pool.trace)
+    for j in range(model.n):
+        if not model.is_mha(j):
+            continue
+        save = _one(ev, f"sv[0,{j}]")
+        loads = ev[f"kv[1,{j}]"]       # dropped preload + fresh reload
+        assert loads and all(save.t_end <= l.t_start for l in loads), j
+
+
+def test_moe_union_invariant_holds_at_depth():
+    """Deep weight windows don't disturb routed-union expert streaming:
+    per (iteration, MoE unit) exactly the routed union loads, once."""
+    model, trace, _ = run_virtual_moe("performance", n_layers=2, iters=2,
+                                      depth=3)
+    for i in range(2):
+        for j in range(model.n):
+            if not model.is_moe(j):
+                continue
+            loaded = [e for (ii, jj, e) in model.expert_loads
+                      if (ii, jj) == (i, j)]
+            assert loaded == model.routed(i, j), (i, j, loaded)
+
+
+# ---------------------------------------------------------------------------
 # MoE routed-union expert streaming
 # ---------------------------------------------------------------------------
 

@@ -60,6 +60,31 @@ def test_offload_decode_parity_cold(resident_tokens):
     assert _serve(eng, _prompts(cfg)) == resident_tokens
 
 
+@pytest.mark.parametrize("depth", [2, 3])
+def test_offload_decode_parity_depth(resident_tokens, depth):
+    """Depth-D windows are a scheduling change only: token parity with
+    the resident engine holds at every preload depth."""
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline="performance",
+                                 depth=depth)
+    assert eng.sched.depth == min(depth, len(eng.units) - 1)
+    assert _serve(eng, _prompts(cfg)) == resident_tokens
+
+
+def test_offload_default_depth_is_budget_sized():
+    """depth=None sizes the window from the memory budget
+    (autoconfig.serving_preload_depth) instead of pinning the paper's
+    two-resident-layer constant."""
+    from repro.core.autoconfig import serving_preload_depth
+    cfg = _cfg()
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline="performance")
+    want = serving_preload_depth(cfg, b_max=2, max_len=64, spill_cap=32)
+    assert eng.sched.depth == min(want, len(eng.units) - 1) >= 1
+    eng.shutdown()
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("mode", ["memory", "sequential"])
 def test_offload_decode_parity_modes(resident_tokens, mode):
@@ -103,6 +128,20 @@ def test_offload_int4_decode_parity():
     fp32_bytes = sum(fp32.weights.nbytes(u.key) for u in fp32.units)
     fp32.shutdown()
     assert int4_bytes < 0.5 * fp32_bytes      # packed nibbles + scales
+
+
+def test_offload_int4_depth_parity():
+    """Acceptance criterion: parity holds at every depth/quant combo —
+    INT4 streaming with a deep window still matches the roundtripped
+    resident reference token for token."""
+    cfg = _cfg()
+    ref = ServingEngine(cfg, b_max=2, max_len=64)
+    ref.params = quant_roundtrip_params(cfg, ref.params)
+    ref_tokens = _serve(ref, _prompts(cfg))
+    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
+                                 placement="host", pipeline="performance",
+                                 quant="int4", depth=3)
+    assert _serve(eng, _prompts(cfg)) == ref_tokens
 
 
 def test_int4_quant_changes_tokens_vs_fp16():
@@ -169,6 +208,33 @@ def test_offload_moe_loads_routed_union_only():
     traced = eng.trace.bytes_moved("weight_load", "w[u")
     assert traced == sum(eng.weights.load_counts.get(k, 0) * b
                          for k, b in per_expert.items())
+    eng.shutdown()
+
+
+def test_offload_moe_compact_combine_stacks_union_bytes():
+    """The combine boundary is |union|-proportional too (the PR-2 gap):
+    the compact combine stacks exactly the loaded experts — one fp32
+    slot per expert WEIGHT_LOAD — never a zero-padded full bank, so
+    total stacked bytes sit strictly below the bank-sized staging the
+    padded combine used to do every MoE step."""
+    cfg = _moe_cfg()              # scaled llama4: 4 experts, top_k=1
+    m = cfg.moe
+    eng = OffloadedServingEngine(cfg, b_max=1, max_len=48,
+                                 placement="host", pipeline="performance")
+    eng.submit(Request(rid=0, prompt=_prompts(cfg, 1)[0], max_new=4))
+    done = eng.run()
+    assert len(done) == 1
+    expert_keys = [k for u in eng.units if u.moe for k in u.expert_keys]
+    total_loads = sum(eng.weights.load_counts.get(k, 0)
+                      for k in expert_keys)
+    d, f = cfg.d_model, m.expert_d_ff
+    per_expert_fp32 = 4 * (2 * d * f + f * d)    # w_gate + w_up + w_down
+    assert eng.stats["moe_stack_bytes"] == total_loads * per_expert_fp32
+    n_moe_units = sum(1 for u in eng.units if u.moe)
+    n_combines = (eng.stats["prefills"]
+                  + eng.stats["decode_steps"]) * n_moe_units
+    assert eng.stats["moe_stack_bytes"] \
+        < n_combines * m.num_experts * per_expert_fp32
     eng.shutdown()
 
 

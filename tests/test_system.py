@@ -86,3 +86,49 @@ def test_generation_determinism_across_pipelines(tmp_path):
         outs.append(toks)
     np.testing.assert_array_equal(outs[0], outs[1])
     np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_generation_determinism_across_depths(tmp_path):
+    cfg = ModelConfig(name="det-d", num_layers=3, d_model=64, num_heads=4,
+                      num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+                      pattern=(LayerSpec(ATTN, DENSE),))
+    prompt = np.random.default_rng(2).integers(0, 128, (1, 8)).astype(np.int32)
+    outs = []
+    for depth in (1, 2, 4):
+        lm = PipelinedLM(cfg, batch=1, max_len=16, placement="host",
+                         pipeline="performance", depth=depth,
+                         disk_root=str(tmp_path / f"d{depth}"))
+        toks, _ = lm.generate(prompt, gen_len=5)
+        outs.append(toks)
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_depth_capacity_scales_with_budget_and_quant():
+    """Depth sizing is monotone in the device budget, at least 1 even
+    when the budget is blown, and INT4 streaming (fewer in-flight bytes
+    per layer) never shrinks the window."""
+    from repro.core.autoconfig import serving_preload_depth
+    from repro.core.memory_model import depth_capacity, estimate
+    cfg = get_config("llama3.1-8b")
+    kw = dict(batch=4, seq=544, p=2)
+    est = estimate(cfg, **kw, preload=1)
+    tiny, mid, big = 1 << 20, est.peak_decode * 2, est.peak_decode * 8
+    d_tiny = depth_capacity(cfg, **kw, budget_bytes=tiny)
+    d_mid = depth_capacity(cfg, **kw, budget_bytes=mid)
+    d_big = depth_capacity(cfg, **kw, budget_bytes=big)
+    assert d_tiny == 1
+    assert 1 <= d_mid <= d_big <= 8      # default depth_cap
+    d_int4 = depth_capacity(cfg, **kw, budget_bytes=mid, quant="int4")
+    assert d_int4 >= d_mid
+    # estimate() accepts integer preload depths and grows monotonically
+    e1 = estimate(cfg, **kw, preload=1)
+    e3 = estimate(cfg, **kw, preload=3)
+    assert e3.peak_decode > e1.peak_decode
+    assert e3.peak_prefill > e1.peak_prefill
+    # serving entry point: host pressure from retained spills forces the
+    # conservative window
+    budget = MemoryBudget(host=est.weights + est.kv_cache)
+    assert serving_preload_depth(cfg, b_max=4, max_len=544,
+                                 precision_bytes=2, spill_cap=64,
+                                 budget=budget) == 1

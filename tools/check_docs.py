@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs health check: fail CI when the docs rot.
 
-Three checks over README.md and docs/*.md:
+Four checks over README.md and docs/*.md:
 
 1. markdown links: every relative `[text](path)` target exists;
 2. inline code paths: every backtick-quoted repo path (`docs/...`,
@@ -11,7 +11,13 @@ Three checks over README.md and docs/*.md:
 3. quickstart commands: every `PYTHONPATH=src python ...` command found
    in fenced code blocks is executed in --help / --list / compile-only
    form, so a renamed flag or moved entry point fails the check instead
-   of rotting silently.
+   of rotting silently;
+4. CLI flags: every `--flag` token the docs mention (in inline code or
+   fenced blocks) must appear in a live `add_argument` definition in the
+   repo's CLI sources (`src/repro/launch/*.py`, `benchmarks/*.py`,
+   `tests/conftest.py`) or in the small argparse built-in allowlist —
+   a renamed serving/benchmark knob fails the check instead of leaving
+   the tuning guide pointing at a flag that no longer exists.
 
 Run locally:  python tools/check_docs.py
 """
@@ -32,6 +38,35 @@ CODEPATH_RE = re.compile(
     r"quant|launch|kernels|configs)/[A-Za-z0-9_./-]+\.(?:py|md|yml|yaml))"
     r"(?:::[A-Za-z0-9_.]+)?`")
 FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+INLINE_CODE_RE = re.compile(r"`([^`\n]+)`")
+FLAG_RE = re.compile(r"(?<![\w/-])--[a-z][a-z0-9-]*")
+FLAG_DEF_RE = re.compile(
+    r"(?:add_argument|addoption)\(\s*['\"](--[a-z][a-z0-9-]*)['\"]")
+# where CLI flags are defined (argparse entry points)
+CLI_SOURCES = [*sorted((ROOT / "src" / "repro" / "launch").glob("*.py")),
+               *sorted((ROOT / "benchmarks").glob("*.py")),
+               ROOT / "tests" / "conftest.py"]
+# argparse/pytest built-ins the docs may reference without defining
+FLAG_ALLOWLIST = {"--help"}
+
+
+def known_cli_flags():
+    flags = set(FLAG_ALLOWLIST)
+    for src in CLI_SOURCES:
+        flags.update(FLAG_DEF_RE.findall(src.read_text()))
+    return flags
+
+
+def doc_flags(text: str):
+    """(flag, snippet) pairs from inline code spans and fenced blocks —
+    prose is skipped so an em-dash or option-like phrase can't trip it."""
+    out = []
+    for block in FENCE_RE.findall(text):
+        out += [(f, block.strip().splitlines()[0])
+                for f in FLAG_RE.findall(block)]
+    for span in INLINE_CODE_RE.findall(FENCE_RE.sub("", text)):
+        out += [(f, span) for f in FLAG_RE.findall(span)]
+    return out
 
 
 def resolve_code_path(p: str):
@@ -59,7 +94,7 @@ def extract_commands(block: str):
     return out
 
 
-def check_file(md: Path, errors: list):
+def check_file(md: Path, errors: list, cli_flags: set):
     text = md.read_text()
     rel = md.relative_to(ROOT)
     for m in LINK_RE.finditer(text):
@@ -71,6 +106,11 @@ def check_file(md: Path, errors: list):
     for m in CODEPATH_RE.finditer(text):
         if resolve_code_path(m.group(1)) is None:
             errors.append(f"{rel}: dead code path -> `{m.group(1)}`")
+    for flag, snippet in doc_flags(text):
+        if flag not in cli_flags:
+            errors.append(f"{rel}: unknown CLI flag {flag} "
+                          f"(in `{snippet[:60]}`) — not defined by any "
+                          f"argparse source")
     cmds = []
     for block in FENCE_RE.findall(text):
         cmds += extract_commands(block)
@@ -98,11 +138,12 @@ def dry_form(cmd: str):
 def main() -> int:
     errors: list[str] = []
     commands: list[str] = []
+    cli_flags = known_cli_flags()
     for md in DOC_FILES:
         if not md.exists():
             errors.append(f"missing doc file: {md.relative_to(ROOT)}")
             continue
-        commands += check_file(md, errors)
+        commands += check_file(md, errors, cli_flags)
     if not any(md.name == "ARCHITECTURE.md" for md in DOC_FILES):
         errors.append("docs/ARCHITECTURE.md missing")
     if not any(md.name == "BENCHMARKS.md" for md in DOC_FILES):
