@@ -44,15 +44,17 @@ def _bench_cfg(layers=4, d=256, ff=1024, vocab=2048):
 
 def _run_engine(placement, pipeline, batch=4, gen=8, prompt_len=32,
                 quant=None, **kw):
-    from repro.core.engine import PipelinedLM
+    from repro.serving.spec import EngineSpec, build_lm
     cfg = _bench_cfg()
     # disk placement: evict page cache per load — the paper's NVMe regime
     # (page-cached "disk" reads are memcpys and hide the pipeline's win)
     kw.setdefault("cold_reads", placement == "disk")
-    lm = PipelinedLM(cfg, batch=batch, max_len=prompt_len + gen + 2,
-                     placement=placement, pipeline=pipeline, quant=quant,
-                     disk_root=f"/tmp/pipo_bench_{placement}_{pipeline}_{quant}",
-                     **kw)
+    spec = EngineSpec(
+        arch=cfg.name, cfg=cfg, offload=True, placement=placement,
+        pipeline=pipeline, quant=quant, b_max=batch,
+        max_len=prompt_len + gen + 2, depth=1,
+        disk_root=f"/tmp/pipo_bench_{placement}_{pipeline}_{quant}", **kw)
+    lm = build_lm(spec)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size, (batch, prompt_len)).astype(
         np.int32)
@@ -177,7 +179,7 @@ def table6_memory():
 def fig12_moe():
     """Fig. 12 / Appx C.4: MoE offloading with expert-load overlap."""
     from repro.configs.base import ATTN, MOE, LayerSpec, ModelConfig, MoEConfig
-    from repro.core.engine import PipelinedLM
+    from repro.serving.spec import EngineSpec, build_lm
     cfg = ModelConfig(name="bench-moe", num_layers=3, d_model=256,
                       num_heads=8, num_kv_heads=4, head_dim=32, d_ff=512,
                       vocab_size=2048, pattern=(LayerSpec(ATTN, MOE),),
@@ -186,8 +188,10 @@ def fig12_moe():
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)
     for mode in ("sequential", "performance"):
-        lm = PipelinedLM(cfg, batch=2, max_len=32, placement="disk",
-                         pipeline=mode, disk_root=f"/tmp/pipo_bench_moe_{mode}")
+        lm = build_lm(EngineSpec(
+            arch=cfg.name, cfg=cfg, offload=True, placement="disk",
+            pipeline=mode, b_max=2, max_len=32, depth=1,
+            disk_root=f"/tmp/pipo_bench_moe_{mode}"))
         toks, s = lm.generate(prompt, gen_len=6)
         emit(f"fig12_moe_{mode}", 1e6 / max(1e-9, s["throughput_tok_s"]),
              f"tok_s={s['throughput_tok_s']:.2f};busy={s['compute_busy']:.2f}")
@@ -216,7 +220,6 @@ def serving_offload():
     weight-dominated — the PIPO weight-offload regime, and the one where
     INT4's byte reduction shows (KV streams FP32 either way, so a
     KV-dominated link would mask it)."""
-    from repro.serving import OffloadedServingEngine
     cfg = _bench_cfg(layers=6, d=512, ff=2048)
     # depth pinned to 1 (the paper's two-resident-layer invariant) so rows
     # stay comparable across PRs; serving_offload_depth sweeps depth.
@@ -224,13 +227,15 @@ def serving_offload():
         ("sequential", dict(pipeline="sequential")),
         ("cold", dict(pipeline="performance", warm=False, depth=1)),
         ("warm", dict(pipeline="performance", warm=True, depth=1)),
+        # fused_int4 pinned True for row continuity: the §3.5 auto rule
+        # would disable the fused kernel at this b_max=16 shape
         ("warm_int4", dict(pipeline="performance", warm=True, depth=1,
-                           quant="int4")),
+                           quant="int4", fused_int4=True)),
     )
     results = {}
     for name, kw in variants:
-        eng = OffloadedServingEngine(
-            cfg, b_max=16, max_len=96, placement="host", sim_bw=0.3e9, **kw)
+        eng = _serving_engine(cfg, b_max=16, max_len=96, placement="host",
+                              sim_bw=0.3e9, **kw)
         tok_s, step_s, rep = _serve_steady_state(eng)
         results[name] = (tok_s, step_s, rep)
         emit(f"serving_offload_{name}", step_s * 1e6,
@@ -246,10 +251,20 @@ def serving_offload():
          f"cold_step_ms={results['cold'][1] * 1e3:.1f}")
 
 
+def _serving_engine(cfg, **kw):
+    """Serving engines are built through the one construction path:
+    EngineSpec -> resolve -> create_engine (the spec carries the ad-hoc
+    bench config as its cfg override)."""
+    from repro.serving.spec import EngineSpec, create_engine
+    return create_engine(EngineSpec(arch=cfg.name, cfg=cfg, offload=True,
+                                    **kw))
+
+
 def _serve_steady_state(eng, prompt_len=32, max_new=12):
     """Shared serving-offload measurement: fill all of the engine's slots,
     one untimed jit-warm decode step, then time steady-state decode to
-    drain.  Returns (decode tok/s, s/step, pipeline report)."""
+    drain.  Returns (decode tok/s, s/step, pipeline report — empty for
+    the resident engine, which has no pipeline)."""
     from repro.serving import Request
     rng = np.random.default_rng(0)
     for i in range(eng.b_max):
@@ -267,9 +282,52 @@ def _serve_steady_state(eng, prompt_len=32, max_new=12):
     dt = time.perf_counter() - t0
     ntok = eng.stats["tokens_out"] - n0
     nstep = eng.stats["decode_steps"] - s0
-    rep = eng.pipeline_report()
+    rep = eng.pipeline_report() if hasattr(eng, "pipeline_report") else {}
     eng.shutdown()
     return ntok / dt, dt / max(1, nstep), rep
+
+
+def _serve_ramping(eng, prompt_len=24, max_new=24, wave=2,
+                   steps_per_wave=4):
+    """Ramping-load measurement for the adaptive-depth sweep: start with
+    ``wave`` requests and admit ``wave`` more every ``steps_per_wave``
+    decode steps until all slots have been offered work, then drain.
+    Returns (tok/s, s/step, depth_min, depth_max, resizes) — the depth
+    fields track ``stats['preload_depth']`` across the ramp."""
+    from repro.serving import Request
+    rng = np.random.default_rng(0)
+    rid = 0
+
+    def submit(n):
+        nonlocal rid
+        for _ in range(n):
+            eng.submit(Request(rid=rid, prompt=rng.integers(
+                0, eng.cfg.vocab_size, (prompt_len,)).astype(np.int32),
+                max_new=max_new))
+            rid += 1
+
+    submit(wave)
+    eng._admit()
+    done = []
+    eng._decode_step(done)            # warm the jit caches untimed
+    depths = [eng.stats["preload_depth"]]
+    t0 = time.perf_counter()
+    n0, s0 = eng.stats["tokens_out"], eng.stats["decode_steps"]
+    steps = 0
+    while eng.queue or any(s is not None for s in eng.slots) \
+            or rid < eng.b_max:
+        if rid < eng.b_max and steps and steps % steps_per_wave == 0:
+            submit(min(wave, eng.b_max - rid))
+        eng._admit()
+        eng._decode_step(done)
+        depths.append(eng.stats["preload_depth"])
+        steps += 1
+    dt = time.perf_counter() - t0
+    ntok = eng.stats["tokens_out"] - n0
+    nstep = eng.stats["decode_steps"] - s0
+    eng.shutdown()
+    return (ntok / dt, dt / max(1, nstep), min(depths), max(depths),
+            eng.stats["depth_resizes"])
 
 
 def serving_offload_depth():
@@ -286,13 +344,12 @@ def serving_offload_depth():
     overlapped dequants contend with main-thread compute on 2 cores (on a
     real GPU the fused dequant is on-device).  The summary row carries
     the headline ratios for docs/BENCHMARKS.md."""
-    from repro.serving import OffloadedServingEngine
     cfg = _bench_cfg(layers=6, d=512, ff=2048)
     results = {}
     for quant in (None, "int4"):
         tag = "int4" if quant else "fp32"
         for depth in (1, 2, 3):
-            eng = OffloadedServingEngine(
+            eng = _serving_engine(
                 cfg, b_max=8, max_len=96, placement="host", sim_bw=0.3e9,
                 pipeline="performance", warm=True, depth=depth, quant=quant)
             tok_s, step_s, rep = _serve_steady_state(eng, max_new=24)
@@ -307,6 +364,51 @@ def serving_offload_depth():
          f"fp32_d3_vs_d1={results[('fp32', 1)] / results[('fp32', 3)]:.2f}x;"
          f"int4_d2_vs_d1={results[('int4', 1)] / results[('int4', 2)]:.2f}x;"
          f"int4_d3_vs_d1={results[('int4', 1)] / results[('int4', 3)]:.2f}x")
+
+
+def serving_adaptive_depth():
+    """AdaptiveDepth vs static windows under RAMPING request load: the
+    engine starts near-empty (2 requests) and admits 2 more every 4
+    decode steps until all 8 slots have been offered work.  Static
+    windows (d in {1,2,3}) pay the same depth throughout; the adaptive
+    policy re-sizes between steps from live KV/spill pressure — deep
+    while load is light, shrinking as slots fill (the ROADMAP "depth is
+    static per engine" gap, measured).
+
+    The device budget is pinned tight (depth-0 peak at the worst case +
+    5 MiB of headroom) so the memory model actually binds at this bench
+    scale, and quant is INT4 so the per-layer in-flight cost is
+    KV-sensitive (packed weights ~1.6 MiB/layer vs a live KV slab
+    growing past that) — the regime where a consumer device wants the
+    window to breathe: live_depth resolves 8 -> 7 -> 5 -> 2 as the ramp
+    fills.  The summary row carries the headline ratios for
+    docs/BENCHMARKS.md."""
+    from repro.core.memory_model import estimate
+    from repro.core.offload import MemoryBudget
+    from repro.serving.spec import EngineSpec, create_engine
+    cfg = _bench_cfg(layers=6, d=512, ff=2048)
+    est0 = estimate(cfg, batch=8, seq=56, p=4, preload=0)
+    budget = MemoryBudget(
+        device=max(est0.peak_prefill, est0.peak_decode) + (5 << 20))
+    results = {}
+    for name, kw in (("static_d1", dict(depth=1)),
+                     ("static_d2", dict(depth=2)),
+                     ("static_d3", dict(depth=3)),
+                     ("adaptive", dict(depth_policy="adaptive"))):
+        spec = EngineSpec(arch=cfg.name, cfg=cfg, offload=True,
+                          placement="host", pipeline="performance",
+                          warm=True, quant="int4", b_max=8, max_len=56,
+                          sim_bw=0.3e9, **kw)
+        eng = create_engine(spec.resolve(budget))
+        tok_s, step_s, d_min, d_max, resizes = _serve_ramping(eng)
+        results[name] = step_s
+        emit(f"serving_adaptive_{name}", step_s * 1e6,
+             f"decode_tok_s={tok_s:.2f};step_ms={step_s * 1e3:.1f};"
+             f"depth={d_min}..{d_max};resizes={resizes}")
+    emit("serving_adaptive_summary", 0.0,
+         f"adaptive_vs_d1={results['static_d1'] / results['adaptive']:.2f}x;"
+         f"adaptive_vs_d2={results['static_d2'] / results['adaptive']:.2f}x;"
+         f"adaptive_vs_d3={results['static_d3'] / results['adaptive']:.2f}x")
 
 
 def kernel_int4():
@@ -362,7 +464,27 @@ def roofline():
 
 BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            fig9_ablation, table3_latency, table6_memory, fig12_moe,
-           serving_offload, serving_offload_depth, kernel_int4, roofline]
+           serving_offload, serving_offload_depth, serving_adaptive_depth,
+           kernel_int4, roofline]
+
+
+def run_spec_scenario(path: str):
+    """Ad-hoc serving scenario from an EngineSpec JSON: resolve, build
+    through create_engine, and measure steady-state decode — the same
+    harness the named serving scenarios use."""
+    from repro.serving.spec import EngineSpec, create_engine
+    spec = EngineSpec.from_json(Path(path).read_text())
+    plan = spec.resolve()
+    eng = create_engine(plan)
+    tok_s, step_s, rep = _serve_steady_state(eng)
+    derived = (f"decode_tok_s={tok_s:.2f};step_ms={step_s * 1e3:.1f};"
+               f"engine={plan.engine};placement={plan.placement};"
+               f"depth={plan.depth}")
+    if rep:
+        derived += (f";util={rep['compute_util']:.2f};"
+                    f"bubble={rep['bubble_frac']:.2f}")
+    emit(f"spec_{plan.arch}{'_scaled' if plan.scaled else ''}",
+         step_s * 1e6, derived)
 
 
 def main(argv=None) -> None:
@@ -376,11 +498,24 @@ def main(argv=None) -> None:
                     help="scenario names to run (default: all; see --list)")
     ap.add_argument("--list", action="store_true",
                     help="list scenarios and exit")
+    ap.add_argument("--spec-json", metavar="FILE",
+                    help="run an ad-hoc serving scenario from an "
+                         "EngineSpec JSON (resolve -> create_engine -> "
+                         "steady-state decode), then exit")
     args = ap.parse_args(argv)
     if args.list:
         for b in BENCHES:
             doc = (b.__doc__ or "").strip().splitlines()[0]
             print(f"{b.__name__:20s} {doc}")
+        return
+    if args.spec_json:
+        import json
+        from repro.serving.spec import SpecError
+        print("name,us_per_call,derived")
+        try:
+            run_spec_scenario(args.spec_json)
+        except (SpecError, OSError, json.JSONDecodeError) as e:
+            ap.error(str(e))
         return
     unknown = [n for n in args.scenarios if n not in by_name]
     if unknown:

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.configs import get_config, scaled_down
 from repro.core import MemoryBudget, configure
-from repro.core.engine import PipelinedLM
+from repro.serving import EngineSpec, build_lm
 
 
 def main():
@@ -33,11 +33,12 @@ def main():
     #    using the chosen placement/pipeline.
     cfg = scaled_down(full_cfg, d_model=256, num_heads=8, num_kv_heads=4,
                       d_ff=1024, vocab_size=2048)
-    lm = PipelinedLM(cfg, batch=2, max_len=96,
-                     placement=ac.weight_placement, pipeline=ac.pipeline
-                     if ac.pipeline != "memory" else "memory",
-                     quant="int4" if ac.use_int4_kernel else None,
-                     disk_root="/tmp/quickstart_disk")
+    spec = EngineSpec(arch=full_cfg.name, cfg=cfg, offload=True,
+                      placement=ac.weight_placement, pipeline=ac.pipeline,
+                      b_max=2, max_len=96, depth=ac.preload_depth,
+                      quant="int4" if ac.use_int4_kernel else None,
+                      disk_root="/tmp/quickstart_disk")
+    lm = build_lm(spec)
     prompt = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (2, 32)).astype(np.int32)
     toks, stats = lm.generate(prompt, gen_len=16)

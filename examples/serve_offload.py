@@ -1,5 +1,7 @@
 """End-to-end serving driver: continuous batching over a small model with
 batched requests, ragged decode, and PIPO KV offload at slot granularity.
+Engine construction goes through the one declarative path — EngineSpec ->
+resolve() -> create_engine (see docs/ARCHITECTURE.md "Execution plans").
 
   PYTHONPATH=src python examples/serve_offload.py
 """
@@ -8,13 +10,16 @@ import time
 import numpy as np
 
 from repro.configs import get_config, scaled_down
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineSpec, Request, create_engine
 
 
 def main():
     cfg = scaled_down(get_config("tinyllama-1.1b"), d_model=128,
                       num_heads=8, num_kv_heads=4, vocab_size=1024)
-    eng = ServingEngine(cfg, b_max=4, max_len=128)
+    spec = EngineSpec(arch="tinyllama-1.1b", cfg=cfg, b_max=4, max_len=128)
+    plan = spec.resolve()             # placement/engine from the memory model
+    print(f"resolved plan      : {plan.summary()}")
+    eng = create_engine(plan)
 
     rng = np.random.default_rng(0)
     reqs = []

@@ -19,7 +19,8 @@ from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.memory_model import (MemoryEstimate, depth_capacity,
-                                     estimate, quant_weight_ratio)
+                                     estimate, host_pinned_bytes,
+                                     quant_weight_ratio)
 from repro.core.offload import MemoryBudget
 
 
@@ -34,6 +35,32 @@ class AutoConfig:
     preload_depth: int = 1      # performance-pipeline resident window - 1
 
 
+def choose_placement(cfg: ModelConfig, *, batch: int, seq: int,
+                     precision_bytes: int = 2,
+                     budget: Optional[MemoryBudget] = None,
+                     quant: Optional[str] = None) -> tuple:
+    """Eq. (1) weight placement as a (placement, why) decision — the
+    single implementation shared by ``configure()`` and
+    ``serving.spec.EngineSpec.resolve()`` (the plan records the why
+    string as the field's provenance)."""
+    budget = budget or MemoryBudget()
+    est_pre = estimate(cfg, batch=batch, seq=seq, p=precision_bytes,
+                       preload=True)
+    ratio = quant_weight_ratio(precision_bytes, quant)
+    W = int(est_pre.weights * ratio)
+    C = est_pre.kv_cache
+    # quantization shrinks only the *weight* component of peak M; the
+    # activation part stays at compute precision (paper: W4 + fp16 act)
+    resident_w = est_pre.w_mha + est_pre.w_mlp
+    M = int(max(est_pre.peak_prefill, est_pre.peak_decode)
+            - resident_w * (1.0 - ratio))
+    if W + M < budget.device:
+        return "device", f"W+M={(W+M)/2**30:.1f}GiB fits device"
+    if W + C < budget.host and budget.disk_bw < budget.device_bw:
+        return "host", f"W+C={(W+C)/2**30:.1f}GiB fits host"
+    return "disk", "exceeds host; stream from disk"
+
+
 def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
               gen_len: int, precision_bytes: int = 2,
               budget: Optional[MemoryBudget] = None,
@@ -45,8 +72,6 @@ def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
     est_pre = estimate(cfg, batch=batch, seq=s, p=precision_bytes,
                        preload=True)
     ratio = quant_weight_ratio(precision_bytes, quant)
-    W = int(est_pre.weights * ratio)
-    C = est_pre.kv_cache
     # quantization shrinks only the *weight* component of peak M; the
     # activation part stays at compute precision (paper: W4 + fp16 act)
     resident_w = est_pre.w_mha + est_pre.w_mlp
@@ -54,12 +79,9 @@ def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
             - resident_w * (1.0 - ratio))
 
     # ---- Eq. (1): weight placement ----
-    if W + M < budget.device:
-        placement, why = "device", f"W+M={(W+M)/2**30:.1f}GiB fits device"
-    elif W + C < budget.host and budget.disk_bw < budget.device_bw:
-        placement, why = "host", f"W+C={(W+C)/2**30:.1f}GiB fits host"
-    else:
-        placement, why = "disk", "exceeds host; stream from disk"
+    placement, why = choose_placement(cfg, batch=batch, seq=s,
+                                      precision_bytes=precision_bytes,
+                                      budget=budget, quant=quant)
 
     # ---- Eq. (1): pipeline mode ----
     if M < budget.device:
@@ -81,6 +103,41 @@ def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
                       why, depth)
 
 
+def serving_depth_decision(cfg: ModelConfig, *, b_max: int, max_len: int,
+                           precision_bytes: int = 4,
+                           quant: Optional[str] = None, spill_cap: int = 0,
+                           placement: str = "host",
+                           budget: Optional[MemoryBudget] = None,
+                           depth_cap: int = 8) -> tuple:
+    """``serving_preload_depth`` as a (depth, why) decision, the why
+    string carrying the memory-model numbers — ``EngineSpec.resolve()``
+    records it as the ``depth`` field's provenance."""
+    budget = budget or MemoryBudget()
+    fixed, per_spill = host_pinned_bytes(
+        cfg, b_max=b_max, max_len=max_len, p=precision_bytes, quant=quant,
+        placement=placement)
+    host_need = fixed + spill_cap * per_spill
+    if host_need > budget.host:
+        return 1, (f"host tier over budget "
+                   f"(weights+KV+{spill_cap} spills = "
+                   f"{host_need / 2**30:.2f}GiB > "
+                   f"{budget.host / 2**30:.0f}GiB): depth 1, deeper "
+                   f"windows only thrash a saturated host")
+    d = depth_capacity(cfg, batch=b_max, seq=max_len, p=precision_bytes,
+                       budget_bytes=budget.device, quant=quant,
+                       depth_cap=depth_cap)
+    est0 = estimate(cfg, batch=b_max, seq=max_len, p=precision_bytes,
+                    preload=0)
+    base = max(est0.peak_prefill, est0.peak_decode)
+    per = (int(max(est0.w_mha, est0.w_mlp)
+               * quant_weight_ratio(precision_bytes, quant))
+           + est0.kv_cache // max(1, cfg.num_layers))
+    return d, (f"device headroom after depth-0 peak "
+               f"({base / 2**20:.0f}MiB) affords {d} in-flight "
+               f"layer(s) at {per / 2**20:.1f}MiB each "
+               f"(quant={quant or 'fp32'}, cap {depth_cap})")
+
+
 def serving_preload_depth(cfg: ModelConfig, *, b_max: int, max_len: int,
                           precision_bytes: int = 4,
                           quant: Optional[str] = None, spill_cap: int = 0,
@@ -97,16 +154,7 @@ def serving_preload_depth(cfg: ModelConfig, *, b_max: int, max_len: int,
     the host can't, it is already the bottleneck and a deeper window
     just queues more transfers behind a thrashing tier: fall back to
     depth 1."""
-    budget = budget or MemoryBudget()
-    est = estimate(cfg, batch=b_max, seq=max_len, p=precision_bytes,
-                   preload=1)
-    spill_bytes = spill_cap * (est.kv_cache // max(1, b_max))
-    # host weights sit packed under quant (the engine quantizes at put());
-    # same byte convention as configure()/depth_capacity
-    w_host = int(est.weights * quant_weight_ratio(precision_bytes, quant)) \
-        if placement == "host" else 0
-    if w_host + est.kv_cache + spill_bytes > budget.host:
-        return 1
-    return depth_capacity(cfg, batch=b_max, seq=max_len, p=precision_bytes,
-                          budget_bytes=budget.device, quant=quant,
-                          depth_cap=depth_cap)
+    return serving_depth_decision(
+        cfg, b_max=b_max, max_len=max_len, precision_bytes=precision_bytes,
+        quant=quant, spill_cap=spill_cap, placement=placement,
+        budget=budget, depth_cap=depth_cap)[0]

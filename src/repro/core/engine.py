@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Optional
@@ -32,6 +33,15 @@ from repro.models.attention import decode_attention, ref_attention
 from repro.models.common import rms_norm, silu
 from repro.models.rope import apply_rope, rope_angles
 from repro.quant.int4 import quantize_int4
+
+# pre-spec constructor defaults: the deprecation shim overlays provided
+# kwargs on these so a legacy call resolves to the exact plan the old
+# constructor acted on (note depth defaulted to 1 here, NOT auto)
+_LEGACY_DEFAULTS = dict(
+    batch=4, max_len=256, placement="host", cache_on="host",
+    pipeline="performance", quant=None, fused_int4=True,
+    disk_root="/tmp/pipo_disk", block_bytes=None, n_io_threads=3,
+    cold_reads=False, seed=0, depth=1)
 
 
 # ---------------------------------------------------------------------------
@@ -113,32 +123,62 @@ class PipelinedLM:
     the computing one; 1 = the paper's two-resident-layer invariant).
     """
 
-    def __init__(self, cfg: ModelConfig, *, batch: int, max_len: int,
-                 placement: str = "host", cache_on: str = "host",
-                 pipeline: str = "performance", quant: Optional[str] = None,
-                 fused_int4: bool = True, disk_root: str = "/tmp/pipo_disk",
-                 block_bytes: int = 8 << 20, n_io_threads: int = 3,
-                 cold_reads: bool = False, seed: int = 0, depth: int = 1):
-        assert placement in ("device", "host", "disk")
+    def __init__(self, plan=None, **legacy_kwargs):
+        """Canonical construction takes ONE argument: a ``ResolvedPlan``
+        (``serving.spec.build_lm(plan)``; the plan's ``b_max`` is the
+        generation batch).  Passing a ``ModelConfig`` plus the pre-spec
+        keyword arguments still works through a deprecation shim — the
+        kwargs are converted to an ``EngineSpec`` and resolved, so both
+        paths act on an identical plan."""
+        from repro.serving.spec import EngineSpec, ResolvedPlan
+        if isinstance(plan, ModelConfig):
+            warnings.warn(
+                "PipelinedLM(cfg, **kwargs) is deprecated; build an "
+                "EngineSpec and pass its resolved plan "
+                "(serving.spec.build_lm) instead",
+                DeprecationWarning, stacklevel=2)
+            unknown = set(legacy_kwargs) - set(_LEGACY_DEFAULTS)
+            if unknown:
+                raise TypeError(f"unknown kwargs {sorted(unknown)}")
+            kw = {**_LEGACY_DEFAULTS, **legacy_kwargs}
+            spec = EngineSpec(
+                arch=plan.name, cfg=plan, offload=True,
+                placement=kw["placement"],
+                b_max=kw["batch"], max_len=kw["max_len"],
+                pipeline=kw["pipeline"], quant=kw["quant"],
+                fused_int4=kw["fused_int4"], depth=kw["depth"],
+                cache_on=kw["cache_on"], disk_root=kw["disk_root"],
+                block_bytes=kw["block_bytes"],
+                n_io_threads=kw["n_io_threads"],
+                cold_reads=kw["cold_reads"], seed=kw["seed"])
+            plan = spec.resolve()
+        elif not isinstance(plan, ResolvedPlan):
+            raise TypeError(f"PipelinedLM takes a ResolvedPlan or a "
+                            f"ModelConfig, got {type(plan).__name__}")
+        elif legacy_kwargs:
+            raise TypeError("plan construction takes no kwargs; set the "
+                            "fields on the EngineSpec instead")
+        cfg = plan.model_config()
+        self.plan = plan
         self.cfg = cfg
-        self.batch = batch
-        self.max_len = max_len
-        self.placement = placement
-        self.cache_on = cache_on
-        self.quant = quant
-        self.depth = depth
+        self.batch = plan.b_max
+        self.max_len = plan.max_len
+        self.placement = plan.placement
+        self.cache_on = plan.cache_on
+        self.quant = plan.quant
+        self.depth = max(1, plan.depth)
         self.trace = Trace()
         self.host = HostStore()
         self.device = DeviceStore()
-        self.disk = DiskStore(disk_root)
+        self.disk = DiskStore(plan.disk_root)
         self.weights = TieredWeightStore(
-            placement=placement, host=self.host, device=self.device,
-            disk=self.disk, quant=quant, fused_int4=fused_int4,
-            block_bytes=block_bytes, n_io_threads=n_io_threads,
-            cold_reads=cold_reads)
-        self.pipeline_mode = pipeline
+            placement=plan.placement, host=self.host, device=self.device,
+            disk=self.disk, quant=plan.quant, fused_int4=plan.fused_int4,
+            block_bytes=plan.block_bytes, n_io_threads=plan.n_io_threads,
+            cold_reads=plan.cold_reads)
+        self.pipeline_mode = plan.pipeline
         self.units: list[UnitSpec] = []
-        self._build(seed)
+        self._build(plan.seed)
         self._kv_init()
         self._jit_units()
 

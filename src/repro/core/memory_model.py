@@ -124,3 +124,61 @@ def depth_capacity(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
     if headroom < per_extra:
         return 1
     return int(max(1, min(depth_cap, headroom // per_extra)))
+
+
+def host_pinned_bytes(cfg: ModelConfig, *, b_max: int, max_len: int,
+                      p: int = 4, quant: "str | None" = None,
+                      placement: str = "host") -> "tuple[int, int]":
+    """(fixed_bytes, per_spill_bytes) the serving host tier pins: the
+    full decode KV cache plus — for host placement — the weights
+    themselves (packed under quant, the same byte convention as
+    ``quant_weight_ratio``; disk placement keeps only in-flight buffers
+    in host RAM), and the marginal cost of one retained slot spill (one
+    request's KV rows).  The single implementation behind BOTH the
+    resolve-time host guard (``autoconfig.serving_depth_decision``) and
+    the live one (``live_depth``) — the two must never drift."""
+    est = estimate(cfg, batch=b_max, seq=max_len, p=p, preload=1)
+    w_host = int(est.weights * quant_weight_ratio(p, quant)) \
+        if placement == "host" else 0
+    return w_host + est.kv_cache, est.kv_cache // max(1, b_max)
+
+
+def live_depth(cfg: ModelConfig, *, active: int, pos_used: int,
+               b_max: int, max_len: int, p: int = 4,
+               quant: "str | None" = None, spills: int = 0,
+               placement: str = "host", device_budget: int,
+               host_budget: int, depth_cap: int = 8,
+               host_fixed: "int | None" = None,
+               per_spill: "int | None" = None) -> int:
+    """Preload depth under LIVE serving pressure (the ``AdaptiveDepth``
+    policy's model): the static sizing prices the window at worst case —
+    ``b_max`` slots, every one at ``max_len`` — but between decode steps
+    the engine knows how many requests are actually in flight
+    (``active``), the longest position actually written (``pos_used``),
+    and how many slot spills the host currently retains (``spills``).
+    Feeding those into the same §3.5 capacity model yields a window that
+    deepens under light load and shrinks as KV/spill pressure ramps:
+
+      * device side: ``depth_capacity`` at (batch=active, seq=pos_used+1)
+        — the KV slab each in-flight layer pins is priced at its live
+        occupancy, not the allocation bound;
+      * host side: the ``serving_preload_depth`` guard with the *live*
+        retained-spill count instead of the worst-case ``spill_cap`` —
+        a host saturated by spills forces depth 1 exactly as at resolve
+        time.
+
+    ``host_fixed``/``per_spill`` accept the load-invariant
+    ``host_pinned_bytes`` terms precomputed once (the per-step caller's
+    fast path — AdaptiveDepth sits on the decode hot path).
+    """
+    b = max(1, min(int(active), b_max))
+    s = max(8, min(int(pos_used) + 1, max_len))
+    if host_fixed is None or per_spill is None:
+        host_fixed, per_spill = host_pinned_bytes(
+            cfg, b_max=b_max, max_len=max_len, p=p, quant=quant,
+            placement=placement)
+    if host_fixed + spills * per_spill > host_budget:
+        return 1
+    return depth_capacity(cfg, batch=b, seq=s, p=p,
+                          budget_bytes=device_budget, quant=quant,
+                          depth_cap=depth_cap)

@@ -12,6 +12,16 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
       --shape train_4k [--multi-pod] [--out experiments/dryrun]
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Serving-plan dry-run (--serving): resolve an ``EngineSpec`` per arch
+against the consumer-device budget and print the materialized plan —
+engine dispatch, placement, preload depth, each with its provenance —
+without lowering anything.  With a single --arch and --scaled it also
+BUILDS the engine through ``create_engine(plan)`` and serves one
+request (the end-to-end plan smoke):
+  PYTHONPATH=src python -m repro.launch.dryrun --serving --all
+  PYTHONPATH=src python -m repro.launch.dryrun --serving \
+      --arch tinyllama-1.1b --scaled
 """
 import argparse
 import json
@@ -173,6 +183,40 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     return row
 
 
+def serving_dryrun(arch, scaled: bool, run_all: bool):
+    """Resolve serving plans through the EngineSpec API.  Per arch: one
+    plan row (engine/placement/depth + provenance).  Single-arch scaled
+    mode additionally builds the engine via ``create_engine(plan)`` and
+    serves one request — the whole spec -> plan -> engine path, live."""
+    import numpy as np
+
+    from repro.configs import list_archs
+    from repro.serving.spec import EngineSpec, create_engine
+
+    archs = sorted(list_archs()) if run_all or arch is None else [arch]
+    plans = []
+    for a in archs:
+        plan = EngineSpec(arch=a, scaled=scaled, b_max=4,
+                          max_len=256).resolve()
+        plans.append(plan)
+        print(f"[PLAN] {a:26s} engine={plan.engine:9s} "
+              f"placement={plan.placement:6s} depth={plan.depth} "
+              f"quant={plan.quant or 'fp32'}")
+        for fld, why in sorted(plan.provenance.items()):
+            print(f"        {fld:12s} {why}")
+    if len(plans) == 1 and scaled:
+        plan = plans[0]
+        eng = create_engine(plan)
+        from repro.serving import Request
+        prompt = np.random.default_rng(0).integers(
+            0, eng.cfg.vocab_size, (8,)).astype(np.int32)
+        eng.submit(Request(rid=0, prompt=prompt, max_new=4))
+        done = eng.run()
+        eng.shutdown()
+        print(f"[SMOKE] {plan.arch}: engine={type(eng).__name__} "
+              f"served 1 request, {len(done[0].out)} tokens")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -181,8 +225,20 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--variant", default="base")
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--serving", action="store_true",
+                    help="resolve EngineSpec serving plans (per arch) "
+                         "instead of lowering mesh cells; with a single "
+                         "--arch and --scaled also builds the engine via "
+                         "create_engine(plan) and serves one request")
+    ap.add_argument("--scaled", action="store_true",
+                    help="(--serving) resolve/build the scaled smoke "
+                         "config instead of the full-size one")
     args = ap.parse_args()
     out_dir = Path(args.out)
+
+    if args.serving:
+        serving_dryrun(args.arch, args.scaled, args.all)
+        return
 
     cells = []
     if args.all:

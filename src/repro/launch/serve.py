@@ -1,85 +1,92 @@
 """Serving launcher: continuous-batching engine over a registry arch.
 
+The CLI is generated from the one flag<->field table in
+``serving.spec.CLI_FLAGS`` — every engine flag maps to exactly one
+``EngineSpec`` field (cross-checked three ways by tools/check_docs.py).
+Flags build a spec, ``resolve()`` materializes the plan against the
+memory budget, and ``create_engine(plan)`` dispatches to the resident or
+offloaded engine — the same path tests and benchmarks construct through.
+
 Resident weights (default):
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --scaled --requests 10
 
 Offloaded weights through the PIPO pipeline (models larger than device
 memory; see serving/offload_engine.py).  The pipeline stays warm across
-decode steps by default (cross-step preloading; --no-warm for the cold
-per-step baseline), keeps a budget-sized window of layers in flight
-(--preload-depth to override; docs/TUNING.md walks the sizing), and
---quant int4 streams packed INT4 weights over the offload link (~1/4
-the bytes, dequant overlapped with compute):
+decode steps by default (--no-warm for the cold per-step baseline),
+keeps a budget-sized window of layers in flight (--preload-depth to
+override, --depth-policy adaptive to re-size it from live KV/spill
+pressure; docs/TUNING.md walks the sizing), and --quant int4 streams
+packed INT4 weights over the offload link:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --scaled --offload --placement disk --pipeline performance
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --scaled --offload --quant int4
+
+Plans are first-class: --plan-json resolves the spec and dumps the
+fully-materialized plan (every auto field + why it got its value)
+WITHOUT building an engine; --spec-json loads an EngineSpec JSON as the
+base (explicit flags still override its fields):
+  PYTHONPATH=src python -m repro.launch.serve --scaled --offload \
+      --quant int4 --plan-json -
+  PYTHONPATH=src python -m repro.launch.serve --spec-json my_spec.json
 """
 import argparse
+import json
 import time
 
 import numpy as np
 
+from repro.serving.spec import (EngineSpec, SpecError, add_spec_args,
+                                spec_from_args)
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--scaled", action="store_true")
-    ap.add_argument("--b-max", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--offload", action="store_true",
-                    help="stream weights from host/disk via the PIPO "
-                         "pipeline instead of keeping them resident")
-    ap.add_argument("--placement", default="host",
-                    choices=("host", "disk"),
-                    help="weight tier for --offload")
-    ap.add_argument("--pipeline", default="performance",
-                    choices=("performance", "memory", "sequential"),
-                    help="PIPO scheduling mode for --offload")
-    ap.add_argument("--quant", default=None, choices=("int4",),
-                    help="stream weights as packed INT4 (--offload only); "
-                         "~1/4 the link bytes, dequant overlapped on the "
-                         "transfer pool")
-    ap.add_argument("--no-warm", action="store_true",
-                    help="disable cross-step preloading (cold per-step "
-                         "pipeline, the pre-warm baseline)")
-    ap.add_argument("--preload-depth", type=int, default=None,
-                    metavar="D",
-                    help="layers kept in flight beyond the computing one "
-                         "(--offload, performance pipeline); default: "
-                         "sized from the memory budget "
-                         "(autoconfig.serving_preload_depth, see "
-                         "docs/TUNING.md)")
-    ap.add_argument("--sim-bw", type=float, default=None,
-                    help="simulated link bandwidth floor in bytes/s "
-                         "(deterministic transfer timing; see "
-                         "docs/BENCHMARKS.md)")
-    args = ap.parse_args()
-    if not args.offload and (args.quant or args.no_warm
-                             or args.sim_bw is not None
-                             or args.preload_depth is not None):
-        ap.error("--quant/--no-warm/--sim-bw/--preload-depth only apply to "
-                 "--offload (the resident engine streams nothing)")
 
-    from repro.configs import get_config, scaled_down
-    from repro.serving import (OffloadedServingEngine, Request, ServingEngine)
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="PIPO serving launcher (spec-driven: flags -> "
+                    "EngineSpec -> ResolvedPlan -> create_engine)")
+    add_spec_args(ap)                       # generated from CLI_FLAGS
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic request count for the demo workload")
+    ap.add_argument("--spec-json", metavar="FILE",
+                    help="load an EngineSpec JSON as the base "
+                         "(explicitly-given flags override its fields)")
+    ap.add_argument("--plan-json", nargs="?", const="-", metavar="FILE",
+                    help="resolve and dump the plan JSON (stdout when no "
+                         "FILE), then exit without serving — the plan "
+                         "dry-run")
+    return ap
 
-    cfg = get_config(args.arch)
-    if args.scaled:
-        cfg = scaled_down(cfg)
-    if args.offload:
-        eng = OffloadedServingEngine(cfg, b_max=args.b_max,
-                                     max_len=args.max_len,
-                                     placement=args.placement,
-                                     pipeline=args.pipeline,
-                                     quant=args.quant,
-                                     warm=not args.no_warm,
-                                     depth=args.preload_depth,
-                                     sim_bw=args.sim_bw)
-    else:
-        eng = ServingEngine(cfg, b_max=args.b_max, max_len=args.max_len)
+
+def main(argv=None):
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    base = None
+    try:
+        if args.spec_json:
+            with open(args.spec_json) as f:
+                base = EngineSpec.from_json(f.read())
+        spec = spec_from_args(args, base=base)
+        plan = spec.resolve()
+    except (SpecError, OSError, json.JSONDecodeError) as e:
+        ap.error(str(e))
+    if args.plan_json:
+        payload = json.dumps(plan.to_json(), indent=2)
+        if args.plan_json == "-":
+            print(payload)
+        else:
+            with open(args.plan_json, "w") as f:
+                f.write(payload + "\n")
+            print(f"plan written to {args.plan_json}")
+        return
+
+    from repro.serving import Request
+    from repro.serving.spec import create_engine
+
+    print(f"plan: {plan.summary()}")
+    eng = create_engine(plan)
+    cfg = eng.cfg
+    offloaded = plan.engine == "offloaded"
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -91,13 +98,13 @@ def main():
     total = sum(len(r.out) for r in done)
     print(f"completed={len(done)} tokens={total} tok_s={total / dt:.1f} "
           f"stats={eng.stats}")
-    if args.offload:
+    if offloaded:
         rep = eng.pipeline_report()
         busy = {k: f"{v['busy_s']:.2f}s" for k, v in rep["per_kind"].items()}
-        print(f"pipeline[{args.pipeline}] depth={eng.sched.depth} "
+        print(f"pipeline[{plan.pipeline}] depth={eng.sched.depth} "
               f"compute_util={rep['compute_util']:.2f} "
               f"bubble_frac={rep['bubble_frac']:.2f} busy={busy}")
-        eng.shutdown()
+    eng.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,14 @@
 from repro.serving.base import Request, SlotEngineBase
+from repro.serving.spec import (AdaptiveDepth, EngineSpec, PreloadPolicy,
+                                Pressure, QuantPolicy, ResolvedPlan,
+                                SpecError, StaticDepth,
+                                UnsupportedModelError, WeightsInt4,
+                                build_lm, create_engine)
 from repro.serving.engine import ServingEngine
 from repro.serving.offload_engine import OffloadedServingEngine
 
 __all__ = ["Request", "SlotEngineBase", "ServingEngine",
-           "OffloadedServingEngine"]
+           "OffloadedServingEngine", "EngineSpec", "ResolvedPlan",
+           "SpecError", "UnsupportedModelError", "create_engine",
+           "build_lm", "PreloadPolicy", "StaticDepth", "AdaptiveDepth",
+           "Pressure", "QuantPolicy", "WeightsInt4"]

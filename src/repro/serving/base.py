@@ -46,6 +46,10 @@ class Request:
     prompt: np.ndarray                 # (s,) int32
     max_new: int = 32
     eos_id: int = -1                   # -1: never stops early
+    # enc-dec architectures (whisper): precomputed encoder frames
+    # (enc_len, d_model); None = zero-frame stub (frontends are stubs
+    # per assignment).  Ignored by decoder-only configs.
+    enc_embeds: Optional[np.ndarray] = None
     # filled by the engine
     out: List[int] = field(default_factory=list)
     t_submit: float = 0.0

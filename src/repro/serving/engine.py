@@ -9,6 +9,13 @@ through the PIPO pipeline is ``serving.offload_engine``.
 Slot KV spill/restore (``offload_slot``/``restore_slot``) snapshots the
 immutable cache pytree, so when a transfer pool is attached the spill runs
 as a PIPO KV_SAVE task overlapping subsequent decode steps.
+
+This engine also carries the architectures the offloaded engine can't
+(``serving.spec.offload_capability``): encoder-decoder stacks (whisper —
+per-request ``Request.enc_embeds`` frames, zero-frame stub when absent)
+and embeds-frontend configs (qwen2-vl — token prompts run through the
+shared embedding table, the text-only stub), so ``create_engine`` has a
+resident fallback for every registry config.
 """
 from __future__ import annotations
 
@@ -22,20 +29,29 @@ from repro.configs.base import ModelConfig
 from repro.core.pipeline import ThreadPool
 from repro.models import Dist, build_model
 from repro.serving.base import Request, SlotEngineBase
+from repro.serving.spec import ResolvedPlan
 
 __all__ = ["Request", "ServingEngine"]
 
 
 class ServingEngine(SlotEngineBase):
-    def __init__(self, cfg: ModelConfig, *, b_max: int = 4,
+    def __init__(self, cfg: "ModelConfig | ResolvedPlan", *, b_max: int = 4,
                  max_len: int = 256, seed: int = 0,
                  kv_pool: Optional[ThreadPool] = None, spill_cap: int = 32):
+        if isinstance(cfg, ResolvedPlan):
+            self.plan: Optional[ResolvedPlan] = cfg
+            cfg = self.plan.model_config()
+            b_max, max_len = self.plan.b_max, self.plan.max_len
+            seed, spill_cap = self.plan.seed, self.plan.spill_cap
+        else:
+            self.plan = None
         super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=kv_pool,
                          spill_cap=spill_cap)
         self.dist = Dist.local()
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
-        self.caches = self.model.init_cache(b_max, max_len)
+        self.caches = self.model.init_cache(
+            b_max, max_len, cfg.encoder_seq_len if cfg.enc_dec else None)
         self._jit()
 
     def _jit(self):
@@ -46,14 +62,27 @@ class ServingEngine(SlotEngineBase):
                                  dist)
         self._decode = jax.jit(decode, donate_argnums=(3,))
 
-        def prefill1(params, toks, cache_len):
-            return m.prefill(params, {"tokens": toks}, dist, cache_len)
+        def prefill1(params, batch, cache_len):
+            return m.prefill(params, batch, dist, cache_len)
         self._prefill = jax.jit(prefill1, static_argnums=(2,))
+
+    def _prefill_batch(self, req: Request) -> dict:
+        """b=1 prompt batch: token prompts always embed through the
+        shared table (the text-only stub for embeds-frontend configs);
+        enc-dec configs additionally carry encoder frames — the
+        request's ``enc_embeds`` or a zero-frame stub."""
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        if self.cfg.enc_dec:
+            enc = req.enc_embeds
+            if enc is None:
+                enc = np.zeros((self.cfg.encoder_seq_len, self.cfg.d_model),
+                               np.float32)
+            batch["enc_embeds"] = jnp.asarray(enc)[None]
+        return batch
 
     # ---- compute ------------------------------------------------------------
     def _prefill_into_slot(self, slot: int, req: Request) -> int:
-        nt, cache1 = self._prefill(self.params,
-                                   jnp.asarray(req.prompt)[None],
+        nt, cache1 = self._prefill(self.params, self._prefill_batch(req),
                                    self.max_len)
         # scatter the b=1 cache rows into the slot (KV "admission")
         self.caches = self._map_slot(

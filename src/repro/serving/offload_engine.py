@@ -60,6 +60,7 @@ Pipeline modes (pick with ``pipeline=``):
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -71,15 +72,28 @@ from repro.configs.base import MOE, ModelConfig, LayerSpec
 from repro.core.offload import DeviceStore, DiskStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
 from repro.core.tasks import Task, TaskType, Trace
-from repro.core.transfer import TieredWeightStore, int4_roundtrip, quantize_unit
+from repro.core.transfer import TieredWeightStore, int4_roundtrip
 from repro.models import Dist, build_model
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models import transformer as T
 from repro.models.common import silu
 from repro.serving.base import Request, SlotEngineBase
+from repro.serving.spec import (EngineSpec, Pressure, ResolvedPlan,
+                                StaticDepth, UnsupportedModelError,
+                                offload_capability, preload_policy_for,
+                                quant_policy_for)
 
 __all__ = ["Request", "OffloadedServingEngine", "quant_roundtrip_params"]
+
+# the pre-spec constructor signature's defaults: the deprecation shim
+# overlays provided kwargs on these so a legacy call resolves to the
+# exact plan the old constructor would have acted on
+_LEGACY_DEFAULTS = dict(
+    b_max=4, max_len=256, seed=0, placement="host", pipeline="performance",
+    quant=None, fused_int4=True, warm=None, depth=None,
+    disk_root="", block_bytes=None, n_io_threads=3,
+    cold_reads=False, sim_bw=None, spill_cap=32)
 
 
 @dataclass
@@ -142,57 +156,81 @@ class OffloadedServingEngine(SlotEngineBase):
     on the caller's thread; weight/KV transfers run on the internal
     3-thread pool per Algorithm 1."""
 
-    def __init__(self, cfg: ModelConfig, *, b_max: int = 4,
-                 max_len: int = 256, seed: int = 0,
-                 placement: str = "host", pipeline: str = "performance",
-                 quant: Optional[str] = None, fused_int4: bool = True,
-                 warm: Optional[bool] = None, depth: Optional[int] = None,
-                 disk_root: str = "/tmp/pipo_serve_disk",
-                 block_bytes: int = 8 << 20, n_io_threads: int = 3,
-                 cold_reads: bool = False, sim_bw: Optional[float] = None,
-                 spill_cap: int = 32):
-        assert cfg.rope_theta != 0 and not cfg.enc_dec and \
-            cfg.frontend != "embeds", \
-            "offloaded serving supports token-frontend rope decoder stacks"
-        assert quant in (None, "int4"), quant
-        if depth is None:
-            from repro.core.autoconfig import serving_preload_depth
-            depth = serving_preload_depth(cfg, b_max=b_max, max_len=max_len,
-                                          quant=quant, spill_cap=spill_cap,
-                                          placement=placement)
-        depth = PipelineScheduler.clamp_depth(pipeline, self._n_units(cfg),
-                                              depth)
+    def __init__(self, plan: "ResolvedPlan | ModelConfig", **legacy_kwargs):
+        """Canonical construction takes ONE argument: a ``ResolvedPlan``
+        (``EngineSpec.resolve()``; usually via
+        ``serving.spec.create_engine``).  Passing a ``ModelConfig`` plus
+        the pre-spec keyword arguments still works through a deprecation
+        shim — the kwargs are converted to an ``EngineSpec`` and
+        resolved, so both paths act on an identical plan (asserted in
+        tests/test_spec.py)."""
+        if isinstance(plan, ModelConfig):
+            warnings.warn(
+                "OffloadedServingEngine(cfg, **kwargs) is deprecated; "
+                "build an EngineSpec and pass its resolved plan "
+                "(serving.spec.create_engine) instead",
+                DeprecationWarning, stacklevel=2)
+            unknown = set(legacy_kwargs) - set(_LEGACY_DEFAULTS)
+            if unknown:
+                raise TypeError(f"unknown kwargs {sorted(unknown)}")
+            spec = EngineSpec(arch=plan.name, cfg=plan, offload=True,
+                              **{**_LEGACY_DEFAULTS, **legacy_kwargs})
+            plan = spec.resolve()
+        elif legacy_kwargs:
+            raise TypeError("plan construction takes no kwargs; set the "
+                            "fields on the EngineSpec instead")
+        cfg = plan.model_config()
+        cap = offload_capability(cfg)
+        if cap is not None or plan.engine != "offloaded":
+            raise UnsupportedModelError(
+                cap or "resident_plan",
+                f"offloaded serving supports token-frontend rope decoder "
+                f"stacks only (failing capability: {cap or plan.engine}; "
+                f"arch {plan.arch}); create_engine(plan) falls back to "
+                f"the resident ServingEngine")
+        self.plan = plan
+        self.preload_policy = preload_policy_for(plan, cfg)
+        self.quant_policy = quant_policy_for(plan.quant)
+        # window ceiling: adaptive policies may deepen later, so the pool
+        # (and its KV headroom) is sized once for the policy's max depth
+        max_depth = PipelineScheduler.clamp_depth(
+            plan.pipeline, self._n_units(cfg), self.preload_policy.max_depth())
+        depth = PipelineScheduler.clamp_depth(
+            plan.pipeline, self._n_units(cfg), max(1, plan.depth))
         self.trace = Trace()
         # pool sized to the window (depth weight loads + KV load + KV save)
-        pool = ThreadPool(PipelineScheduler.pool_size(depth), self.trace)
-        super().__init__(cfg, b_max=b_max, max_len=max_len, kv_pool=pool,
-                         spill_cap=spill_cap)
+        pool = ThreadPool(PipelineScheduler.pool_size(max(depth, max_depth)),
+                          self.trace)
+        super().__init__(cfg, b_max=plan.b_max, max_len=plan.max_len,
+                         kv_pool=pool, spill_cap=plan.spill_cap)
         self.dist = Dist.local()
         self.model = build_model(cfg)
-        self.pipeline_mode = pipeline
-        self.quant = quant
-        self.warm = (pipeline == "performance") if warm is None else \
-            bool(warm)
+        self.pipeline_mode = plan.pipeline
+        self.quant = plan.quant
+        self.warm = plan.warm
         self.device = DeviceStore()
-        self.disk = DiskStore(disk_root)
+        self.disk = DiskStore(plan.disk_root)
         self.weights = TieredWeightStore(
-            placement=placement, host=self.host, device=self.device,
-            disk=self.disk, quant=quant, fused_int4=fused_int4,
-            block_bytes=block_bytes, n_io_threads=n_io_threads,
-            cold_reads=cold_reads, sim_bw=sim_bw)
-        params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
+            placement=plan.placement, host=self.host, device=self.device,
+            disk=self.disk, quant=self.quant_policy.weight_mode,
+            fused_int4=plan.fused_int4, block_bytes=plan.block_bytes,
+            n_io_threads=plan.n_io_threads, cold_reads=plan.cold_reads,
+            sim_bw=plan.sim_bw)
+        params = self.model.init(jax.random.PRNGKey(plan.seed), jnp.float32)
         self._phase = "prefill"           # until the first _decode_active
         # bytes staged device-side into compact MoE combine stacks — the
         # |union|-proportionality proof (tests assert it equals loaded
         # experts x per-expert fp32 bytes, strictly below the full bank)
         self.stats["moe_stack_bytes"] = 0
+        self.stats["preload_depth"] = depth
+        self.stats["depth_resizes"] = 0
         self.units: List[_Unit] = []
         self._split_params(params)
         self._kv_init()
         assert len(self.units) == self._n_units(cfg)
-        self.sched = PipelineScheduler(len(self.units), pipeline, pool=pool,
-                                       trace=self.trace, warm=self.warm,
-                                       depth=depth)
+        self.sched = PipelineScheduler(len(self.units), plan.pipeline,
+                                       pool=pool, trace=self.trace,
+                                       warm=self.warm, depth=depth)
         self._jit_units()
 
     @staticmethod
@@ -203,7 +241,7 @@ class OffloadedServingEngine(SlotEngineBase):
 
     # ---- weight tiering -----------------------------------------------------
     def _maybe_quant(self, tensors):
-        return quantize_unit(tensors) if self.quant == "int4" else tensors
+        return self.quant_policy.prepare_unit(tensors)
 
     def _split_params(self, params):
         """Embeddings/final norm stay on device (small, needed every step);
@@ -507,10 +545,27 @@ class OffloadedServingEngine(SlotEngineBase):
         self.sched.drop_kv_preloads()
         return int(toks[-1][0])
 
+    def _resize_window(self, active: List[int]):
+        """Consult the preload policy with the LIVE pressure snapshot
+        and re-size the scheduler's window between steps (main thread).
+        ``StaticDepth`` always answers the same, so the pre-spec engines
+        are reproduced bit for bit; ``AdaptiveDepth`` deepens under
+        light load and shrinks as KV/spill pressure ramps."""
+        if isinstance(self.preload_policy, StaticDepth):
+            return
+        p = Pressure(active=len(active),
+                     max_pos=int(max(self.pos[s] for s in active)),
+                     spills=len(self._spill_lru))
+        d = self.sched.set_depth(self.preload_policy.depth(p))
+        if d != self.stats["preload_depth"]:
+            self.stats["depth_resizes"] += 1
+            self.stats["preload_depth"] = d
+
     def _decode_active(self, active: List[int]) -> np.ndarray:
         """One batched decode step through the pipeline (main thread).
         With a warm scheduler the step's first weight/KV loads were
         pre-submitted during the previous step's tail compute."""
+        self._resize_window(active)
         self._phase = "decode"
         self._active = list(active)
         self._pos_snap = self.pos.copy()

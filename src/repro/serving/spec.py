@@ -1,0 +1,747 @@
+"""EngineSpec: one declarative, resolvable plan for every engine.
+
+The pipeline grew many interacting knobs — placement, pipeline mode,
+warm, preload depth, quant, spill cap, io threads, sim link — and they
+used to be duplicated across three engine constructors and mirrored by
+hand in the launch CLIs.  This module replaces the kwarg sprawl with one
+API (FlexInfer's thesis: offloading strategies are *declared* and
+resolved against the device at runtime, not hard-coded per engine):
+
+  spec = EngineSpec(arch="tinyllama-1.1b", scaled=True, offload=True)
+  plan = spec.resolve()          # every auto field materialized + why
+  eng  = create_engine(plan)     # ServingEngine | OffloadedServingEngine
+  lm   = build_lm(plan)          # the batch-generation PipelinedLM
+
+``EngineSpec`` is the *intent*: fields may be ``None``/"auto" and are
+validated with typed errors (``SpecError``).  ``resolve(budget)`` runs
+the paper's §3.5 memory model (``core.autoconfig``) and returns a
+``ResolvedPlan`` — fully materialized, JSON round-trippable, and
+carrying a per-field *provenance* map: every auto decision (engine,
+placement, warm, depth, block_bytes, int4 kernel) records the why
+string from the memory model, so a dumped plan is an auditable record
+of what the resolver decided and why (``launch.serve --plan-json``).
+
+Engines accept a ``ResolvedPlan`` as their single constructor argument;
+thin shims keep old constructor kwargs working (one DeprecationWarning,
+converted to a spec internally — old-kwarg and spec construction yield
+identical plans, asserted in tests/test_spec.py).
+
+Two policy seams live behind the plan:
+
+  * ``PreloadPolicy`` — who decides the preload window per decode step.
+    ``StaticDepth(D)`` reproduces the fixed budget-sized window
+    bit-for-bit; ``AdaptiveDepth`` re-sizes it *between* decode steps
+    from live KV/spill pressure (requests in flight, longest position
+    actually used, retained spills) via ``memory_model.live_depth`` —
+    the ROADMAP "depth is static per engine" gap.
+  * ``QuantPolicy`` — what crosses the offload link quantized.
+    ``WeightsInt4`` is today's packed-weight streaming; the seam is
+    structured so INT4 KV streaming (``kv_mode``) slots in next.
+
+The CLI speaks the same API: ``CLI_FLAGS`` is the single flag<->field
+table ``launch.serve`` generates its argparse from, and
+``tools/check_docs.py`` cross-checks table, live argparse, and the
+``EngineSpec`` dataclass three ways in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.offload import MemoryBudget
+from repro.core.pipeline import PIPELINE_MODES
+
+__all__ = [
+    "EngineSpec", "ResolvedPlan", "SpecError", "UnsupportedModelError",
+    "create_engine", "build_lm", "offload_capability",
+    "PreloadPolicy", "StaticDepth", "AdaptiveDepth", "Pressure",
+    "QuantPolicy", "WeightsInt4", "quant_policy_for",
+    "CLI_FLAGS", "FlagSpec", "NO_FLAG_FIELDS", "WORKLOAD_FLAGS",
+    "add_spec_args", "spec_from_args",
+]
+
+QUANT_MODES = (None, "int4")
+DEPTH_POLICIES = ("static", "adaptive")
+PLACEMENTS = ("auto", "device", "host", "disk")
+
+
+class SpecError(ValueError):
+    """An EngineSpec field (or field combination) is invalid."""
+
+
+class UnsupportedModelError(RuntimeError):
+    """The offloaded engine cannot serve this architecture.  Carries the
+    failing capability so callers can dispatch on it; ``create_engine``
+    falls back to the resident ``ServingEngine`` instead of raising."""
+
+    def __init__(self, capability: str, message: str):
+        super().__init__(message)
+        self.capability = capability
+
+
+def offload_capability(cfg: ModelConfig) -> Optional[str]:
+    """The capability that rules out offloaded serving for ``cfg``, or
+    None when the offloaded engine supports it (token-frontend rope
+    decoder stacks only)."""
+    if cfg.enc_dec:
+        return "enc_dec"
+    if cfg.frontend == "embeds":
+        return "embeds_frontend"
+    if cfg.rope_theta == 0:
+        return "no_rope"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# shared JSON/registry plumbing (EngineSpec and ResolvedPlan)
+# ---------------------------------------------------------------------------
+
+
+def _registry_config(arch: str, scaled: bool,
+                     cfg: Optional[ModelConfig]) -> ModelConfig:
+    if cfg is not None:
+        return cfg
+    from repro.configs import get_config, scaled_down
+    try:
+        base = get_config(arch)
+    except KeyError as e:
+        raise SpecError(str(e)) from e
+    return scaled_down(base) if scaled else base
+
+
+def _json_dict(obj) -> Dict[str, Any]:
+    d = dataclasses.asdict(obj)
+    d.pop("cfg")                       # not serializable, not compared
+    return d
+
+
+def _from_json_dict(cls, d: "Dict[str, Any] | str", *, require_all: bool):
+    if isinstance(d, str):
+        d = json.loads(d)
+    known = {f.name for f in dataclasses.fields(cls)} - {"cfg"}
+    unknown = set(d) - known
+    if unknown:
+        raise SpecError(f"unknown {cls.__name__} field(s) "
+                        f"{sorted(unknown)}")
+    if require_all:
+        missing = known - set(d)
+        if missing:
+            raise SpecError(f"{cls.__name__} JSON missing "
+                            f"{sorted(missing)}")
+    return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec — declarative intent
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Declarative engine plan.  ``None`` / ``"auto"`` fields are
+    resolved against the memory budget by ``resolve()``; everything else
+    is validated as-is.  ``cfg`` optionally overrides the registry
+    lookup (ad-hoc benchmark configs); it is excluded from JSON and
+    equality — a spec is registry-reconstructable iff ``cfg`` is None."""
+
+    arch: str = "tinyllama-1.1b"
+    scaled: bool = False
+    # -- batch + lengths ---------------------------------------------------
+    b_max: int = 4
+    max_len: int = 256
+    seed: int = 0
+    # -- engine + placement ------------------------------------------------
+    offload: Optional[bool] = None      # None: memory model decides
+    placement: str = "auto"             # auto|device|host|disk
+    # -- pipeline ----------------------------------------------------------
+    pipeline: str = "performance"
+    warm: Optional[bool] = None         # None: performance => warm
+    depth: Optional[int] = None         # None: budget-sized
+    depth_policy: str = "static"        # static|adaptive
+    # -- quant -------------------------------------------------------------
+    quant: Optional[str] = None         # None|int4
+    fused_int4: Optional[bool] = None   # None: §3.5 batch<16 rule
+    # -- spill / io / sim --------------------------------------------------
+    spill_cap: int = 32
+    cache_on: str = "host"              # PipelinedLM only: host|device
+    disk_root: str = ""                 # "": default root
+    block_bytes: Optional[int] = None   # None: 8 MiB (Appendix A)
+    n_io_threads: int = 3
+    cold_reads: bool = False
+    sim_bw: Optional[float] = None
+    # -- ad-hoc config override (not serialized, not compared) -------------
+    cfg: Optional[ModelConfig] = field(default=None, compare=False,
+                                       repr=False)
+
+    # ---- JSON ------------------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return _json_dict(self)
+
+    @classmethod
+    def from_json(cls, d: "Dict[str, Any] | str") -> "EngineSpec":
+        return _from_json_dict(cls, d, require_all=False)
+
+    # ---- validation ------------------------------------------------------
+    def model_config(self) -> ModelConfig:
+        return _registry_config(self.arch, self.scaled, self.cfg)
+
+    def validate(self) -> None:
+        """Typed field/combination checks; raises ``SpecError``."""
+        def bad(msg):
+            raise SpecError(msg)
+        if self.placement not in PLACEMENTS:
+            bad(f"placement {self.placement!r} not in {PLACEMENTS}")
+        if self.pipeline not in PIPELINE_MODES:
+            bad(f"pipeline {self.pipeline!r} not in {PIPELINE_MODES}")
+        if self.quant not in QUANT_MODES:
+            bad(f"quant {self.quant!r} not in {QUANT_MODES}")
+        if self.depth_policy not in DEPTH_POLICIES:
+            bad(f"depth_policy {self.depth_policy!r} not in "
+                f"{DEPTH_POLICIES}")
+        if self.cache_on not in ("host", "device"):
+            bad(f"cache_on {self.cache_on!r} not in ('host', 'device')")
+        if self.b_max < 1:
+            bad(f"b_max must be >= 1, got {self.b_max}")
+        if self.max_len < 2:
+            bad(f"max_len must be >= 2, got {self.max_len}")
+        if self.depth is not None and self.depth < 1:
+            bad(f"depth must be >= 1 (or None for auto), got {self.depth}")
+        if self.spill_cap < 0:
+            bad(f"spill_cap must be >= 0, got {self.spill_cap}")
+        if self.n_io_threads < 1:
+            bad(f"n_io_threads must be >= 1, got {self.n_io_threads}")
+        if self.block_bytes is not None and self.block_bytes < 4096:
+            bad(f"block_bytes must be >= 4096, got {self.block_bytes}")
+        if self.sim_bw is not None and self.sim_bw <= 0:
+            bad(f"sim_bw must be > 0, got {self.sim_bw}")
+        if self.offload is False:
+            for name in ("quant", "sim_bw", "depth", "warm"):
+                if getattr(self, name) is not None:
+                    bad(f"{name} only applies to the offloaded engine "
+                        f"(offload=False pins the resident ServingEngine)")
+            if self.depth_policy != "static":
+                bad("depth_policy only applies to the offloaded engine")
+            if self.placement not in ("auto", "device"):
+                bad(f"placement={self.placement!r} only applies to the "
+                    f"offloaded engine")
+        if self.depth_policy == "adaptive" and self.pipeline != "performance":
+            bad("depth_policy='adaptive' needs the performance pipeline "
+                "(other modes pin a single-layer window)")
+        self.model_config()          # arch resolvable (raises SpecError)
+
+    # ---- resolution ------------------------------------------------------
+    def resolve(self, budget: Optional[MemoryBudget] = None) -> "ResolvedPlan":
+        """Materialize every auto field against ``budget`` (paper §3.5 /
+        Eq. 1 via ``core.autoconfig``), recording each decision's why in
+        the plan's provenance map."""
+        from repro.core.autoconfig import (choose_placement,
+                                           serving_depth_decision)
+        self.validate()
+        budget = budget or MemoryBudget()
+        cfg = self.model_config()
+        prov: Dict[str, str] = {}
+        cap = offload_capability(cfg)
+
+        # ---- engine + placement (capability gate, then Eq. 1) ----
+        eq1: Dict[str, str] = {}
+
+        def eq1_placement():
+            if not eq1:
+                pl, why = choose_placement(cfg, batch=self.b_max,
+                                           seq=self.max_len,
+                                           precision_bytes=4, budget=budget,
+                                           quant=self.quant)
+                eq1["placement"], eq1["why"] = pl, why
+            return eq1["placement"], eq1["why"]
+
+        if self.offload is False:
+            engine = "resident"
+            prov["engine"] = "explicit: offload=False (resident weights)"
+        elif cap is not None:
+            engine = "resident"
+            detail = {"enc_dec": "encoder-decoder stack",
+                      "embeds_frontend": "embeds frontend",
+                      "no_rope": "non-rope positions"}[cap]
+            if self.offload:
+                prov["engine"] = (f"offload requested but unsupported "
+                                  f"({cap}: {detail}); fell back to the "
+                                  f"resident ServingEngine")
+            else:
+                prov["engine"] = (f"auto: offloading unsupported "
+                                  f"({cap}: {detail}); resident")
+        elif self.offload is True:
+            engine = "offloaded"
+            prov["engine"] = "explicit: offload=True"
+        elif self.placement == "device":
+            engine = "resident"
+            prov["engine"] = "explicit: placement='device' (resident)"
+        elif self.placement in ("host", "disk"):
+            engine = "offloaded"
+            prov["engine"] = (f"explicit placement={self.placement!r} "
+                              f"implies the offloaded engine")
+        else:
+            pl, why = eq1_placement()
+            engine = "resident" if pl == "device" else "offloaded"
+            prov["engine"] = f"auto (Eq. 1): {why}"
+
+        if engine == "resident":
+            placement = "device"
+            prov.setdefault("placement",
+                            "resident engine: weights live on device")
+        elif self.placement != "auto":
+            placement = self.placement
+            prov["placement"] = f"explicit: {self.placement}"
+        else:
+            pl, why = eq1_placement()
+            if pl == "device":
+                placement = "host"
+                prov["placement"] = ("auto: weights would fit the device, "
+                                     "but offloading was requested; host "
+                                     "is the fastest streaming tier")
+            else:
+                placement = pl
+                prov["placement"] = f"auto (Eq. 1): {why}"
+
+        # ---- offload-only fields ----
+        if engine == "resident":
+            quant, warm, depth, depth_policy = None, False, 0, "static"
+            fused = True
+            sim_bw = None
+            for name, was in (("quant", self.quant),
+                              ("sim_bw", self.sim_bw),
+                              ("warm", self.warm),
+                              ("depth", self.depth)):
+                if was is not None:
+                    prov[name] = (f"dropped ({was!r}): the resident engine "
+                                  f"streams nothing over the link")
+            if self.depth_policy != "static":
+                prov["depth_policy"] = ("dropped ('adaptive'): no preload "
+                                        "window on the resident engine")
+            prov.setdefault("warm", "n/a: resident engine has no pipeline")
+            prov.setdefault("depth", "n/a: resident engine has no window")
+        else:
+            quant = self.quant
+            if self.warm is None:
+                warm = self.pipeline == "performance"
+                prov["warm"] = (
+                    "auto: performance pipeline keeps the scheduler warm "
+                    "across decode steps (cross-step preload)"
+                    if warm else
+                    f"auto: {self.pipeline} pipeline has no cross-step "
+                    f"preload")
+            else:
+                warm = bool(self.warm)
+                prov["warm"] = f"explicit: warm={warm}"
+            if self.depth is not None:
+                depth = self.depth
+                prov["depth"] = (f"explicit: depth={self.depth} (engines "
+                                 f"clamp to their schedulable unit count)")
+            elif self.pipeline != "performance":
+                depth = 1
+                prov["depth"] = (f"auto: {self.pipeline} pipeline pins a "
+                                 f"single-layer window")
+            else:
+                d, why = serving_depth_decision(
+                    cfg, b_max=self.b_max, max_len=self.max_len,
+                    quant=quant, spill_cap=self.spill_cap,
+                    placement=placement, budget=budget)
+                depth = d
+                prov["depth"] = f"auto: {why}"
+            depth_policy = self.depth_policy
+            if depth_policy == "adaptive":
+                prov["depth_policy"] = (
+                    "adaptive: window re-sized between decode steps from "
+                    "live KV/spill pressure (requests in flight, longest "
+                    "position used, retained spills) via "
+                    "memory_model.live_depth; the static fit above is the "
+                    "initial depth")
+            if quant != "int4":
+                fused = True
+                prov["fused_int4"] = "n/a: no INT4 streaming"
+            elif self.fused_int4 is None:
+                fused = self.b_max < 16
+                prov["fused_int4"] = (
+                    f"auto (§3.5): batch {self.b_max} "
+                    f"{'<' if fused else '>='} 16 — "
+                    f"{'fused dequant-matmul' if fused else 'dequant-first'}")
+            else:
+                fused = bool(self.fused_int4)
+                prov["fused_int4"] = f"explicit: fused_int4={fused}"
+            sim_bw = self.sim_bw
+
+        if self.block_bytes is None:
+            block_bytes = 8 << 20
+            prov["block_bytes"] = ("auto: 8MiB blocks (Appendix A: disk "
+                                   "bandwidth saturates at 8-32MiB)")
+        else:
+            block_bytes = int(self.block_bytes)
+        disk_root = self.disk_root or "/tmp/pipo_serve_disk"
+        if not self.disk_root:
+            prov["disk_root"] = "auto: default /tmp/pipo_serve_disk"
+
+        return ResolvedPlan(
+            arch=self.arch, scaled=self.scaled, engine=engine,
+            b_max=self.b_max, max_len=self.max_len, seed=self.seed,
+            placement=placement, pipeline=self.pipeline, quant=quant,
+            fused_int4=fused, warm=warm, depth=depth,
+            depth_policy=depth_policy, spill_cap=self.spill_cap,
+            cache_on=self.cache_on, disk_root=disk_root,
+            block_bytes=block_bytes, n_io_threads=self.n_io_threads,
+            cold_reads=self.cold_reads, sim_bw=sim_bw,
+            device_budget=budget.device, host_budget=budget.host,
+            provenance=prov, cfg=self.cfg)
+
+
+# ---------------------------------------------------------------------------
+# ResolvedPlan — materialized execution plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ResolvedPlan:
+    """A fully-materialized engine plan: no Nones-meaning-auto left, and
+    ``provenance[field]`` records why each auto field got its value.
+    JSON round-trips (``to_json``/``from_json``); ``cfg`` (the ad-hoc
+    config override) is excluded from JSON and equality, so a plan is
+    file-shippable iff its arch is registry-resolvable."""
+
+    arch: str
+    scaled: bool
+    engine: str                  # "resident" | "offloaded"
+    b_max: int
+    max_len: int
+    seed: int
+    placement: str               # device|host|disk
+    pipeline: str
+    quant: Optional[str]
+    fused_int4: bool
+    warm: bool
+    depth: int                   # 0 on the resident engine
+    depth_policy: str
+    spill_cap: int
+    cache_on: str
+    disk_root: str
+    block_bytes: int
+    n_io_threads: int
+    cold_reads: bool
+    sim_bw: Optional[float]
+    # the budget the plan was resolved under (bytes) — recorded so the
+    # plan is auditable and so AdaptiveDepth re-sizes against the SAME
+    # budget at run time
+    device_budget: int = MemoryBudget.device
+    host_budget: int = MemoryBudget.host
+    provenance: Dict[str, str] = field(default_factory=dict)
+    cfg: Optional[ModelConfig] = field(default=None, compare=False,
+                                       repr=False)
+
+    def to_json(self) -> Dict[str, Any]:
+        return _json_dict(self)
+
+    @classmethod
+    def from_json(cls, d: "Dict[str, Any] | str") -> "ResolvedPlan":
+        return _from_json_dict(cls, d, require_all=True)
+
+    def model_config(self) -> ModelConfig:
+        return _registry_config(self.arch, self.scaled, self.cfg)
+
+    def summary(self) -> str:
+        return (f"{self.arch}{'(scaled)' if self.scaled else ''} "
+                f"engine={self.engine} placement={self.placement} "
+                f"pipeline={self.pipeline} warm={self.warm} "
+                f"depth={self.depth}({self.depth_policy}) "
+                f"quant={self.quant or 'fp32'} b_max={self.b_max} "
+                f"max_len={self.max_len}")
+
+
+# ---------------------------------------------------------------------------
+# PreloadPolicy seam
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Pressure:
+    """Live load snapshot the engine hands the preload policy between
+    decode steps."""
+    active: int                  # requests in flight (occupied slots)
+    max_pos: int                 # longest KV position actually written
+    spills: int = 0              # slot-spill namespaces retained on host
+
+
+class PreloadPolicy:
+    """Decides the preload window.  ``max_depth()`` sizes the transfer
+    pool at engine build time; ``depth(pressure)`` is consulted before
+    every decode step (main thread; must be cheap)."""
+
+    def max_depth(self) -> int:
+        raise NotImplementedError
+
+    def depth(self, pressure: Pressure) -> int:
+        raise NotImplementedError
+
+
+class StaticDepth(PreloadPolicy):
+    """Today's behavior, bit for bit: a fixed window, whatever the
+    load.  ``StaticDepth(plan.depth)`` reproduces the pre-spec engines
+    exactly (token parity asserted per depth x quant in tests)."""
+
+    def __init__(self, depth: int):
+        self._depth = max(1, int(depth))
+
+    def max_depth(self) -> int:
+        return self._depth
+
+    def depth(self, pressure: Pressure) -> int:
+        return self._depth
+
+    def __repr__(self):
+        return f"StaticDepth({self._depth})"
+
+
+class AdaptiveDepth(PreloadPolicy):
+    """Re-sizes the window between decode steps from live KV/spill
+    pressure (ROADMAP gap: "depth is static per engine").  Light load —
+    few requests in flight, short contexts — leaves device headroom the
+    static worst-case sizing can't see, so the window deepens; as
+    requests and positions ramp (or spills pile onto the host) the same
+    §3.5 capacity model shrinks it back, bottoming out at the paper's
+    depth-1 pipeline.  The transfer pool is sized once for
+    ``depth_cap``, so deepening never needs new threads."""
+
+    def __init__(self, cfg: ModelConfig, *, b_max: int, max_len: int,
+                 quant: Optional[str] = None, placement: str = "host",
+                 budget: Optional[MemoryBudget] = None, depth_cap: int = 8):
+        from repro.core.memory_model import host_pinned_bytes
+        self.cfg = cfg
+        self.b_max = b_max
+        self.max_len = max_len
+        self.quant = quant
+        self.placement = placement
+        self.budget = budget or MemoryBudget()
+        self.depth_cap = max(1, int(depth_cap))
+        # the host-guard terms don't depend on live load — precompute
+        # once; depth() runs on the main thread between decode steps
+        self._host_fixed, self._per_spill = host_pinned_bytes(
+            cfg, b_max=b_max, max_len=max_len, quant=quant,
+            placement=placement)
+
+    def max_depth(self) -> int:
+        return self.depth_cap
+
+    def depth(self, pressure: Pressure) -> int:
+        from repro.core.memory_model import live_depth
+        return live_depth(self.cfg, active=pressure.active,
+                          pos_used=pressure.max_pos, b_max=self.b_max,
+                          max_len=self.max_len, quant=self.quant,
+                          spills=pressure.spills, placement=self.placement,
+                          device_budget=self.budget.device,
+                          host_budget=self.budget.host,
+                          depth_cap=self.depth_cap,
+                          host_fixed=self._host_fixed,
+                          per_spill=self._per_spill)
+
+    def __repr__(self):
+        return (f"AdaptiveDepth(cap={self.depth_cap}, "
+                f"quant={self.quant or 'fp32'})")
+
+
+def preload_policy_for(plan: ResolvedPlan,
+                       cfg: Optional[ModelConfig] = None,
+                       budget: Optional[MemoryBudget] = None
+                       ) -> PreloadPolicy:
+    """The plan's preload policy instance (engine build time).  The
+    adaptive policy re-sizes against the budget the plan was resolved
+    under (recorded on the plan), not whatever the defaults are now."""
+    if plan.depth_policy == "adaptive":
+        if budget is None:
+            budget = MemoryBudget(device=plan.device_budget,
+                                  host=plan.host_budget)
+        return AdaptiveDepth(cfg or plan.model_config(), b_max=plan.b_max,
+                             max_len=plan.max_len, quant=plan.quant,
+                             placement=plan.placement, budget=budget)
+    return StaticDepth(max(1, plan.depth))
+
+
+# ---------------------------------------------------------------------------
+# QuantPolicy seam
+# ---------------------------------------------------------------------------
+
+
+class QuantPolicy:
+    """What crosses the offload link quantized.  ``weight_mode`` feeds
+    ``TieredWeightStore`` (packing + dequant-on-load); ``prepare_unit``
+    packs a unit's tensors host-side at build time; ``kv_mode`` is the
+    reserved seam for INT4 KV streaming (ROADMAP: "INT4 KV streaming is
+    the next byte win") — None today, so engines stream the cache at
+    compute precision."""
+
+    name = "none"
+    weight_mode: Optional[str] = None
+    kv_mode: Optional[str] = None
+
+    def prepare_unit(self, tensors: Dict[str, Any]) -> Dict[str, Any]:
+        return tensors
+
+
+class WeightsInt4(QuantPolicy):
+    """Paper §3.4: eligible 2-D projections stored as packed nibbles +
+    groupwise scales; only packed bytes cross the link, the dequant runs
+    on a transfer thread."""
+
+    name = "int4"
+    weight_mode = "int4"
+
+    def prepare_unit(self, tensors: Dict[str, Any]) -> Dict[str, Any]:
+        from repro.core.transfer import quantize_unit
+        return quantize_unit(tensors)
+
+
+def quant_policy_for(quant: Optional[str]) -> QuantPolicy:
+    if quant == "int4":
+        return WeightsInt4()
+    if quant is None:
+        return QuantPolicy()
+    raise SpecError(f"quant {quant!r} not in {QUANT_MODES}")
+
+
+# ---------------------------------------------------------------------------
+# Engine construction — the single path
+# ---------------------------------------------------------------------------
+
+
+def create_engine(plan: "ResolvedPlan | EngineSpec"):
+    """The one serving-engine constructor: dispatches a resolved plan to
+    ``ServingEngine`` (resident) or ``OffloadedServingEngine``
+    (streamed).  Accepts an unresolved ``EngineSpec`` as a convenience
+    (resolved against the default budget)."""
+    if isinstance(plan, EngineSpec):
+        plan = plan.resolve()
+    from repro.serving.engine import ServingEngine
+    from repro.serving.offload_engine import OffloadedServingEngine
+    if plan.engine == "offloaded":
+        return OffloadedServingEngine(plan)
+    return ServingEngine(plan)
+
+
+def build_lm(plan: "ResolvedPlan | EngineSpec"):
+    """Batch-generation twin of ``create_engine``: a ``PipelinedLM``
+    configured from the plan (``b_max`` is its batch; the resident case
+    maps to placement='device')."""
+    if isinstance(plan, EngineSpec):
+        plan = plan.resolve()
+    from repro.core.engine import PipelinedLM
+    return PipelinedLM(plan)
+
+
+# ---------------------------------------------------------------------------
+# CLI flag <-> spec field table (launch.serve generates argparse from it;
+# tools/check_docs.py cross-checks it against argparse AND the dataclass)
+# ---------------------------------------------------------------------------
+
+
+_NO_CLI_DEFAULT = object()     # sentinel: CLI default == spec field default
+
+
+@dataclass(frozen=True)
+class FlagSpec:
+    """One CLI flag bound to one EngineSpec field.  ``kind``:
+    "value" (typed argument), "true" (store_true), "false"
+    (store_false, e.g. --no-warm -> warm=False).  ``cli_default``
+    applies when the flag is absent and no --spec-json base was given
+    (where the CLI's historical default differs from the spec's)."""
+
+    flag: str
+    field: str
+    kind: str = "value"
+    type: Any = str
+    choices: Optional[Tuple] = None
+    cli_default: Any = _NO_CLI_DEFAULT
+    metavar: Optional[str] = None
+    help: str = ""
+
+
+CLI_FLAGS: Tuple[FlagSpec, ...] = (
+    FlagSpec("--arch", "arch", help="registry architecture id"),
+    FlagSpec("--scaled", "scaled", kind="true",
+             help="use the scaled-down smoke config"),
+    FlagSpec("--b-max", "b_max", type=int,
+             help="decode slot count (continuous-batching width)"),
+    FlagSpec("--max-len", "max_len", type=int, cli_default=128,
+             help="per-slot KV capacity"),
+    FlagSpec("--seed", "seed", type=int, help="parameter init seed"),
+    FlagSpec("--offload", "offload", kind="true", cli_default=False,
+             help="stream weights from host/disk via the PIPO pipeline "
+                  "instead of keeping them resident"),
+    FlagSpec("--placement", "placement", choices=("auto", "host", "disk"),
+             help="weight tier for --offload (auto: Eq. 1 memory model)"),
+    FlagSpec("--pipeline", "pipeline", choices=PIPELINE_MODES,
+             help="PIPO scheduling mode for --offload"),
+    FlagSpec("--quant", "quant", choices=("int4",),
+             help="stream weights as packed INT4 (--offload only); ~1/4 "
+                  "the link bytes, dequant overlapped on the transfer "
+                  "pool"),
+    FlagSpec("--no-warm", "warm", kind="false",
+             help="disable cross-step preloading (cold per-step "
+                  "pipeline, the pre-warm baseline)"),
+    FlagSpec("--preload-depth", "depth", type=int, metavar="D",
+             help="layers kept in flight beyond the computing one "
+                  "(--offload, performance pipeline); default: sized "
+                  "from the memory budget (see docs/TUNING.md)"),
+    FlagSpec("--depth-policy", "depth_policy",
+             choices=DEPTH_POLICIES,
+             help="static: fixed window; adaptive: re-sized between "
+                  "decode steps from live KV/spill pressure"),
+    FlagSpec("--spill-cap", "spill_cap", type=int,
+             help="LRU cap on retained slot spills (parked requests "
+                  "pinned)"),
+    FlagSpec("--sim-bw", "sim_bw", type=float,
+             help="simulated link bandwidth floor in bytes/s "
+                  "(deterministic transfer timing; see "
+                  "docs/BENCHMARKS.md)"),
+)
+
+# EngineSpec fields deliberately without a CLI flag (engine-internal or
+# kwargs-only knobs; the parity check closes over this set)
+NO_FLAG_FIELDS = frozenset({
+    "fused_int4", "cache_on", "disk_root", "block_bytes", "n_io_threads",
+    "cold_reads", "cfg",
+})
+
+# launch.serve flags that are workload/IO, not spec fields
+WORKLOAD_FLAGS = frozenset({"--requests", "--spec-json", "--plan-json",
+                            "--help"})
+
+
+def add_spec_args(parser) -> None:
+    """Generate the spec half of an argparse CLI from ``CLI_FLAGS``.
+    All defaults are SUPPRESS so ``spec_from_args`` can tell explicit
+    flags from absent ones (explicit flags override a --spec-json
+    base)."""
+    import argparse
+    for f in CLI_FLAGS:
+        kw = dict(dest=f.field, default=argparse.SUPPRESS, help=f.help)
+        if f.kind == "true":
+            parser.add_argument(f.flag, action="store_true", **kw)
+        elif f.kind == "false":
+            parser.add_argument(f.flag, action="store_false", **kw)
+        else:
+            if f.choices is not None:
+                kw["choices"] = f.choices
+            if f.metavar is not None:
+                kw["metavar"] = f.metavar
+            parser.add_argument(f.flag, type=f.type, **kw)
+
+
+def spec_from_args(args, base: Optional[EngineSpec] = None) -> EngineSpec:
+    """Build an EngineSpec from parsed args: start from ``base`` (a
+    --spec-json load) or from the spec defaults overlaid with the
+    table's CLI defaults, then apply every explicitly-given flag."""
+    if base is None:
+        cli_defaults = {f.field: f.cli_default for f in CLI_FLAGS
+                        if f.cli_default is not _NO_CLI_DEFAULT}
+        base = EngineSpec(**cli_defaults)
+    given = {f.field: getattr(args, f.field) for f in CLI_FLAGS
+             if hasattr(args, f.field)}
+    return dataclasses.replace(base, **given)

@@ -8,12 +8,22 @@ import pytest
 
 from repro.configs import get_config, scaled_down
 from repro.core.pipeline import ThreadPool
-from repro.serving import OffloadedServingEngine, Request, ServingEngine
+from repro.serving import (EngineSpec, OffloadedServingEngine, Request,
+                           ServingEngine, create_engine)
 from repro.serving.offload_engine import quant_roundtrip_params
 
 
 def _cfg():
     return scaled_down(get_config("tinyllama-1.1b"))
+
+
+def _offload_spec(cfg, **kw):
+    """Spec-path construction (the canonical create_engine route); most
+    tests below keep the legacy kwarg shim on purpose — both must act on
+    identical plans (tests/test_spec.py asserts that)."""
+    kw.setdefault("placement", "host")
+    return create_engine(EngineSpec(arch=cfg.name, cfg=cfg, offload=True,
+                                    **kw))
 
 
 def _moe_cfg():
@@ -63,11 +73,14 @@ def test_offload_decode_parity_cold(resident_tokens):
 @pytest.mark.parametrize("depth", [2, 3])
 def test_offload_decode_parity_depth(resident_tokens, depth):
     """Depth-D windows are a scheduling change only: token parity with
-    the resident engine holds at every preload depth."""
+    the resident engine holds at every preload depth.  Built through
+    the spec path — a StaticDepth(D) plan must match the pre-redesign
+    engine bit for bit (acceptance criterion)."""
+    from repro.serving import StaticDepth
     cfg = _cfg()
-    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
-                                 placement="host", pipeline="performance",
-                                 depth=depth)
+    eng = _offload_spec(cfg, b_max=2, max_len=64, pipeline="performance",
+                        depth=depth)
+    assert isinstance(eng.preload_policy, StaticDepth)
     assert eng.sched.depth == min(depth, len(eng.units) - 1)
     assert _serve(eng, _prompts(cfg)) == resident_tokens
 
@@ -130,17 +143,17 @@ def test_offload_int4_decode_parity():
     assert int4_bytes < 0.5 * fp32_bytes      # packed nibbles + scales
 
 
-def test_offload_int4_depth_parity():
+@pytest.mark.parametrize("depth", [2, 3])
+def test_offload_int4_depth_parity(depth):
     """Acceptance criterion: parity holds at every depth/quant combo —
-    INT4 streaming with a deep window still matches the roundtripped
-    resident reference token for token."""
+    an INT4 StaticDepth(D) plan still matches the roundtripped resident
+    reference token for token."""
     cfg = _cfg()
     ref = ServingEngine(cfg, b_max=2, max_len=64)
     ref.params = quant_roundtrip_params(cfg, ref.params)
     ref_tokens = _serve(ref, _prompts(cfg))
-    eng = OffloadedServingEngine(cfg, b_max=2, max_len=64,
-                                 placement="host", pipeline="performance",
-                                 quant="int4", depth=3)
+    eng = _offload_spec(cfg, b_max=2, max_len=64, pipeline="performance",
+                        quant="int4", depth=depth)
     assert _serve(eng, _prompts(cfg)) == ref_tokens
 
 

@@ -15,14 +15,28 @@ Four checks over README.md and docs/*.md:
 4. CLI flags: every `--flag` token the docs mention (in inline code or
    fenced blocks) must appear in a live `add_argument` definition in the
    repo's CLI sources (`src/repro/launch/*.py`, `benchmarks/*.py`,
-   `tests/conftest.py`) or in the small argparse built-in allowlist —
-   a renamed serving/benchmark knob fails the check instead of leaving
-   the tuning guide pointing at a flag that no longer exists.
+   `tests/conftest.py`), in the spec flag table
+   (`serving/spec.py::CLI_FLAGS` — `launch.serve` generates its argparse
+   from it), or in the small argparse built-in allowlist — a renamed
+   serving/benchmark knob fails the check instead of leaving the tuning
+   guide pointing at a flag that no longer exists.
+
+Plus one structural check:
+
+5. flag<->spec three-way consistency: `serving.spec.CLI_FLAGS` (the
+   single flag<->field table), the LIVE `launch.serve` argparse (built
+   via `build_parser()`), and the `EngineSpec` dataclass fields must
+   agree — every table flag is a real parser flag, every parser flag is
+   either in the table or a declared workload flag, every table field is
+   a real spec field, and every spec field is either in the table or in
+   the declared no-flag set.  A knob added in one place but not the
+   others fails CI.
 
 Run locally:  python tools/check_docs.py
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import re
 import subprocess
@@ -30,6 +44,7 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
 DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 
 LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#\s]+)\)")
@@ -54,7 +69,38 @@ def known_cli_flags():
     flags = set(FLAG_ALLOWLIST)
     for src in CLI_SOURCES:
         flags.update(FLAG_DEF_RE.findall(src.read_text()))
+    from repro.serving.spec import CLI_FLAGS
+    flags.update(f.flag for f in CLI_FLAGS)
     return flags
+
+
+def check_spec_cli_consistency(errors: list):
+    """Check 5: the flag<->field table vs the LIVE launch.serve argparse
+    vs the EngineSpec dataclass, three ways."""
+    from repro.launch.serve import build_parser
+    from repro.serving.spec import (CLI_FLAGS, NO_FLAG_FIELDS,
+                                    WORKLOAD_FLAGS, EngineSpec)
+    parser_flags = {s for a in build_parser()._actions
+                    for s in a.option_strings if s.startswith("--")}
+    table_flags = {f.flag for f in CLI_FLAGS}
+    table_fields = [f.field for f in CLI_FLAGS]
+    spec_fields = {f.name for f in dataclasses.fields(EngineSpec)}
+    for fl in sorted(table_flags - parser_flags):
+        errors.append(f"spec table flag {fl} not defined by "
+                      f"launch.serve's argparse")
+    for fl in sorted(parser_flags - table_flags - WORKLOAD_FLAGS):
+        errors.append(f"launch.serve flag {fl} neither in "
+                      f"serving.spec.CLI_FLAGS nor WORKLOAD_FLAGS")
+    for fd in sorted(set(table_fields) - spec_fields):
+        errors.append(f"spec table field {fd!r} is not an EngineSpec "
+                      f"dataclass field")
+    for fd in sorted(spec_fields - set(table_fields) - NO_FLAG_FIELDS):
+        errors.append(f"EngineSpec field {fd!r} has no CLI flag and is "
+                      f"not in NO_FLAG_FIELDS")
+    dup = {f for f in table_fields if table_fields.count(f) > 1}
+    if dup:
+        errors.append(f"spec table maps multiple flags to field(s) "
+                      f"{sorted(dup)}")
 
 
 def doc_flags(text: str):
@@ -89,7 +135,7 @@ def extract_commands(block: str):
             while cmd.endswith("\\") and i + 1 < len(lines):
                 i += 1
                 cmd = cmd[:-1].rstrip() + " " + lines[i].strip()
-            out.append(cmd)
+            out.append(cmd.split(" # ")[0].rstrip())   # drop trailing comment
         i += 1
     return out
 
@@ -119,12 +165,18 @@ def check_file(md: Path, errors: list, cli_flags: set):
 
 def dry_form(cmd: str):
     """Map a quickstart command to a cheap dry invocation (argparse
-    --help exits before heavy imports; benchmarks use --list)."""
+    --help exits before heavy imports; benchmarks use --list; a serve
+    --plan-json command runs AS-IS — resolving the plan without
+    building an engine is itself the dry-run, and it exercises the
+    whole spec->plan path in docs CI)."""
     argv = cmd.split()
     assert argv[0] == "PYTHONPATH=src" and argv[1] == "python"
     rest = argv[2:]
     if rest[0] == "-m" and rest[1] == "pytest":
         return None                       # running the suite is CI's job
+    if rest[0] == "-m" and rest[1] == "repro.launch.serve" \
+            and "--plan-json" in rest:
+        return [sys.executable, "-m", *rest[1:]]
     if rest[0] == "-m":
         return [sys.executable, "-m", rest[1], "--help"]
     if rest[0].endswith("benchmarks/run.py"):
@@ -139,6 +191,7 @@ def main() -> int:
     errors: list[str] = []
     commands: list[str] = []
     cli_flags = known_cli_flags()
+    check_spec_cli_consistency(errors)
     for md in DOC_FILES:
         if not md.exists():
             errors.append(f"missing doc file: {md.relative_to(ROOT)}")
