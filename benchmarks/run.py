@@ -15,6 +15,7 @@ validated directionally against its claims in EXPERIMENTS.md.
   fig12_moe          — MoE offloading with expert-load overlap (Fig. 12)
   serving_offload    — continuous-batching decode: seq/cold/warm/warm+INT4
   serving_offload_depth — warm preload-depth sweep {1,2,3} x {fp32,int4}
+  serving_kv_quant   — KV streaming sweep: kv_mode {fp32,int4} x depth {1,2}
   kernel_int4        — fused INT4 kernel vs dequant-then-matmul (§3.4)
   roofline           — aggregate dry-run roofline table (ours)
 """
@@ -27,6 +28,11 @@ from pathlib import Path
 import numpy as np
 
 ROWS: list[str] = []
+
+# --steps N overrides serving_kv_quant's steady-state decode length
+# (CI smoke runs `serving_kv_quant --steps 2` so the scenario can't rot
+# without paying the full sweep); None = the scenario's default
+STEPS: "int | None" = None
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -366,6 +372,50 @@ def serving_offload_depth():
          f"int4_d3_vs_d1={results[('int4', 1)] / results[('int4', 3)]:.2f}x")
 
 
+def serving_kv_quant():
+    """KV-cache streaming sweep (tiered KV store): kv_mode {fp32, int4}
+    x depth {1, 2} on the sim link, weights pinned INT4 so the step is
+    KV-dominated — the regime the PR-3 depth sweep exposed ("INT4 is
+    KV-dominated on the sim link: quantized cache is the next byte
+    win").  All arms serve the same warm continuous-batching workload;
+    live-row slicing is on everywhere (it is the store's only load
+    path), so the fp32 rows already ship live rows, and the int4 rows
+    additionally pack them ~3.2x (bf16 -> nibbles + group scales).  The
+    derived fields carry the mean traced DECODE KV_LOAD payload —
+    prefill loads carry 0 bytes and are excluded, so the figure is the
+    real per-load link cost.  Record the table in docs/BENCHMARKS.md."""
+    cfg = _bench_cfg(layers=6, d=512, ff=2048)
+    max_new = (STEPS + 1) if STEPS else 16
+    results = {}
+    for kv_mode in ("fp32", "int4"):
+        for depth in (1, 2):
+            eng = _serving_engine(
+                cfg, b_max=8, max_len=96, placement="host", sim_bw=0.3e9,
+                pipeline="performance", warm=True, depth=depth,
+                quant="int4", fused_int4=True, kv_mode=kv_mode)
+            slab_kb = eng.kvstore.slab_nbytes(0) / 2**10
+            trace = eng.trace              # survives engine shutdown
+            tok_s, step_s, rep = _serve_steady_state(eng, max_new=max_new)
+            loads = [e.nbytes for e in trace.events()
+                     if e.kind == "kv_load" and e.nbytes]
+            kv_kb_load = sum(loads) / max(1, len(loads)) / 2**10
+            results[(kv_mode, depth)] = step_s
+            emit(f"serving_kv_quant_{kv_mode}_d{depth}", step_s * 1e6,
+                 f"decode_tok_s={tok_s:.2f};"
+                 f"step_ms={step_s * 1e3:.1f};"
+                 f"kv_KB_per_load={kv_kb_load:.0f};"
+                 f"slab_KB={slab_kb:.0f};"
+                 f"util={rep['compute_util']:.2f};"
+                 f"bubble={rep['bubble_frac']:.2f}")
+    emit("serving_kv_quant_summary", 0.0,
+         f"int4_vs_fp32_d1="
+         f"{results[('fp32', 1)] / results[('int4', 1)]:.2f}x;"
+         f"int4_vs_fp32_d2="
+         f"{results[('fp32', 2)] / results[('int4', 2)]:.2f}x;"
+         f"fp32_d2_vs_d1={results[('fp32', 1)] / results[('fp32', 2)]:.2f}x;"
+         f"int4_d2_vs_d1={results[('int4', 1)] / results[('int4', 2)]:.2f}x")
+
+
 def serving_adaptive_depth():
     """AdaptiveDepth vs static windows under RAMPING request load: the
     engine starts near-empty (2 requests) and admits 2 more every 4
@@ -464,8 +514,8 @@ def roofline():
 
 BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            fig9_ablation, table3_latency, table6_memory, fig12_moe,
-           serving_offload, serving_offload_depth, serving_adaptive_depth,
-           kernel_int4, roofline]
+           serving_offload, serving_offload_depth, serving_kv_quant,
+           serving_adaptive_depth, kernel_int4, roofline]
 
 
 def run_spec_scenario(path: str):
@@ -487,7 +537,7 @@ def run_spec_scenario(path: str):
          step_s * 1e6, derived)
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> "int | None":
     import argparse
     by_name = {b.__name__: b for b in BENCHES}
     ap = argparse.ArgumentParser(
@@ -502,7 +552,16 @@ def main(argv=None) -> None:
                     help="run an ad-hoc serving scenario from an "
                          "EngineSpec JSON (resolve -> create_engine -> "
                          "steady-state decode), then exit")
+    ap.add_argument("--steps", type=int, metavar="N",
+                    help="steady-state decode steps for the "
+                         "serving_kv_quant scenario (smoke runs: CI "
+                         "uses 'serving_kv_quant --steps 2'); other "
+                         "scenarios run their documented full length")
     args = ap.parse_args(argv)
+    if args.steps is not None and args.steps < 1:
+        ap.error(f"--steps must be >= 1, got {args.steps}")
+    global STEPS
+    STEPS = args.steps
     if args.list:
         for b in BENCHES:
             doc = (b.__doc__ or "").strip().splitlines()[0]
@@ -523,15 +582,23 @@ def main(argv=None) -> None:
     benches = [by_name[n] for n in args.scenarios] if args.scenarios \
         else BENCHES
     print("name,us_per_call,derived")
+    failed = []
     for b in benches:
         t0 = time.perf_counter()
         try:
             b()
         except Exception as e:  # keep the harness alive per-table
             emit(f"{b.__name__}_ERROR", 0.0, repr(e)[:120])
+            failed.append(b.__name__)
         print(f"# {b.__name__} done in {time.perf_counter()-t0:.1f}s",
               flush=True)
+    if failed and args.scenarios:
+        # explicitly-requested scenarios must not rot silently (the CI
+        # smoke relies on a nonzero exit); full runs stay best-effort
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.exit(main())

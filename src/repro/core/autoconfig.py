@@ -20,7 +20,7 @@ from typing import Optional
 from repro.configs.base import ModelConfig
 from repro.core.memory_model import (MemoryEstimate, depth_capacity,
                                      estimate, host_pinned_bytes,
-                                     quant_weight_ratio)
+                                     quant_kv_ratio, quant_weight_ratio)
 from repro.core.offload import MemoryBudget
 
 
@@ -105,17 +105,22 @@ def configure(cfg: ModelConfig, *, batch: int, prompt_len: int,
 
 def serving_depth_decision(cfg: ModelConfig, *, b_max: int, max_len: int,
                            precision_bytes: int = 4,
-                           quant: Optional[str] = None, spill_cap: int = 0,
+                           quant: Optional[str] = None,
+                           kv_mode: Optional[str] = None,
+                           spill_cap: int = 0,
                            placement: str = "host",
                            budget: Optional[MemoryBudget] = None,
                            depth_cap: int = 8) -> tuple:
     """``serving_preload_depth`` as a (depth, why) decision, the why
     string carrying the memory-model numbers — ``EngineSpec.resolve()``
-    records it as the ``depth`` field's provenance."""
+    records it as the ``depth`` field's provenance.  ``kv_mode='int4'``
+    prices every KV term (host pin, spills, in-flight slabs) at packed
+    bytes, so the affordable window deepens just as it does for packed
+    weights."""
     budget = budget or MemoryBudget()
     fixed, per_spill = host_pinned_bytes(
         cfg, b_max=b_max, max_len=max_len, p=precision_bytes, quant=quant,
-        placement=placement)
+        kv_mode=kv_mode, placement=placement)
     host_need = fixed + spill_cap * per_spill
     if host_need > budget.host:
         return 1, (f"host tier over budget "
@@ -125,22 +130,25 @@ def serving_depth_decision(cfg: ModelConfig, *, b_max: int, max_len: int,
                    f"windows only thrash a saturated host")
     d = depth_capacity(cfg, batch=b_max, seq=max_len, p=precision_bytes,
                        budget_bytes=budget.device, quant=quant,
-                       depth_cap=depth_cap)
+                       kv_mode=kv_mode, depth_cap=depth_cap)
     est0 = estimate(cfg, batch=b_max, seq=max_len, p=precision_bytes,
                     preload=0)
     base = max(est0.peak_prefill, est0.peak_decode)
     per = (int(max(est0.w_mha, est0.w_mlp)
                * quant_weight_ratio(precision_bytes, quant))
-           + est0.kv_cache // max(1, cfg.num_layers))
+           + int(est0.kv_cache // max(1, cfg.num_layers)
+                 * quant_kv_ratio(precision_bytes, kv_mode)))
     return d, (f"device headroom after depth-0 peak "
                f"({base / 2**20:.0f}MiB) affords {d} in-flight "
                f"layer(s) at {per / 2**20:.1f}MiB each "
-               f"(quant={quant or 'fp32'}, cap {depth_cap})")
+               f"(quant={quant or 'fp32'}, kv={kv_mode or 'fp32'}, "
+               f"cap {depth_cap})")
 
 
 def serving_preload_depth(cfg: ModelConfig, *, b_max: int, max_len: int,
                           precision_bytes: int = 4,
-                          quant: Optional[str] = None, spill_cap: int = 0,
+                          quant: Optional[str] = None,
+                          kv_mode: Optional[str] = None, spill_cap: int = 0,
                           placement: str = "host",
                           budget: Optional[MemoryBudget] = None,
                           depth_cap: int = 8) -> int:
@@ -156,5 +164,5 @@ def serving_preload_depth(cfg: ModelConfig, *, b_max: int, max_len: int,
     depth 1."""
     return serving_depth_decision(
         cfg, b_max=b_max, max_len=max_len, precision_bytes=precision_bytes,
-        quant=quant, spill_cap=spill_cap, placement=placement,
-        budget=budget, depth_cap=depth_cap)[0]
+        quant=quant, kv_mode=kv_mode, spill_cap=spill_cap,
+        placement=placement, budget=budget, depth_cap=depth_cap)[0]

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import math
 import time
-import warnings
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Optional
@@ -130,13 +129,14 @@ class PipelinedLM:
         keyword arguments still works through a deprecation shim — the
         kwargs are converted to an ``EngineSpec`` and resolved, so both
         paths act on an identical plan."""
-        from repro.serving.spec import EngineSpec, ResolvedPlan
+        from repro.serving.spec import (EngineSpec, ResolvedPlan,
+                                        warn_deprecated_once)
         if isinstance(plan, ModelConfig):
-            warnings.warn(
+            warn_deprecated_once(
+                "PipelinedLM.legacy_kwargs",
                 "PipelinedLM(cfg, **kwargs) is deprecated; build an "
                 "EngineSpec and pass its resolved plan "
-                "(serving.spec.build_lm) instead",
-                DeprecationWarning, stacklevel=2)
+                "(serving.spec.build_lm) instead")
             unknown = set(legacy_kwargs) - set(_LEGACY_DEFAULTS)
             if unknown:
                 raise TypeError(f"unknown kwargs {sorted(unknown)}")

@@ -1,0 +1,426 @@
+"""Tiered KV store: first-class residency for the decode cache.
+
+The PIPO engines used to keep the KV cache as ad-hoc numpy dicts inside
+each engine and ship the entire allocated ``(b_max, max_len)`` slab on
+every ``KV_LOAD``.  Post the INT4 weight work, decode is KV-dominated
+(see docs/BENCHMARKS.md) — the cache bytes, not the weight bytes, bound
+the step.  ``TieredKVStore`` extracts KV ownership into one subsystem
+(mirroring ``core.transfer.TieredWeightStore`` for weights) and attacks
+the KV bytes two ways:
+
+* **live-row slabs** — ``load(j, live_b, live_len)`` moves only the
+  actually-occupied rows over the link: slots ``0..live_b-1`` and, for
+  sequence-extent (kind ``"kv"``) leaves, positions ``0..live_len-1``.
+  The device-side result is still the full-slab shape (zero-padded after
+  the link) so jitted consumers never retrace; rows outside the live
+  extent are masked by decode attention (``kv_pos <= pos``) and written
+  before they are read, so the padding is value-invisible — ``kv_mode=
+  "fp32"`` stays bit-exact with the old whole-slab path.
+  ``load_nbytes`` prices exactly the bytes that crossed, which is what
+  ``Task.nbytes``/``Trace`` record and what ``AdaptiveDepth`` prices the
+  window with (exact, not modeled).
+
+* **INT4 KV streaming** (``kv_mode="int4"``, the ``QuantPolicy.kv_mode``
+  seam) — sequence-extent cache rows are stored *packed*: each
+  ``(slot, position)`` row is group-quantized over its flattened feature
+  dim (symmetric, groups of ``gcd(F, 32)``, two nibbles per byte +
+  f32 group scales — the KV rendering of ``quant/int4.py``).  Rows are
+  quantized once, when saved (write-once per position), so the
+  quantize→dequantize roundtrip is applied exactly once per row and a
+  resident reference that roundtrips newly-written rows reproduces the
+  streamed tokens exactly (``serving.engine.KVRoundtripServingEngine``).
+  Loads ship packed bytes (+scales) over the link; the dequant runs
+  inside the consumer's jit (``device_cache``; XLA fuses it into the
+  attention compute — on TPU the Pallas rendering is
+  ``kernels/decode_attention.py::decode_attention_int4_kernel``).
+  Non-sequence leaves (rolling windows, SSM conv/state) are rewritten
+  every step — requantizing them would compound error and break the
+  roundtrip-once reference — so they stream at full precision.
+
+Thread affinity: construction and ``alloc`` run on the main thread at
+engine build; ``load``/``save_*``/``spill``/``restore`` run on transfer
+pool threads (numpy + jax ops only, no engine state).  The ``link``
+(``transfer.SimLink``) floors each load at ``bytes / bw`` like every
+other transfer, so the live-row/INT4 byte reductions show up as wall
+time under the deterministic benchmark link.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TieredKVStore", "KV_GROUP", "kv_group", "kv_eligible",
+    "quantize_kv_rows", "dequantize_kv_rows", "kv_roundtrip_rows",
+    "device_cache",
+]
+
+# canonical KV quantization group: rows are short (hkv*dh features), so
+# the group is the gcd with 32 — full-size heads get 32, scaled-down
+# test configs a smaller power of two (same spirit as transfer.int4_group
+# for weights, which uses 128 against the much longer contraction dims)
+KV_GROUP = 32
+
+
+def kv_group(n_features: int) -> int:
+    """Group size for one cache row of ``n_features`` values."""
+    return math.gcd(int(n_features), KV_GROUP)
+
+
+def kv_eligible(kind: str, feat_shape: Sequence[int]) -> bool:
+    """Whether a cache leaf quantizes under ``kv_mode='int4'``: only
+    sequence-extent (kind ``'kv'``) rows — written once per position, so
+    the quantize-once invariant holds — with an even flattened feature
+    count (nibble pairs).  Rolling-window/conv/state leaves are rewritten
+    every step and stream at full precision."""
+    f = int(np.prod(feat_shape)) if len(feat_shape) else 1
+    return kind == "kv" and f % 2 == 0 and f >= 2
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _quantize_rows(x, group: int):
+    """x (..., F) f32 -> (packed (..., F//2) uint8, scale (..., F//g) f32).
+    Symmetric groupwise over the trailing feature dim; nibble pairs packed
+    along adjacent feature columns."""
+    *lead, F = x.shape
+    xg = x.reshape(*lead, F // group, group)
+    scale = jnp.max(jnp.abs(xg), axis=-1) / 7.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(xg / scale[..., None]).astype(jnp.int32)
+    q = jnp.clip(q, -8, 7).reshape(*lead, F)
+    qu = (q + 8).astype(jnp.uint8)
+    lo = qu[..., 0::2]
+    hi = qu[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8), scale
+
+
+def _dequant_impl(packed, scale, group: int):
+    """Traceable inverse of ``_quantize_rows`` -> (..., F) f32.  Plain
+    function so consumers can inline it inside their own jit (the fused
+    path: XLA folds the unpack+scale into the attention compute)."""
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32) - 8
+    *lead, F2 = packed.shape
+    q = jnp.stack([lo, hi], axis=-1).reshape(*lead, F2 * 2)
+    w = (q.reshape(*lead, (F2 * 2) // group, group).astype(jnp.float32)
+         * scale[..., None])
+    return w.reshape(*lead, F2 * 2)
+
+
+_dequantize_rows = jax.jit(_dequant_impl, static_argnums=(2,))
+
+
+def quantize_kv_rows(x, group: Optional[int] = None):
+    """Quantize cache rows (..., F) -> (packed, scale) numpy arrays.  The
+    single quantization the store, the spill path, and the parity
+    reference all share — any drift breaks the roundtrip-once parity."""
+    x = jnp.asarray(np.asarray(x), jnp.float32)
+    g = group or kv_group(x.shape[-1])
+    packed, scale = _quantize_rows(x, g)
+    return np.asarray(packed), np.asarray(scale)
+
+
+def dequantize_kv_rows(packed, scale, group: int, dtype=jnp.bfloat16):
+    """Inverse of ``quantize_kv_rows`` -> (..., F) numpy array of
+    ``dtype`` (the cache's compute precision)."""
+    out = _dequantize_rows(jnp.asarray(np.asarray(packed)),
+                           jnp.asarray(np.asarray(scale)), group)
+    return np.asarray(out.astype(dtype))
+
+
+def kv_roundtrip_rows(x, group: Optional[int] = None):
+    """quantize -> dequantize rows through the exact jitted ops the INT4
+    streaming path uses, cast back to the input dtype — the reference
+    transformation ``KVRoundtripServingEngine`` applies to newly-written
+    cache rows so its tokens match the streamed engine's exactly."""
+    x = np.asarray(x)
+    g = group or kv_group(x.shape[-1])
+    packed, scale = quantize_kv_rows(x, g)
+    return dequantize_kv_rows(packed, scale, g, jnp.dtype(x.dtype))
+
+
+@dataclass
+class _LeafMeta:
+    """Per-leaf layout the store shares with its jitted consumers."""
+    kind: str                 # transformer cache kind ("kv"/"rep"/...)
+    feat: Tuple[int, ...]     # trailing feature shape after (b[, L])
+    dtype: Any                # compute-precision dtype of the leaf
+    quant: bool = False       # stored/streamed packed INT4
+    group: int = 0            # quant group over the flattened features
+
+
+def device_cache(cache: Dict[str, Any], meta: Dict[str, "_LeafMeta"]):
+    """Rebuild the compute-precision cache dict from a ``load()`` result
+    inside a consumer's jit: packed ``name#q``/``name#s`` pairs are
+    dequantized here (traceable; XLA fuses the unpack into the attention
+    that consumes it), full-precision leaves pass through untouched.
+    fp32 mode is the identity — bit-exact with the pre-store engines."""
+    out = {}
+    for name, m in meta.items():
+        if not m.quant:
+            out[name] = cache[name]
+            continue
+        packed, scale = cache[name + "#q"], cache[name + "#s"]
+        rows = _dequant_impl(packed, scale, m.group)
+        out[name] = rows.reshape(rows.shape[:-1] + m.feat).astype(m.dtype)
+    return out
+
+
+@dataclass
+class _RawLeaf:
+    arr: np.ndarray           # (b, ...) full precision
+
+
+@dataclass
+class _QuantLeaf:
+    packed: np.ndarray        # (b, L, F//2) uint8
+    scale: np.ndarray         # (b, L, F//g) f32
+    group: int
+    feat: Tuple[int, ...]     # original trailing feature shape
+    dtype: Any                # original compute dtype
+
+
+class TieredKVStore:
+    """Host-resident decode cache with live-row loads and optional INT4
+    row packing (see module docstring).
+
+    ``unit_shapes``/``unit_kinds``: one dict per schedulable unit, name ->
+    ((b_max, [max_len,] *feat) shape, dtype) / name -> cache kind, as
+    produced by ``models.transformer.cache_struct`` (the engine strips
+    the period-stack dim).  ``link`` is a ``transfer.SimLink`` (or any
+    object with ``floor(nbytes, t0)``) shared with the weight store so KV
+    pays the same simulated link."""
+
+    def __init__(self, unit_shapes: List[Dict[str, tuple]],
+                 unit_kinds: List[Dict[str, str]], *, b_max: int,
+                 max_len: int, kv_mode: str = "fp32", link=None):
+        assert kv_mode in ("fp32", "int4"), kv_mode
+        self.b_max = b_max
+        self.max_len = max_len
+        self.kv_mode = kv_mode
+        self.link = link
+        self.kinds: List[Dict[str, str]] = [dict(k) for k in unit_kinds]
+        self._units: List[Dict[str, Any]] = []
+        self._meta: List[Dict[str, _LeafMeta]] = []
+        for shapes, kinds in zip(unit_shapes, unit_kinds):
+            leaves: Dict[str, Any] = {}
+            meta: Dict[str, _LeafMeta] = {}
+            for name, (shape, dtype) in shapes.items():
+                kind = kinds[name]
+                feat = tuple(shape[2:]) if kind == "kv" else tuple(shape[1:])
+                m = _LeafMeta(kind, feat, np.dtype(dtype))
+                if kv_mode == "int4" and kv_eligible(kind, feat):
+                    F = int(np.prod(feat))
+                    g = kv_group(F)
+                    m.quant, m.group = True, g
+                    leaves[name] = _QuantLeaf(
+                        np.zeros((shape[0], shape[1], F // 2), np.uint8),
+                        np.zeros((shape[0], shape[1], F // g), np.float32),
+                        g, feat, np.dtype(dtype))
+                else:
+                    leaves[name] = _RawLeaf(np.zeros(shape, dtype))
+                meta[name] = m
+            self._units.append(leaves)
+            self._meta.append(meta)
+
+    # ---- layout introspection (main thread, build time) --------------------
+    def __len__(self):
+        return len(self._units)
+
+    def leaf_meta(self, j: int) -> Dict[str, _LeafMeta]:
+        """Per-leaf layout for unit ``j`` — closed over by the engine's
+        jitted decode fns (``device_cache`` consumes it)."""
+        return self._meta[j]
+
+    def has_kv(self, j: int) -> bool:
+        return bool(self.kinds[j])
+
+    # ---- byte accounting (any thread; non-blocking) ------------------------
+    def _leaf_arrays(self, j: int, name: str):
+        leaf = self._units[j][name]
+        if isinstance(leaf, _QuantLeaf):
+            return (leaf.packed, leaf.scale)
+        return (leaf.arr,)
+
+    def load_nbytes(self, j: int, live_b: Optional[int] = None,
+                    live_len: Optional[int] = None) -> int:
+        """Bytes one ``load(j, live_b, live_len)`` moves over the link —
+        exactly the sliced rows (packed bytes for INT4 leaves).  This is
+        what ``Task.nbytes`` records on KV_LOAD trace events and what
+        ``AdaptiveDepth`` prices the window's KV term with."""
+        lb = self.b_max if live_b is None else min(int(live_b), self.b_max)
+        ll = self.max_len if live_len is None else min(int(live_len),
+                                                      self.max_len)
+        total = 0
+        for name, m in self._meta[j].items():
+            for a in self._leaf_arrays(j, name):
+                shape = list(a.shape)
+                shape[0] = lb
+                if m.kind == "kv":
+                    shape[1] = ll
+                total += int(np.prod(shape)) * a.itemsize
+        return total
+
+    def slab_nbytes(self, j: int) -> int:
+        """Bytes the full allocated ``(b_max, max_len)`` slab would move
+        — the pre-live-row KV_LOAD payload, kept for tests/pricing."""
+        return self.load_nbytes(j, self.b_max, self.max_len)
+
+    def save_nbytes(self, j: int, live_b: Optional[int] = None) -> int:
+        """Bytes one decode ``save_decode`` payload moves device->host:
+        the freshly-written rows of ``live_b`` slots at compute precision
+        (quantization happens at the host tier, after the transfer)."""
+        lb = self.b_max if live_b is None else min(int(live_b), self.b_max)
+        total = 0
+        for name, m in self._meta[j].items():
+            row = int(np.prod(m.feat)) * np.dtype(m.dtype).itemsize
+            total += lb * row
+        return total
+
+    def prefill_save_nbytes(self, j: int) -> int:
+        """Bytes a prefill save moves: one slot's full rows."""
+        total = 0
+        for name, m in self._meta[j].items():
+            n = int(np.prod(m.feat)) * np.dtype(m.dtype).itemsize
+            if m.kind == "kv":
+                n *= self.max_len
+            total += n
+        return total
+
+    def max_live_load_nbytes(self, live_b: int, live_len: int) -> int:
+        """Largest per-unit live KV_LOAD payload at the given extents —
+        the exact per-layer KV price ``AdaptiveDepth`` feeds the memory
+        model instead of the modeled slab."""
+        return max(self.load_nbytes(j, live_b, live_len)
+                   for j in range(len(self._units))) if self._units else 0
+
+    def host_nbytes(self) -> int:
+        """Total host bytes the store pins (packed bytes under INT4)."""
+        return sum(a.nbytes for j in range(len(self._units))
+                   for name in self._units[j]
+                   for a in self._leaf_arrays(j, name))
+
+    # ---- loads (transfer-pool thread) --------------------------------------
+    def _put_padded(self, arr: np.ndarray, lb: int, ll: int, seq: bool):
+        sl = arr[:lb, :ll] if seq else arr[:lb]
+        if sl.shape == arr.shape:
+            dev = jnp.asarray(arr)
+        else:
+            rows = jnp.asarray(np.ascontiguousarray(sl))
+            dev = jnp.zeros(arr.shape, rows.dtype)
+            dev = dev.at[tuple(slice(0, s) for s in sl.shape)].set(rows)
+        return dev
+
+    def load(self, j: int, live_b: Optional[int] = None,
+             live_len: Optional[int] = None) -> Dict[str, Any]:
+        """KV_LOAD body: host rows -> device, sliced to the live extent
+        and zero-padded back to the full slab shape (device side, after
+        the link) so jitted consumers keep one signature.  INT4 leaves
+        arrive packed under ``name#q``/``name#s`` — run the result
+        through ``device_cache(cache, leaf_meta(j))`` inside the
+        consumer's jit.  Transfer-pool thread; pays the link floor on
+        exactly the live bytes."""
+        t0 = time.perf_counter()
+        lb = self.b_max if live_b is None else \
+            max(1, min(int(live_b), self.b_max))
+        ll = self.max_len if live_len is None else \
+            max(1, min(int(live_len), self.max_len))
+        out: Dict[str, Any] = {}
+        for name, m in self._meta[j].items():
+            leaf = self._units[j][name]
+            if isinstance(leaf, _QuantLeaf):
+                out[name + "#q"] = self._put_padded(leaf.packed, lb, ll, True)
+                out[name + "#s"] = self._put_padded(leaf.scale, lb, ll, True)
+            else:
+                out[name] = self._put_padded(leaf.arr, lb, ll,
+                                             seq=m.kind == "kv")
+        for a in out.values():
+            a.block_until_ready()
+        if self.link is not None:
+            self.link.floor(self.load_nbytes(j, lb, ll), t0)
+        return out
+
+    # ---- saves (transfer-pool thread) --------------------------------------
+    def save_prefill(self, j: int, slot: int,
+                     rows: Dict[str, np.ndarray]) -> None:
+        """Scatter one slot's freshly-prefilled rows (name -> the slot's
+        full per-slot extent, e.g. ``(max_len, *feat)`` for kv kinds).
+        INT4 leaves quantize here — once per row; positions beyond the
+        prompt are zeros and roundtrip to zeros exactly."""
+        for name, m in self._meta[j].items():
+            leaf = self._units[j][name]
+            row = np.asarray(rows[name])
+            if isinstance(leaf, _QuantLeaf):
+                # cast to the cache's compute precision FIRST: the fp32
+                # store path downcasts on assignment into the bf16 host
+                # array, and the parity reference roundtrips bf16 cache
+                # rows — quantizing the pre-cast f32 activations would
+                # pick (slightly) different scales and break parity
+                row = row.astype(m.dtype)
+                F = int(np.prod(m.feat))
+                packed, scale = quantize_kv_rows(
+                    row.reshape(row.shape[0], F), leaf.group)
+                leaf.packed[slot] = packed
+                leaf.scale[slot] = scale
+            else:
+                leaf.arr[slot] = row
+
+    def save_decode(self, j: int, rows: Dict[str, np.ndarray],
+                    active: Sequence[int], pos: np.ndarray) -> None:
+        """Scatter a decode step's new rows: for kv kinds ``rows[name]``
+        is ``(live_b, 1, *feat)`` (slot s's new row at position
+        ``pos[s]``), other kinds carry the full per-slot state.  INT4
+        leaves quantize the new row — the only time it is ever
+        quantized."""
+        for name, m in self._meta[j].items():
+            leaf = self._units[j][name]
+            row = np.asarray(rows[name])
+            if isinstance(leaf, _QuantLeaf):
+                row = row.astype(m.dtype)     # compute precision first
+                F = int(np.prod(m.feat))
+                packed, scale = quantize_kv_rows(
+                    row.reshape(row.shape[0], 1, F), leaf.group)
+                for s in active:
+                    leaf.packed[s, pos[s]] = packed[s, 0]
+                    leaf.scale[s, pos[s]] = scale[s, 0]
+            elif m.kind == "kv":
+                for s in active:
+                    leaf.arr[s, pos[s]] = row[s, 0]
+            else:
+                for s in active:
+                    leaf.arr[s] = row[s]
+
+    # ---- slot spill/restore (transfer-pool / main thread) ------------------
+    def spill(self, host, ns: str, slot: int) -> None:
+        """Copy one slot's rows into ``host`` under ``{ns}/{unit}/{name}``
+        keys.  INT4 rows spill packed (lossless; ~0.625 B/value against
+        the 2 B bf16 cache, ~3x) under ``...{name}#q`` /
+        ``...{name}#s``."""
+        for j in range(len(self._units)):
+            for name in self._units[j]:
+                leaf = self._units[j][name]
+                if isinstance(leaf, _QuantLeaf):
+                    host.put(f"{ns}/{j}/{name}#q", leaf.packed[slot].copy())
+                    host.put(f"{ns}/{j}/{name}#s", leaf.scale[slot].copy())
+                else:
+                    host.put(f"{ns}/{j}/{name}", leaf.arr[slot].copy())
+
+    def restore(self, host, ns: str, slot: int) -> None:
+        """Inverse of ``spill``: bring a parked request's rows back into
+        ``slot``.  Bit-lossless in both modes (packed rows round-trip
+        untouched)."""
+        for j in range(len(self._units)):
+            for name in self._units[j]:
+                leaf = self._units[j][name]
+                if isinstance(leaf, _QuantLeaf):
+                    leaf.packed[slot] = host.get(f"{ns}/{j}/{name}#q")
+                    leaf.scale[slot] = host.get(f"{ns}/{j}/{name}#s")
+                else:
+                    leaf.arr[slot] = host.get(f"{ns}/{j}/{name}")

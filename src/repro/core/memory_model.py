@@ -99,8 +99,19 @@ def quant_weight_ratio(p: int, quant: "str | None") -> float:
     return (0.5 / p) if quant == "int4" else 1.0
 
 
+def quant_kv_ratio(p: int, kv_mode: "str | None") -> float:
+    """Streamed/pinned KV byte ratio under ``kv_mode``: INT4 cache rows
+    are stored and cross the link packed (two nibbles per byte + group
+    scales), the same 0.5-byte convention as ``quant_weight_ratio`` —
+    in-flight preloads and host-pinned cache both sit packed; the f32
+    expansion only exists inside the consuming compute."""
+    return (0.5 / p) if kv_mode == "int4" else 1.0
+
+
 def depth_capacity(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
                    budget_bytes: int, quant: "str | None" = None,
+                   kv_mode: "str | None" = None,
+                   kv_layer_bytes: "int | None" = None,
                    depth_cap: int = 8) -> int:
     """Largest preload depth whose resident window fits ``budget_bytes``
     of device memory.
@@ -111,14 +122,23 @@ def depth_capacity(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
     cost of one more depth step is one layer's weights (quant-scaled:
     INT4 units cross the link and sit in flight packed, the same
     convention ``autoconfig.configure`` uses for placement) plus one
-    layer's KV slab; the base cost is the depth-0 peak.  Always returns
-    at least 1 — the pipeline's minimum useful window — even when the
-    budget is already blown (placement, not depth, is the knob there)."""
+    layer's KV payload; the base cost is the depth-0 peak.  The KV term
+    is the modeled live slab (``kv_mode``-scaled) unless the caller
+    passes ``kv_layer_bytes`` — the EXACT per-layer live KV_LOAD size a
+    ``TieredKVStore`` measures, which replaces the model entirely (the
+    adaptive window's pricing is then exact, not modeled).  Always
+    returns at least 1 — the pipeline's minimum useful window — even
+    when the budget is already blown (placement, not depth, is the knob
+    there)."""
     est0 = estimate(cfg, batch=batch, seq=seq, p=p, preload=0)
     base = max(est0.peak_prefill, est0.peak_decode)
     w_layer = int(max(est0.w_mha, est0.w_mlp)
                   * quant_weight_ratio(p, quant))
-    kv_layer = est0.kv_cache // max(1, cfg.num_layers)
+    if kv_layer_bytes is not None:
+        kv_layer = int(kv_layer_bytes)
+    else:
+        kv_layer = int(est0.kv_cache // max(1, cfg.num_layers)
+                       * quant_kv_ratio(p, kv_mode))
     per_extra = max(1, w_layer + kv_layer)
     headroom = budget_bytes - base
     if headroom < per_extra:
@@ -128,28 +148,34 @@ def depth_capacity(cfg: ModelConfig, *, batch: int, seq: int, p: int = 2,
 
 def host_pinned_bytes(cfg: ModelConfig, *, b_max: int, max_len: int,
                       p: int = 4, quant: "str | None" = None,
+                      kv_mode: "str | None" = None,
                       placement: str = "host") -> "tuple[int, int]":
     """(fixed_bytes, per_spill_bytes) the serving host tier pins: the
-    full decode KV cache plus — for host placement — the weights
-    themselves (packed under quant, the same byte convention as
-    ``quant_weight_ratio``; disk placement keeps only in-flight buffers
-    in host RAM), and the marginal cost of one retained slot spill (one
-    request's KV rows).  The single implementation behind BOTH the
-    resolve-time host guard (``autoconfig.serving_depth_decision``) and
-    the live one (``live_depth``) — the two must never drift."""
+    full decode KV cache (packed under ``kv_mode="int4"`` — the tiered
+    KV store keeps cache rows AND their spills as nibbles) plus — for
+    host placement — the weights themselves (packed under quant, the
+    same byte convention as ``quant_weight_ratio``; disk placement keeps
+    only in-flight buffers in host RAM), and the marginal cost of one
+    retained slot spill (one request's KV rows).  The single
+    implementation behind BOTH the resolve-time host guard
+    (``autoconfig.serving_depth_decision``) and the live one
+    (``live_depth``) — the two must never drift."""
     est = estimate(cfg, batch=b_max, seq=max_len, p=p, preload=1)
     w_host = int(est.weights * quant_weight_ratio(p, quant)) \
         if placement == "host" else 0
-    return w_host + est.kv_cache, est.kv_cache // max(1, b_max)
+    kv = int(est.kv_cache * quant_kv_ratio(p, kv_mode))
+    return w_host + kv, kv // max(1, b_max)
 
 
 def live_depth(cfg: ModelConfig, *, active: int, pos_used: int,
                b_max: int, max_len: int, p: int = 4,
-               quant: "str | None" = None, spills: int = 0,
+               quant: "str | None" = None,
+               kv_mode: "str | None" = None, spills: int = 0,
                placement: str = "host", device_budget: int,
                host_budget: int, depth_cap: int = 8,
                host_fixed: "int | None" = None,
-               per_spill: "int | None" = None) -> int:
+               per_spill: "int | None" = None,
+               kv_layer_bytes: "int | None" = None) -> int:
     """Preload depth under LIVE serving pressure (the ``AdaptiveDepth``
     policy's model): the static sizing prices the window at worst case —
     ``b_max`` slots, every one at ``max_len`` — but between decode steps
@@ -160,8 +186,10 @@ def live_depth(cfg: ModelConfig, *, active: int, pos_used: int,
     deepens under light load and shrinks as KV/spill pressure ramps:
 
       * device side: ``depth_capacity`` at (batch=active, seq=pos_used+1)
-        — the KV slab each in-flight layer pins is priced at its live
-        occupancy, not the allocation bound;
+        — the KV payload each in-flight layer pins is priced at its live
+        occupancy, not the allocation bound; when the engine measures the
+        exact live KV_LOAD size (``TieredKVStore.load_nbytes``) it passes
+        ``kv_layer_bytes`` and the modeled term drops out entirely;
       * host side: the ``serving_preload_depth`` guard with the *live*
         retained-spill count instead of the worst-case ``spill_cap`` —
         a host saturated by spills forces depth 1 exactly as at resolve
@@ -176,9 +204,10 @@ def live_depth(cfg: ModelConfig, *, active: int, pos_used: int,
     if host_fixed is None or per_spill is None:
         host_fixed, per_spill = host_pinned_bytes(
             cfg, b_max=b_max, max_len=max_len, p=p, quant=quant,
-            placement=placement)
+            kv_mode=kv_mode, placement=placement)
     if host_fixed + spills * per_spill > host_budget:
         return 1
     return depth_capacity(cfg, batch=b, seq=s, p=p,
                           budget_bytes=device_budget, quant=quant,
+                          kv_mode=kv_mode, kv_layer_bytes=kv_layer_bytes,
                           depth_cap=depth_cap)

@@ -267,9 +267,10 @@ class PipelineScheduler:
         return depth + 2
 
     def _submit(self, kind: TaskType, name: str, fn, priority=0,
-                nbytes: int = 0) -> Task:
+                nbytes: int = 0, extent=None) -> Task:
         t = Task(kind, name, fn)
         t.nbytes = nbytes            # before submit: VirtualPool traces here
+        t.extent = extent
         self.pool.submit(t, priority)
         if self.mode == "sequential":
             t.wait()
@@ -318,6 +319,13 @@ class PipelineScheduler:
         outputs = []
         nbytes_of = getattr(model, "weight_nbytes", None)
         kv_nbytes_of = getattr(model, "kv_nbytes", None)
+        # optional byte-accounting hooks a tiered-KV model exposes: the
+        # live (batch, len) extent of a KV_LOAD payload (recorded on the
+        # trace event so live-row slicing is assertable) and the size of
+        # a KV_SAVE payload (so report() splits ALL link volume by kind,
+        # not just the load directions)
+        kv_extent_of = getattr(model, "kv_extent", None)
+        kv_save_nbytes_of = getattr(model, "kv_save_nbytes", None)
 
         def submit_weight(j):
             if j is not None and j < n and j not in w_tasks:
@@ -346,7 +354,8 @@ class PipelineScheduler:
             kv_tasks[(i, j)] = self._submit(
                 TaskType.KV_LOAD, f"kv[{i},{j}]",
                 lambda i=i, j=j: model.load_kv(i, j),
-                nbytes=kv_nbytes_of(i, j) if kv_nbytes_of else 0)
+                nbytes=kv_nbytes_of(i, j) if kv_nbytes_of else 0,
+                extent=kv_extent_of(i, j) if kv_extent_of else None)
 
         def preload_window(pc):
             """Keep the next ``depth`` positions' weight loads — and the
@@ -413,7 +422,9 @@ class PipelineScheduler:
                     st = self._submit(TaskType.KV_SAVE, f"sv[{gi},{j}]",
                                       lambda gi=gi, j=j, kv=new_kv:
                                       model.save_kv(gi, j, kv),
-                                      priority=1)  # lower priority
+                                      priority=1,  # lower priority
+                                      nbytes=(kv_save_nbytes_of(gi, j)
+                                              if kv_save_nbytes_of else 0))
                     save_tasks[(gi, j)] = st
                     if self.mode in ("memory", "sequential"):
                         st.wait()

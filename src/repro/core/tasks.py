@@ -89,6 +89,12 @@ class Task:
     # KV_LOADs (model.kv_nbytes) when the model exposes those hooks, so
     # report() splits link volume by task kind.
     nbytes: int = 0
+    # live extent of a KV payload, (live_batch, live_len); None when the
+    # payload is not extent-sliced (weight loads, whole-slab KV).  Set by
+    # the submitter alongside nbytes and copied onto the TraceEvent so
+    # live-row slicing is observable on traces (the tiered-KV-store
+    # invariant: a half-full slot's KV_LOAD bytes < the allocated slab).
+    extent: Optional[tuple] = None
     # virtual-transport hook: called by wait() once the task is done, so a
     # VirtualPool can advance its clock to the waiter's sync point.
     on_wait: Optional[Callable[["Task"], None]] = None
@@ -120,6 +126,7 @@ class TraceEvent:
     t_end: float
     thread: str
     nbytes: int = 0
+    extent: Optional[tuple] = None     # live (batch, len) of a KV payload
 
 
 def _merged_busy(intervals) -> float:
@@ -155,7 +162,7 @@ class Trace:
             self._events.append(TraceEvent(task.kind.value, task.name,
                                            task.t_start - self.t0,
                                            task.t_end - self.t0, thread,
-                                           task.nbytes))
+                                           task.nbytes, task.extent))
 
     def events(self):
         with self._lock:
@@ -204,11 +211,16 @@ class Trace:
             sub = [e for e in evs if e.kind == kind]
             ivals = [(e.t_start, e.t_end) for e in sub]
             busy = _merged_busy(ivals)
+            nbytes = sum(e.nbytes for e in sub)
             per_kind[kind] = {
                 "busy_s": busy,
                 "count": len(ivals),
                 "busy_frac": busy / span if span > 0 else 0.0,
-                "bytes": sum(e.nbytes for e in sub),
+                "bytes": nbytes,
+                # measured link bandwidth for this task kind (0 when no
+                # byte-accounted events) — the observable AdaptiveDepth's
+                # bandwidth feedback EWMAs per step
+                "bw_Bps": nbytes / busy if busy > 0 else 0.0,
             }
         compute_busy = self.thread_busy("main")
         return {

@@ -129,6 +129,24 @@ def int4_roundtrip(arr):
 # ---------------------------------------------------------------------------
 
 
+@dataclass
+class SimLink:
+    """Fixed-bandwidth interconnect model shared by EVERY transfer that
+    crosses the offload boundary — weight loads (``TieredWeightStore``)
+    and KV loads (``core.kvstore.TieredKVStore``) hold the same instance,
+    so both pay the same link.  ``floor(nbytes, t0)`` sleeps out the
+    remainder of ``nbytes / bw`` seconds since ``t0`` (GIL released, like
+    a DMA engine); ``bw=None`` disables the floor."""
+
+    bw: Optional[float] = None
+
+    def floor(self, nbytes: int, t0: float):
+        if self.bw:
+            remain = nbytes / self.bw - (time.perf_counter() - t0)
+            if remain > 0:
+                time.sleep(remain)
+
+
 class TieredWeightStore:
     """Merged-buffer weight tiering shared by the generation engine
     (core.engine.PipelinedLM) and the offloaded serving engine
@@ -160,7 +178,7 @@ class TieredWeightStore:
         self.block_bytes = block_bytes
         self.n_io_threads = n_io_threads
         self.cold_reads = cold_reads
-        self.sim_bw = sim_bw
+        self.link = SimLink(sim_bw)
         self.manifests: Dict[str, Manifest] = {}
         # per-key load counters (thread-safe enough for CPython dict ops):
         # benchmarks/tests read these to assert transfer volumes, e.g. the
@@ -184,13 +202,14 @@ class TieredWeightStore:
         for INT4 units).  Any thread; non-blocking."""
         return self.manifests[key].total_bytes
 
+    @property
+    def sim_bw(self) -> Optional[float]:
+        return self.link.bw
+
     def sim_floor(self, nbytes: int, t0: float):
-        """Sleep out the remainder of ``nbytes / sim_bw`` seconds since t0 —
-        the fixed-bandwidth link model shared by weight and KV transfers."""
-        if self.sim_bw:
-            remain = nbytes / self.sim_bw - (time.perf_counter() - t0)
-            if remain > 0:
-                time.sleep(remain)
+        """Sleep out the remainder of ``nbytes / sim_bw`` seconds since t0
+        (delegates to the shared ``SimLink``)."""
+        self.link.floor(nbytes, t0)
 
     def load(self, key: str) -> Dict[str, np.ndarray]:
         """Placement tier -> device tensors (one I/O request per unit).

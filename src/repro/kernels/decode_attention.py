@@ -7,6 +7,18 @@ with online-softmax state in scratch — HBM traffic = cache + q + o, the
 paper's "KV-cache loading" rendered as HBM->VMEM streaming.  Emits
 normalized output; a partials-emitting variant backs the cross-shard
 (sequence-sharded) merge of models/attention.decode_attention.
+
+``decode_attention_int4_kernel`` is the INT4-KV variant backing
+``core.kvstore``'s ``kv_mode="int4"`` on TPU: the cache arrives as the
+store's packed row layout — per-(batch, position) rows of ``F = hkv*dh``
+features as nibble pairs (``(b, S, F//2)`` uint8) + groupwise f32 scales
+(``(b, S, F//g)``) — and the dequant happens IN-KERNEL, in VREGs, after
+the packed bytes crossed HBM->VMEM.  Only INT4 bytes pay the memory
+floor; no f32 cache is ever materialized (the cache rendering of the
+paper's §3.4 "no dequantization pass").  On the CPU container the same
+dequant traces inside the engines' decode jit (``kvstore.device_cache``)
+and XLA fuses it — numerics are identical (asserted in
+tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -96,3 +108,113 @@ def decode_attention_kernel(q, k_cache, v_cache, pos, *, block_s: int = 512,
             dimension_semantics=("parallel", "arbitrary"))
         if not interpret else None,
     )(pos_arr, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# INT4-KV variant: packed cache rows dequantized in VREGs
+# ---------------------------------------------------------------------------
+
+
+def _unpack_rows(pk_ref, sc_ref, *, group: int, hkv: int, dh: int):
+    """One VMEM block of packed cache rows -> (bs, hkv, dh) f32 via the
+    STORE's own dequant (``core.kvstore._dequant_impl`` — plain
+    traceable jnp, so it lowers inside the kernel body): the packing
+    layout lives in exactly one place and the kernel can't drift from
+    it.  Runs on the VPU; the nibble unpack is a minor-dim interleave
+    that lowers to vector ops, the per-group scale a broadcast
+    multiply."""
+    from repro.core.kvstore import _dequant_impl
+    pk = pk_ref[0]                                      # (bs, F//2) uint8
+    sc = sc_ref[0]                                      # (bs, F//group)
+    bs = pk.shape[0]
+    return _dequant_impl(pk, sc, group).reshape(bs, hkv, dh)
+
+
+def _kernel_int4(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, block_s: int, n_s: int, g: int,
+                 group: int, hkv: int, dh: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0]                                        # (h, dh)
+    # dequant HERE, after the packed bytes crossed HBM->VMEM — INT4
+    # bytes are the only cache traffic the roofline sees
+    k = _unpack_rows(kq_ref, ks_ref, group=group, hkv=hkv, dh=dh)
+    v = _unpack_rows(vq_ref, vs_ref, group=group, hkv=hkv, dh=dh)
+    h, _ = q.shape
+    qg = q.reshape(hkv, g, dh)
+    s = jnp.einsum("kgd,skd->kgs", qg.astype(jnp.float32), k) / (dh ** 0.5)
+    kv_pos = si * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (hkv, g, block_s), 2)
+    s = jnp.where(kv_pos <= pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (h, 1)
+    m_cur = jnp.max(s, axis=2).reshape(h, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new.reshape(hkv, g, 1))
+    p = jnp.where(kv_pos <= pos, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    alpha = jnp.where(m_prev > NEG_INF / 2, alpha, 0.0)
+    pv = jnp.einsum("kgs,skd->kgd", p, v)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=2).reshape(h, 1)
+    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(h, dh)
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _out():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_int4_kernel(q, k_packed, k_scale, v_packed, v_scale,
+                                 pos, *, hkv: int, group: int,
+                                 block_s: int = 512,
+                                 interpret: bool = True):
+    """q (b, h, dh); packed caches (b, S, hkv*dh//2) uint8 with scales
+    (b, S, hkv*dh//group) f32 (``core.kvstore`` row layout) ->
+    (b, h, dh).  Numerically identical to ``decode_attention_kernel``
+    over the dequantized cache (same per-element dequant, same online
+    softmax) while only packed bytes stream HBM->VMEM."""
+    b, h, dh = q.shape
+    _, S, F2 = k_packed.shape
+    assert F2 * 2 == hkv * dh, (F2, hkv, dh)
+    g = h // hkv
+    Fg = k_scale.shape[-1]
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    n_s = S // block_s
+    grid = (b, n_s)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    kernel = functools.partial(_kernel_int4, block_s=block_s, n_s=n_s, g=g,
+                               group=group, hkv=hkv, dh=dh)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM)
+            if not interpret else pl.BlockSpec((1,), lambda bi, si: (0,)),
+            pl.BlockSpec((1, h, dh), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, block_s, F2), lambda bi, si: (bi, si, 0)),
+            pl.BlockSpec((1, block_s, Fg), lambda bi, si: (bi, si, 0)),
+            pl.BlockSpec((1, block_s, F2), lambda bi, si: (bi, si, 0)),
+            pl.BlockSpec((1, block_s, Fg), lambda bi, si: (bi, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+        if not interpret else None,
+    )(pos_arr, q, k_packed, k_scale, v_packed, v_scale)

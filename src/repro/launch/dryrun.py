@@ -201,7 +201,8 @@ def serving_dryrun(arch, scaled: bool, run_all: bool):
         plans.append(plan)
         print(f"[PLAN] {a:26s} engine={plan.engine:9s} "
               f"placement={plan.placement:6s} depth={plan.depth} "
-              f"quant={plan.quant or 'fp32'}")
+              f"quant={plan.quant or 'fp32'} "
+              f"kv={plan.kv_mode or 'n/a'}")
         for fld, why in sorted(plan.provenance.items()):
             print(f"        {fld:12s} {why}")
     if len(plans) == 1 and scaled:

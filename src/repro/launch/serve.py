@@ -16,12 +16,15 @@ memory; see serving/offload_engine.py).  The pipeline stays warm across
 decode steps by default (--no-warm for the cold per-step baseline),
 keeps a budget-sized window of layers in flight (--preload-depth to
 override, --depth-policy adaptive to re-size it from live KV/spill
-pressure; docs/TUNING.md walks the sizing), and --quant int4 streams
-packed INT4 weights over the offload link:
+pressure AND the measured link-bandwidth EWMA; docs/TUNING.md walks the
+sizing), --quant int4 streams packed INT4 weights over the offload
+link, and --kv-mode int4 packs the KV-cache rows the same way (the
+tiered KV store ships live rows either way; see docs/ARCHITECTURE.md
+"The KV tier"):
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --scaled --offload --placement disk --pipeline performance
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-      --scaled --offload --quant int4
+      --scaled --offload --quant int4 --kv-mode int4
 
 Plans are first-class: --plan-json resolves the spec and dumps the
 fully-materialized plan (every auto field + why it got its value)

@@ -4,11 +4,12 @@ from repro.serving.spec import (AdaptiveDepth, EngineSpec, PreloadPolicy,
                                 SpecError, StaticDepth,
                                 UnsupportedModelError, WeightsInt4,
                                 build_lm, create_engine)
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import KVRoundtripServingEngine, ServingEngine
 from repro.serving.offload_engine import OffloadedServingEngine
 
 __all__ = ["Request", "SlotEngineBase", "ServingEngine",
-           "OffloadedServingEngine", "EngineSpec", "ResolvedPlan",
+           "KVRoundtripServingEngine", "OffloadedServingEngine",
+           "EngineSpec", "ResolvedPlan",
            "SpecError", "UnsupportedModelError", "create_engine",
            "build_lm", "PreloadPolicy", "StaticDepth", "AdaptiveDepth",
            "Pressure", "QuantPolicy", "WeightsInt4"]

@@ -16,7 +16,11 @@ Slot KV offload runs as PIPO ``KV_SAVE`` tasks on a transfer pool when one
 is provided (``kv_pool``), overlapping the device->host spill with the
 next decode steps instead of blocking the batch; admission to a spilled
 slot synchronizes on exactly the pending save task (task-level sync, the
-paper's §3.1.2 principle at request scope).
+paper's §3.1.2 principle at request scope).  The offloaded engine's
+spill/restore hooks route through its ``core.kvstore.TieredKVStore``
+(rows spill packed under ``kv_mode="int4"``); this class only owns the
+namespace/LRU/pinning policy, so the same invariants are testable on a
+virtual clock with a fake compute engine (tests/test_kvstore.py).
 
 Warm-pipeline engines (OffloadedServingEngine with
 ``PipelineScheduler(warm=True, depth=D)``) carry in-flight cross-step

@@ -31,7 +31,7 @@ from repro.models import Dist, build_model
 from repro.serving.base import Request, SlotEngineBase
 from repro.serving.spec import ResolvedPlan
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "KVRoundtripServingEngine"]
 
 
 class ServingEngine(SlotEngineBase):
@@ -155,3 +155,72 @@ class ServingEngine(SlotEngineBase):
             out.append(leaf.at[tuple(idx)].set(row.astype(leaf.dtype)))
         self.caches = jax.tree_util.tree_unflatten(
             treedef, out)
+
+
+class KVRoundtripServingEngine(ServingEngine):
+    """The ``kv_mode="int4"`` parity reference: a resident engine whose
+    newly-written cache rows are roundtripped through the EXACT
+    quantize->dequantize the tiered KV store applies to streamed rows
+    (``core.kvstore.kv_roundtrip_rows``) — once per row, right after it
+    is written, mirroring the store's quantize-at-save discipline.  An
+    offloaded engine with ``kv_mode="int4"`` must decode token-identical
+    to this reference (the KV analogue of ``quant_roundtrip_params`` for
+    weights; asserted per depth x weight-quant in
+    tests/test_serving_offload.py).
+
+    Only sequence-extent (kind ``"kv"``) leaves with an even feature
+    count roundtrip — the same ``kv_eligible`` predicate the store uses,
+    so the two can never drift."""
+
+    def __init__(self, cfg, **kw):
+        super().__init__(cfg, **kw)
+        from repro.models import transformer as T
+        _, self._kv_kinds = T.cache_struct(
+            self.cfg, self.b_max, self.max_len,
+            self.cfg.encoder_seq_len if self.cfg.enc_dec else None)
+
+    def _leaf_kind(self, path) -> str:
+        head = str(getattr(path[0], "key", path[0]))
+        idx = int(getattr(path[1], "idx", getattr(path[1], "key", path[1])))
+        name = str(getattr(path[2], "key", path[2]))
+        return self._kv_kinds[head][idx][name]
+
+    def _roundtrip_slot_rows(self, slot: int, pos=None):
+        """Roundtrip slot ``slot``'s eligible cache rows in place: every
+        position (after a prefill scattered the whole slot row) or just
+        position ``pos`` (after a decode step wrote one row)."""
+        from repro.core.kvstore import kv_eligible, kv_roundtrip_rows
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
+        out = []
+        for path, leaf in flat:
+            ax = self._batch_axis(path)
+            kind = self._leaf_kind(path)
+            feat = leaf.shape[ax + 2:]
+            if not kv_eligible(kind, feat):
+                out.append(leaf)
+                continue
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slot
+            if pos is not None:
+                idx[ax + 1] = pos
+            rows = np.asarray(leaf[tuple(idx)])
+            f = int(np.prod(feat))
+            lead = rows.shape[:rows.ndim - len(feat)]
+            rt = kv_roundtrip_rows(rows.reshape(lead + (f,)))
+            rt = rt.reshape(rows.shape)
+            out.append(leaf.at[tuple(idx)].set(
+                jnp.asarray(rt).astype(leaf.dtype)))
+        self.caches = jax.tree_util.tree_unflatten(treedef, out)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> int:
+        tok = super()._prefill_into_slot(slot, req)
+        self._roundtrip_slot_rows(slot)
+        return tok
+
+    def _decode_active(self, active):
+        nt = super()._decode_active(active)
+        for s in active:
+            # base increments pos AFTER this returns: pos[s] is the row
+            # this step just wrote — roundtrip it exactly once
+            self._roundtrip_slot_rows(s, int(self.pos[s]))
+        return nt

@@ -43,6 +43,16 @@ the gate runs (the paper's sync point) only the experts the batch routed
 to are submitted as WEIGHT_LOAD tasks — the shared expert computes while
 they stream.  Union bytes << whole-bank bytes at decode batch sizes.
 
+Tiered KV (``core.kvstore.TieredKVStore``): the per-unit decode cache is
+owned by the store, not the engine.  KV_LOAD payloads are sliced to the
+LIVE extent — occupied slots × written positions, zero-padded back to
+the slab shape device-side so the jitted decode fns never retrace — and
+``kv_mode="int4"`` (``--kv-mode int4``) stores/streams cache rows packed
+with the dequant fused into the decode jit.  Trace events carry the live
+extent and the exact link bytes; ``AdaptiveDepth`` prices its window
+from those measured bytes plus a bytes/busy bandwidth EWMA fed back from
+the Trace each step (see ``_observe_trace``).
+
 Numerics are *identical* to the resident engine: both run the same
 ``models.layers`` / ``models.moe`` functions on params from the same
 ``model.init`` seed, so decoded tokens match exactly (asserted in
@@ -59,19 +69,18 @@ Pipeline modes (pick with ``pipeline=``):
 """
 from __future__ import annotations
 
-import time
-import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MOE, ModelConfig, LayerSpec
+from repro.core.kvstore import TieredKVStore, device_cache
 from repro.core.offload import DeviceStore, DiskStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
-from repro.core.tasks import Task, TaskType, Trace
+from repro.core.tasks import Task, TaskType, Trace, _merged_busy
 from repro.core.transfer import TieredWeightStore, int4_roundtrip
 from repro.models import Dist, build_model
 from repro.models import layers as L
@@ -79,19 +88,21 @@ from repro.models import moe as moe_mod
 from repro.models import transformer as T
 from repro.models.common import silu
 from repro.serving.base import Request, SlotEngineBase
-from repro.serving.spec import (EngineSpec, Pressure, ResolvedPlan,
-                                StaticDepth, UnsupportedModelError,
-                                offload_capability, preload_policy_for,
-                                quant_policy_for)
+from repro.serving.spec import (AdaptiveDepth, EngineSpec, Pressure,
+                                ResolvedPlan, StaticDepth,
+                                UnsupportedModelError, offload_capability,
+                                preload_policy_for, quant_policy_for,
+                                warn_deprecated_once)
 
 __all__ = ["Request", "OffloadedServingEngine", "quant_roundtrip_params"]
 
 # the pre-spec constructor signature's defaults: the deprecation shim
 # overlays provided kwargs on these so a legacy call resolves to the
-# exact plan the old constructor would have acted on
+# exact plan the old constructor would have acted on (kv_mode post-dates
+# the shim but rides it for test ergonomics: None = auto -> fp32)
 _LEGACY_DEFAULTS = dict(
     b_max=4, max_len=256, seed=0, placement="host", pipeline="performance",
-    quant=None, fused_int4=True, warm=None, depth=None,
+    quant=None, kv_mode=None, fused_int4=True, warm=None, depth=None,
     disk_root="", block_bytes=None, n_io_threads=3,
     cold_reads=False, sim_bw=None, spill_cap=32)
 
@@ -165,11 +176,11 @@ class OffloadedServingEngine(SlotEngineBase):
         resolved, so both paths act on an identical plan (asserted in
         tests/test_spec.py)."""
         if isinstance(plan, ModelConfig):
-            warnings.warn(
+            warn_deprecated_once(
+                "OffloadedServingEngine.legacy_kwargs",
                 "OffloadedServingEngine(cfg, **kwargs) is deprecated; "
                 "build an EngineSpec and pass its resolved plan "
-                "(serving.spec.create_engine) instead",
-                DeprecationWarning, stacklevel=2)
+                "(serving.spec.create_engine) instead")
             unknown = set(legacy_kwargs) - set(_LEGACY_DEFAULTS)
             if unknown:
                 raise TypeError(f"unknown kwargs {sorted(unknown)}")
@@ -190,7 +201,7 @@ class OffloadedServingEngine(SlotEngineBase):
                 f"the resident ServingEngine")
         self.plan = plan
         self.preload_policy = preload_policy_for(plan, cfg)
-        self.quant_policy = quant_policy_for(plan.quant)
+        self.quant_policy = quant_policy_for(plan.quant, plan.kv_mode)
         # window ceiling: adaptive policies may deepen later, so the pool
         # (and its KV headroom) is sized once for the policy's max depth
         max_depth = PipelineScheduler.clamp_depth(
@@ -228,6 +239,20 @@ class OffloadedServingEngine(SlotEngineBase):
         self._split_params(params)
         self._kv_init()
         assert len(self.units) == self._n_units(cfg)
+        # live decode view, (scheduler iteration base, live_batch,
+        # live_len): ONE tuple so transfer-thread reads are atomic under
+        # the GIL.  Refreshed at the top of every _decode_active; a warm
+        # tail preload for iteration base+1 prices itself at live_len+1
+        # (the only way the extent can grow between steps without an
+        # admission, and admissions drop KV preloads anyway).
+        self._decode_view = (0, self.b_max, self.max_len)
+        self._extent_memo: Dict[int, tuple] = {}
+        # per-step Trace cursor + policy feedback (AdaptiveDepth only)
+        self._trace_mark = 0
+        if isinstance(self.preload_policy, AdaptiveDepth):
+            self.preload_policy.set_link_profile(
+                sum(self.weights.nbytes(u.key) for u in self.units)
+                // max(1, len(self.units)))
         self.sched = PipelineScheduler(len(self.units), plan.pipeline,
                                        pool=pool, trace=self.trace,
                                        warm=self.warm, depth=depth)
@@ -286,20 +311,26 @@ class OffloadedServingEngine(SlotEngineBase):
         self.weights.put(key, self._maybe_quant(tensors))
         return u
 
-    # ---- host KV ------------------------------------------------------------
+    # ---- tiered KV ----------------------------------------------------------
     def _kv_init(self):
-        """Per-unit host-resident cache arrays (the b_max decode cache the
-        resident engine keeps on device, spread over host RAM here)."""
+        """Hand the per-unit decode cache to a ``TieredKVStore`` (the
+        b_max cache the resident engine keeps on device, owned as a host
+        tier here): live-row loads, INT4 row packing under
+        ``kv_mode='int4'``, and slot spill/restore all route through it.
+        KV shares the weight store's ``SimLink`` so both pay the same
+        simulated interconnect."""
         struct, kinds = T.cache_struct(self.cfg, self.b_max, self.max_len)
-        self.kv: List[Dict[str, np.ndarray]] = []
-        self.kv_kinds: List[Dict[str, str]] = []
+        shapes, kk = [], []
         for u in self.units:
             sds = struct[u.group][u.q]
-            shapes = {n: (s.shape[1:] if u.group == "pat" else s.shape, s.dtype)
-                      for n, s in sds.items()}
-            self.kv.append({n: np.zeros(sh, dt) for n, (sh, dt) in
-                            shapes.items()})
-            self.kv_kinds.append(dict(kinds[u.group][u.q]))
+            shapes.append({n: ((s.shape[1:] if u.group == "pat"
+                                else s.shape), s.dtype)
+                           for n, s in sds.items()})
+            kk.append(dict(kinds[u.group][u.q]))
+        self.kv_kinds: List[Dict[str, str]] = kk
+        self.kvstore = TieredKVStore(
+            shapes, kk, b_max=self.b_max, max_len=self.max_len,
+            kv_mode=self.quant_policy.kv_mode, link=self.weights.link)
 
     # ---- jitted per-unit compute --------------------------------------------
     def _jit_units(self):
@@ -312,13 +343,22 @@ class OffloadedServingEngine(SlotEngineBase):
             if sig in self._decode_fns:
                 continue
             kinds = self.kv_kinds[j]
+            meta = self.kvstore.leaf_meta(j)
+            packed_kv = any(m.quant for m in meta.values())
             # MoE units run the mixer through apply_layer with a DENSE ffn
             # spec: the base params carry no dense "w_gate", so the ffn
             # half no-ops and the MoE ffn runs in _compute_moe (expert
             # loads overlap compute there).
             spec = (LayerSpec(u.spec.mixer) if u.moe else u.spec)
 
-            def decode_fn(w, x, cache, pos, angles, spec=spec, kinds=kinds):
+            def decode_fn(w, x, cache, pos, angles, spec=spec, kinds=kinds,
+                          meta=meta, packed_kv=packed_kv):
+                if packed_kv:
+                    # INT4 KV: the loaded slab is packed nibbles+scales;
+                    # the dequant traces HERE, inside the decode jit, so
+                    # XLA fuses it into the attention that consumes it
+                    # (the paper-§3.4 discipline applied to the cache)
+                    cache = device_cache(cache, meta)
                 ctx = L.Ctx(cfg=cfg, dist=dist, mode="decode", angles=angles,
                             pos=pos, batch_size=x.shape[0])
                 x, new_cache, _ = L.apply_layer(w, x, ctx, cache, spec)
@@ -422,52 +462,83 @@ class OffloadedServingEngine(SlotEngineBase):
     def release_weights(self, j: int, handle):
         del handle  # device arrays freed by GC; tier stores unaffected
 
+    def _live_extent(self, i: int):
+        """(live_batch, live_len) iteration ``i``'s KV_LOAD ships.
+        Computed from the atomic ``_decode_view`` snapshot — a warm tail
+        preload (``i`` one past the current step's base) adds one
+        position, the row the current step's save is writing, which the
+        save-before-load check guarantees has landed before the preload
+        executes — then MEMOIZED per iteration (first query wins, via
+        setdefault): ``kv_nbytes`` prices the payload at submit time on
+        the main thread and ``load_kv`` ships on a pool thread possibly
+        after the view refreshed, and the two must agree or the trace
+        would overstate what crossed (and bias the bandwidth EWMA).
+        The memo only ever stores a superset-or-exact extent, so a
+        later, smaller view never makes a priced load under-ship.  Any
+        thread (dict ops atomic under the GIL)."""
+        ext = self._extent_memo.get(i)
+        if ext is None:
+            base, lb, ll = self._decode_view
+            ext = self._extent_memo.setdefault(
+                i, (lb, min(ll + max(0, i - base), self.max_len)))
+        return ext
+
     def load_kv(self, i: int, j: int):
-        """KV_LOAD body: host cache -> device copies for unit j.  Runs on
-        a transfer-pool thread; pays the same simulated link floor as
-        weights.  Returns None during prefill (fresh caches are built by
-        the prefill compute) — warm cross-step preloads issued at the
-        tail of a prefill call are therefore poisoned and dropped by
-        ``_prefill_into_slot``."""
+        """KV_LOAD body: live host rows -> device slab for unit j (the
+        tiered store slices to the live extent, pays the shared link
+        floor on exactly those bytes, and zero-pads back to the slab
+        shape; packed nibbles under kv_mode='int4').  Runs on a
+        transfer-pool thread.  Returns None during prefill (fresh caches
+        are built by the prefill compute) — warm cross-step preloads
+        issued at the tail of a prefill call are therefore poisoned and
+        dropped by ``_prefill_into_slot``."""
         if self._phase != "decode":
             return None                       # prefill builds fresh caches
-        t0 = time.perf_counter()
-        dev = {n: jax.device_put(a) for n, a in self.kv[j].items()}
-        for a in dev.values():
-            a.block_until_ready()
-        # KV crosses the same simulated link as the weights
-        self.weights.sim_floor(sum(a.nbytes for a in self.kv[j].values()), t0)
-        return dev
+        lb, ll = self._live_extent(i)
+        return self.kvstore.load(j, lb, ll)
 
     def kv_nbytes(self, i: int, j: int) -> int:
-        """Bytes unit j's KV_LOAD moves over the link (the whole per-unit
-        decode cache; 0 during prefill, which builds fresh caches) —
-        recorded on trace events so KV transfer volume shows up in
-        ``Trace.report()`` alongside weight bytes."""
+        """Bytes unit j's KV_LOAD moves over the link — the LIVE rows
+        only (packed bytes under kv_mode='int4'), not the allocated
+        slab; 0 during prefill, which builds fresh caches.  Recorded on
+        trace events so KV transfer volume (and the live-row saving) is
+        assertable from ``Trace.report()``."""
         if self._phase != "decode":
             return 0
-        return sum(a.nbytes for a in self.kv[j].values())
+        lb, ll = self._live_extent(i)
+        return self.kvstore.load_nbytes(j, lb, ll)
+
+    def kv_extent(self, i: int, j: int):
+        """Live (batch, len) of iteration i's KV_LOAD payload — recorded
+        on the trace event (None during prefill)."""
+        if self._phase != "decode":
+            return None
+        return self._live_extent(i)
+
+    def kv_save_nbytes(self, i: int, j: int) -> int:
+        """Bytes unit j's KV_SAVE payload moves device->host: prefill
+        ships one slot's full rows, decode the live slots' new rows."""
+        if self._phase != "decode":
+            return self.kvstore.prefill_save_nbytes(j)
+        _, lb, _ = self._decode_view
+        return self.kvstore.save_nbytes(j, lb)
 
     def save_kv(self, i: int, j: int, new_kv):
         """KV_SAVE body: scatter freshly-written cache rows back into the
-        host arrays.  Transfer-pool thread; the scheduler guarantees the
-        save lands before iteration i+1's KV_LOAD of the same unit."""
+        tiered store (which quantizes them — once per row — under
+        kv_mode='int4').  Transfer-pool thread; the scheduler guarantees
+        the save lands before iteration i+1's KV_LOAD of the same
+        unit."""
         phase, payload, meta = new_kv
-        host_kv, kinds = self.kv[j], self.kv_kinds[j]
         if phase == "prefill":
             slot = meta
-            for name, leaf in payload.items():
-                host_kv[name][slot] = np.asarray(leaf[0])
+            self.kvstore.save_prefill(
+                j, slot, {n: np.asarray(l[0]) for n, l in payload.items()})
         else:
-            active, pos = meta
-            rows = {name: np.asarray(leaf) for name, leaf in payload.items()}
-            for name, kind in kinds.items():
-                if kind == "kv":
-                    for s in active:
-                        host_kv[name][s, pos[s]] = rows[name][s, 0]
-                else:
-                    for s in active:
-                        host_kv[name][s] = rows[name][s]
+            active, pos, live_b = meta
+            rows = {n: np.asarray(l[:live_b])
+                    for n, l in payload.items()}
+            self.kvstore.save_decode(j, rows, active, pos)
 
     def compute(self, i: int, j: int, x, weights, kv):
         """COMPUTE body (main thread): one unit's jitted forward.  MoE
@@ -481,7 +552,8 @@ class OffloadedServingEngine(SlotEngineBase):
         else:
             x, rows = self._decode_fns[sig](weights, x, kv, self._pos_dev,
                                             self._angles)
-            payload = ("decode", rows, (self._active, self._pos_snap))
+            payload = ("decode", rows,
+                       (self._active, self._pos_snap, self._decode_view[1]))
         if u.moe:
             x = self._compute_moe(u, x, weights)
         return x, payload
@@ -543,19 +615,53 @@ class OffloadedServingEngine(SlotEngineBase):
                          jnp.asarray(req.prompt)[None], "prefill")
         toks = self.sched.generate(self, lambda i: x0, 1)
         self.sched.drop_kv_preloads()
+        # skip the prefill's trace window for the bandwidth feedback: a
+        # full-prompt forward is far costlier per layer than a decode
+        # step, and folding it into the compute EWMA would resolve the
+        # window too shallow exactly while request load is ramping
+        self._trace_mark = len(self.trace.events())
         return int(toks[-1][0])
+
+    def _observe_trace(self):
+        """Feed the Trace delta since the last step into the adaptive
+        policy's bandwidth/compute EWMAs (main thread, between steps):
+        transfer bytes over merged transfer busy time is the MEASURED
+        link bandwidth — the feedback that replaces the budget's assumed
+        bw in the window sizing."""
+        observe = getattr(self.preload_policy, "observe", None)
+        if observe is None:
+            return
+        evs = self.trace.events()
+        new, self._trace_mark = evs[self._trace_mark:], len(evs)
+        if not new:
+            return
+        xfer = [e for e in new if e.kind in ("weight_load", "kv_load")]
+        comp = [e for e in new if e.kind == "compute"]
+        observe(
+            transfer_bytes=sum(e.nbytes for e in xfer),
+            transfer_busy_s=_merged_busy((e.t_start, e.t_end)
+                                         for e in xfer),
+            compute_busy_s=_merged_busy((e.t_start, e.t_end)
+                                        for e in comp),
+            layers=len(comp))
 
     def _resize_window(self, active: List[int]):
         """Consult the preload policy with the LIVE pressure snapshot
         and re-size the scheduler's window between steps (main thread).
         ``StaticDepth`` always answers the same, so the pre-spec engines
         are reproduced bit for bit; ``AdaptiveDepth`` deepens under
-        light load and shrinks as KV/spill pressure ramps."""
+        light load and shrinks as KV/spill pressure ramps — pricing the
+        per-layer KV term at the store's EXACT live payload and the
+        link at the measured-bandwidth EWMA."""
         if isinstance(self.preload_policy, StaticDepth):
             return
-        p = Pressure(active=len(active),
-                     max_pos=int(max(self.pos[s] for s in active)),
-                     spills=len(self._spill_lru))
+        self._observe_trace()
+        lb = max(active) + 1
+        max_pos = int(max(self.pos[s] for s in active))
+        p = Pressure(active=len(active), max_pos=max_pos,
+                     spills=len(self._spill_lru),
+                     kv_layer_bytes=self.kvstore.max_live_load_nbytes(
+                         lb, max(1, max_pos)))
         d = self.sched.set_depth(self.preload_policy.depth(p))
         if d != self.stats["preload_depth"]:
             self.stats["depth_resizes"] += 1
@@ -569,6 +675,18 @@ class OffloadedServingEngine(SlotEngineBase):
         self._phase = "decode"
         self._active = list(active)
         self._pos_snap = self.pos.copy()
+        # atomic live view for this step's (and its tail preloads') KV
+        # extents: scheduler iteration base + occupied slots + written
+        # positions.  live_len = max(pos) covers every row attention can
+        # read below the write position; the row AT pos is written by
+        # this step's compute before it is attended.
+        base = self.sched._iter0
+        self._decode_view = (base, max(active) + 1,
+                             max(1, int(max(self.pos[s] for s in active))))
+        # prune dead extent memos (iterations before this step can no
+        # longer have loads in flight; main thread, GIL-atomic dels)
+        for k in [k for k in self._extent_memo if k < base]:
+            del self._extent_memo[k]
         self._pos_dev = jnp.asarray(self.pos)
         self._angles = T._angles(self.cfg, self._pos_dev[:, None])
         x0 = self._embed(self.resident["embed"],
@@ -586,23 +704,21 @@ class OffloadedServingEngine(SlotEngineBase):
         return slot
 
     def _offload_write(self, ns: str, slot: int):
-        """Spill: row copies out of the shared decode cache under
+        """Spill: row copies out of the tiered KV store under
         ``{ns}/{unit}/{name}`` keys so the slot can be reused while the
-        request is parked.  Transfer-pool thread when async."""
-        for j, host_kv in enumerate(self.kv):
-            for name, arr in host_kv.items():
-                self.host.put(f"{ns}/{j}/{name}", arr[slot].copy())
+        request is parked (packed rows spill packed — lossless, ~3x
+        below the bf16 rows under kv_mode='int4').  Transfer-pool
+        thread when async."""
+        self.kvstore.spill(self.host, ns, slot)
 
     def restore_slot(self, slot: int, ns: str):
         """Bring a parked request's rows back into a slot (main thread).
-        Mutates host KV outside the pipeline, so outstanding saves are
-        drained first and any warm KV preloads (now stale device copies)
-        are dropped."""
+        Mutates the store's host rows outside the pipeline, so
+        outstanding saves are drained first and any warm KV preloads
+        (now stale device copies) are dropped."""
         self.sched.drain_saves()
         self.sched.drop_kv_preloads()
-        for j, host_kv in enumerate(self.kv):
-            for name, arr in host_kv.items():
-                arr[slot] = self.host.get(f"{ns}/{j}/{name}")
+        self.kvstore.restore(self.host, ns, slot)
 
     # ---- lifecycle / introspection ------------------------------------------
     def pipeline_report(self):

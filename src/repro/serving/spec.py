@@ -35,8 +35,12 @@ Two policy seams live behind the plan:
     actually used, retained spills) via ``memory_model.live_depth`` —
     the ROADMAP "depth is static per engine" gap.
   * ``QuantPolicy`` — what crosses the offload link quantized.
-    ``WeightsInt4`` is today's packed-weight streaming; the seam is
-    structured so INT4 KV streaming (``kv_mode``) slots in next.
+    ``weight_mode`` drives packed-weight streaming (``WeightsInt4``);
+    ``kv_mode`` drives the tiered KV store (``core.kvstore``):
+    ``"fp32"`` streams the cache at compute precision (bit-exact with
+    the pre-store engines), ``"int4"`` stores and streams cache rows
+    group-quantized (packed nibbles + scales, dequant fused into the
+    consuming jit).
 
 The CLI speaks the same API: ``CLI_FLAGS`` is the single flag<->field
 table ``launch.serve`` generates its argparse from, and
@@ -47,6 +51,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
@@ -59,13 +65,38 @@ __all__ = [
     "create_engine", "build_lm", "offload_capability",
     "PreloadPolicy", "StaticDepth", "AdaptiveDepth", "Pressure",
     "QuantPolicy", "WeightsInt4", "quant_policy_for",
+    "warn_deprecated_once", "reset_deprecation_warnings",
     "CLI_FLAGS", "FlagSpec", "NO_FLAG_FIELDS", "WORKLOAD_FLAGS",
     "add_spec_args", "spec_from_args",
 ]
 
 QUANT_MODES = (None, "int4")
+KV_MODES = (None, "fp32", "int4")       # None = auto (resolves to fp32)
 DEPTH_POLICIES = ("static", "adaptive")
 PLACEMENTS = ("auto", "device", "host", "disk")
+
+
+# ---------------------------------------------------------------------------
+# deprecation plumbing: the legacy-kwarg shims warn once per construction
+# site per process, not per call (a serving loop constructing shimmed
+# engines used to emit thousands of identical warnings)
+# ---------------------------------------------------------------------------
+
+_WARNED_DEPRECATIONS: set = set()
+
+
+def warn_deprecated_once(key: str, message: str, stacklevel: int = 3):
+    """Emit ``DeprecationWarning`` for ``key`` at most once per process.
+    Tests that assert the warning fires call
+    ``reset_deprecation_warnings()`` first."""
+    if key in _WARNED_DEPRECATIONS:
+        return
+    _WARNED_DEPRECATIONS.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_deprecation_warnings():
+    _WARNED_DEPRECATIONS.clear()
 
 
 class SpecError(ValueError):
@@ -163,6 +194,7 @@ class EngineSpec:
     depth_policy: str = "static"        # static|adaptive
     # -- quant -------------------------------------------------------------
     quant: Optional[str] = None         # None|int4
+    kv_mode: Optional[str] = None       # None(auto->fp32)|fp32|int4
     fused_int4: Optional[bool] = None   # None: §3.5 batch<16 rule
     # -- spill / io / sim --------------------------------------------------
     spill_cap: int = 32
@@ -198,6 +230,8 @@ class EngineSpec:
             bad(f"pipeline {self.pipeline!r} not in {PIPELINE_MODES}")
         if self.quant not in QUANT_MODES:
             bad(f"quant {self.quant!r} not in {QUANT_MODES}")
+        if self.kv_mode not in KV_MODES:
+            bad(f"kv_mode {self.kv_mode!r} not in {KV_MODES}")
         if self.depth_policy not in DEPTH_POLICIES:
             bad(f"depth_policy {self.depth_policy!r} not in "
                 f"{DEPTH_POLICIES}")
@@ -218,7 +252,7 @@ class EngineSpec:
         if self.sim_bw is not None and self.sim_bw <= 0:
             bad(f"sim_bw must be > 0, got {self.sim_bw}")
         if self.offload is False:
-            for name in ("quant", "sim_bw", "depth", "warm"):
+            for name in ("quant", "kv_mode", "sim_bw", "depth", "warm"):
                 if getattr(self, name) is not None:
                     bad(f"{name} only applies to the offloaded engine "
                         f"(offload=False pins the resident ServingEngine)")
@@ -308,9 +342,11 @@ class EngineSpec:
         # ---- offload-only fields ----
         if engine == "resident":
             quant, warm, depth, depth_policy = None, False, 0, "static"
+            kv_mode = None
             fused = True
             sim_bw = None
             for name, was in (("quant", self.quant),
+                              ("kv_mode", self.kv_mode),
                               ("sim_bw", self.sim_bw),
                               ("warm", self.warm),
                               ("depth", self.depth)):
@@ -324,6 +360,14 @@ class EngineSpec:
             prov.setdefault("depth", "n/a: resident engine has no window")
         else:
             quant = self.quant
+            if self.kv_mode is None:
+                kv_mode = "fp32"
+                prov["kv_mode"] = ("auto: cache streams at compute "
+                                   "precision (pass --kv-mode int4 for "
+                                   "packed KV rows)")
+            else:
+                kv_mode = self.kv_mode
+                prov["kv_mode"] = f"explicit: kv_mode={kv_mode!r}"
             if self.warm is None:
                 warm = self.pipeline == "performance"
                 prov["warm"] = (
@@ -346,7 +390,8 @@ class EngineSpec:
             else:
                 d, why = serving_depth_decision(
                     cfg, b_max=self.b_max, max_len=self.max_len,
-                    quant=quant, spill_cap=self.spill_cap,
+                    quant=quant, kv_mode=kv_mode,
+                    spill_cap=self.spill_cap,
                     placement=placement, budget=budget)
                 depth = d
                 prov["depth"] = f"auto: {why}"
@@ -386,7 +431,7 @@ class EngineSpec:
             arch=self.arch, scaled=self.scaled, engine=engine,
             b_max=self.b_max, max_len=self.max_len, seed=self.seed,
             placement=placement, pipeline=self.pipeline, quant=quant,
-            fused_int4=fused, warm=warm, depth=depth,
+            kv_mode=kv_mode, fused_int4=fused, warm=warm, depth=depth,
             depth_policy=depth_policy, spill_cap=self.spill_cap,
             cache_on=self.cache_on, disk_root=disk_root,
             block_bytes=block_bytes, n_io_threads=self.n_io_threads,
@@ -417,6 +462,7 @@ class ResolvedPlan:
     placement: str               # device|host|disk
     pipeline: str
     quant: Optional[str]
+    kv_mode: Optional[str]       # fp32|int4 streamed KV; None on resident
     fused_int4: bool
     warm: bool
     depth: int                   # 0 on the resident engine
@@ -452,7 +498,8 @@ class ResolvedPlan:
                 f"engine={self.engine} placement={self.placement} "
                 f"pipeline={self.pipeline} warm={self.warm} "
                 f"depth={self.depth}({self.depth_policy}) "
-                f"quant={self.quant or 'fp32'} b_max={self.b_max} "
+                f"quant={self.quant or 'fp32'} "
+                f"kv={self.kv_mode or 'n/a'} b_max={self.b_max} "
                 f"max_len={self.max_len}")
 
 
@@ -468,6 +515,10 @@ class Pressure:
     active: int                  # requests in flight (occupied slots)
     max_pos: int                 # longest KV position actually written
     spills: int = 0              # slot-spill namespaces retained on host
+    # exact per-layer live KV_LOAD bytes (TieredKVStore.load_nbytes at
+    # the live extent); None falls back to the modeled slab — with it the
+    # adaptive window's KV pricing is measured, not modeled
+    kv_layer_bytes: Optional[int] = None
 
 
 class PreloadPolicy:
@@ -508,43 +559,107 @@ class AdaptiveDepth(PreloadPolicy):
     requests and positions ramp (or spills pile onto the host) the same
     §3.5 capacity model shrinks it back, bottoming out at the paper's
     depth-1 pipeline.  The transfer pool is sized once for
-    ``depth_cap``, so deepening never needs new threads."""
+    ``depth_cap``, so deepening never needs new threads.
+
+    Measured-bandwidth feedback (closes the ROADMAP loop "feed measured
+    link bandwidth into the policy"): the engine calls ``observe()``
+    between decode steps with the step's Trace deltas — transfer bytes,
+    merged transfer busy seconds, compute busy seconds, layer count.
+    The policy EWMAs the observed link bandwidth and per-layer compute
+    time; ``depth()`` then asks for only as much window as the OBSERVED
+    link needs to hide behind compute (``ceil(t_link_layer /
+    t_compute_layer)``), capped by the memory fit.  A link that slows
+    mid-run (contention, thermal, page-cache miss streaks) deepens the
+    window; a link faster than budgeted stops wasting residency on
+    preloads compute never waits for.  Before any observation the policy
+    resolves exactly as the memory model alone (the pre-feedback
+    behavior)."""
 
     def __init__(self, cfg: ModelConfig, *, b_max: int, max_len: int,
-                 quant: Optional[str] = None, placement: str = "host",
-                 budget: Optional[MemoryBudget] = None, depth_cap: int = 8):
+                 quant: Optional[str] = None,
+                 kv_mode: Optional[str] = None, placement: str = "host",
+                 budget: Optional[MemoryBudget] = None, depth_cap: int = 8,
+                 ewma_alpha: float = 0.5):
         from repro.core.memory_model import host_pinned_bytes
         self.cfg = cfg
         self.b_max = b_max
         self.max_len = max_len
         self.quant = quant
+        self.kv_mode = kv_mode
         self.placement = placement
         self.budget = budget or MemoryBudget()
         self.depth_cap = max(1, int(depth_cap))
+        self.ewma_alpha = float(ewma_alpha)
+        # measured state (None until the first observation)
+        self.bw_ewma: Optional[float] = None          # link bytes/s
+        self.compute_ewma: Optional[float] = None     # s per layer
+        # mean streamed bytes per layer (weights); the engine sets it at
+        # build time from the real store manifests via set_link_profile
+        self.layer_link_bytes: Optional[int] = None
         # the host-guard terms don't depend on live load — precompute
         # once; depth() runs on the main thread between decode steps
         self._host_fixed, self._per_spill = host_pinned_bytes(
             cfg, b_max=b_max, max_len=max_len, quant=quant,
-            placement=placement)
+            kv_mode=kv_mode, placement=placement)
 
     def max_depth(self) -> int:
         return self.depth_cap
 
+    def set_link_profile(self, layer_link_bytes: int):
+        """Mean streamed weight bytes per schedulable layer (engine
+        build time, from the tiered store's manifests — packed bytes
+        under INT4)."""
+        self.layer_link_bytes = int(layer_link_bytes)
+
+    def observe(self, *, transfer_bytes: int, transfer_busy_s: float,
+                compute_busy_s: float, layers: int):
+        """Fold one decode step's Trace deltas into the bandwidth /
+        compute EWMAs (main thread, between steps; cheap)."""
+        a = self.ewma_alpha
+        if transfer_busy_s > 0 and transfer_bytes > 0:
+            bw = transfer_bytes / transfer_busy_s
+            self.bw_ewma = bw if self.bw_ewma is None else \
+                a * bw + (1 - a) * self.bw_ewma
+        if layers > 0 and compute_busy_s > 0:
+            c = compute_busy_s / layers
+            self.compute_ewma = c if self.compute_ewma is None else \
+                a * c + (1 - a) * self.compute_ewma
+
+    def _bw_depth(self, pressure: Pressure) -> Optional[int]:
+        """Window the MEASURED link needs: with D transfers in flight the
+        steady-state per-layer wait is ~t_link/D, hidden once D >=
+        t_link / t_compute.  None until both EWMAs and the link profile
+        exist."""
+        if not (self.bw_ewma and self.compute_ewma
+                and self.layer_link_bytes):
+            return None
+        per_layer = self.layer_link_bytes + (pressure.kv_layer_bytes or 0)
+        t_link = per_layer / self.bw_ewma
+        return max(1, math.ceil(t_link / max(1e-12, self.compute_ewma)))
+
     def depth(self, pressure: Pressure) -> int:
         from repro.core.memory_model import live_depth
-        return live_depth(self.cfg, active=pressure.active,
-                          pos_used=pressure.max_pos, b_max=self.b_max,
-                          max_len=self.max_len, quant=self.quant,
-                          spills=pressure.spills, placement=self.placement,
-                          device_budget=self.budget.device,
-                          host_budget=self.budget.host,
-                          depth_cap=self.depth_cap,
-                          host_fixed=self._host_fixed,
-                          per_spill=self._per_spill)
+        d_mem = live_depth(self.cfg, active=pressure.active,
+                           pos_used=pressure.max_pos, b_max=self.b_max,
+                           max_len=self.max_len, quant=self.quant,
+                           kv_mode=self.kv_mode, spills=pressure.spills,
+                           placement=self.placement,
+                           device_budget=self.budget.device,
+                           host_budget=self.budget.host,
+                           depth_cap=self.depth_cap,
+                           host_fixed=self._host_fixed,
+                           per_spill=self._per_spill,
+                           kv_layer_bytes=pressure.kv_layer_bytes)
+        d_bw = self._bw_depth(pressure)
+        if d_bw is None:
+            return d_mem
+        return max(1, min(d_mem, d_bw))
 
     def __repr__(self):
         return (f"AdaptiveDepth(cap={self.depth_cap}, "
-                f"quant={self.quant or 'fp32'})")
+                f"quant={self.quant or 'fp32'}, "
+                f"kv={self.kv_mode or 'fp32'}, "
+                f"bw={'%.2e' % self.bw_ewma if self.bw_ewma else 'unmeasured'})")
 
 
 def preload_policy_for(plan: ResolvedPlan,
@@ -560,6 +675,7 @@ def preload_policy_for(plan: ResolvedPlan,
                                   host=plan.host_budget)
         return AdaptiveDepth(cfg or plan.model_config(), b_max=plan.b_max,
                              max_len=plan.max_len, quant=plan.quant,
+                             kv_mode=plan.kv_mode,
                              placement=plan.placement, budget=budget)
     return StaticDepth(max(1, plan.depth))
 
@@ -572,14 +688,19 @@ def preload_policy_for(plan: ResolvedPlan,
 class QuantPolicy:
     """What crosses the offload link quantized.  ``weight_mode`` feeds
     ``TieredWeightStore`` (packing + dequant-on-load); ``prepare_unit``
-    packs a unit's tensors host-side at build time; ``kv_mode`` is the
-    reserved seam for INT4 KV streaming (ROADMAP: "INT4 KV streaming is
-    the next byte win") — None today, so engines stream the cache at
-    compute precision."""
+    packs a unit's tensors host-side at build time; ``kv_mode`` feeds
+    ``core.kvstore.TieredKVStore`` — ``"fp32"`` streams the cache at
+    compute precision (bit-exact with the pre-store engines), ``"int4"``
+    stores/streams cache rows group-quantized (packed nibbles + scales,
+    dequant fused into the consuming jit; the PR-4 seam, now live)."""
 
     name = "none"
     weight_mode: Optional[str] = None
-    kv_mode: Optional[str] = None
+
+    def __init__(self, kv_mode: Optional[str] = "fp32"):
+        self.kv_mode = kv_mode or "fp32"
+        if self.kv_mode not in ("fp32", "int4"):
+            raise SpecError(f"kv_mode {kv_mode!r} not in {KV_MODES}")
 
     def prepare_unit(self, tensors: Dict[str, Any]) -> Dict[str, Any]:
         return tensors
@@ -598,11 +719,12 @@ class WeightsInt4(QuantPolicy):
         return quantize_unit(tensors)
 
 
-def quant_policy_for(quant: Optional[str]) -> QuantPolicy:
+def quant_policy_for(quant: Optional[str],
+                     kv_mode: Optional[str] = "fp32") -> QuantPolicy:
     if quant == "int4":
-        return WeightsInt4()
+        return WeightsInt4(kv_mode)
     if quant is None:
-        return QuantPolicy()
+        return QuantPolicy(kv_mode)
     raise SpecError(f"quant {quant!r} not in {QUANT_MODES}")
 
 
@@ -628,9 +750,16 @@ def create_engine(plan: "ResolvedPlan | EngineSpec"):
 def build_lm(plan: "ResolvedPlan | EngineSpec"):
     """Batch-generation twin of ``create_engine``: a ``PipelinedLM``
     configured from the plan (``b_max`` is its batch; the resident case
-    maps to placement='device')."""
+    maps to placement='device').  ``kv_mode='int4'`` is rejected rather
+    than silently ignored: PipelinedLM still ships whole-slab fp32 KV
+    (ROADMAP gap) and a plan's fields must be obeyed, not dropped."""
     if isinstance(plan, EngineSpec):
         plan = plan.resolve()
+    if plan.kv_mode == "int4":
+        raise SpecError(
+            "kv_mode='int4' is a serving-engine feature (TieredKVStore); "
+            "PipelinedLM does not stream quantized KV yet — drop kv_mode "
+            "or use create_engine(plan)")
     from repro.core.engine import PipelinedLM
     return PipelinedLM(plan)
 
@@ -682,6 +811,12 @@ CLI_FLAGS: Tuple[FlagSpec, ...] = (
              help="stream weights as packed INT4 (--offload only); ~1/4 "
                   "the link bytes, dequant overlapped on the transfer "
                   "pool"),
+    FlagSpec("--kv-mode", "kv_mode", choices=("fp32", "int4"),
+             help="KV-cache streaming precision (--offload only): fp32 "
+                  "ships cache rows at compute precision; int4 stores "
+                  "and streams them group-quantized (~1/3 the bf16 "
+                  "bytes after group scales, dequant fused into decode "
+                  "compute — see docs/TUNING.md)"),
     FlagSpec("--no-warm", "warm", kind="false",
              help="disable cross-step preloading (cold per-step "
                   "pipeline, the pre-warm baseline)"),

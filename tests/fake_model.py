@@ -20,6 +20,13 @@ from repro.core.tasks import Task, TaskType
 COSTS = {TaskType.WEIGHT_LOAD: 10.0, TaskType.COMPUTE: 4.0,
          TaskType.KV_LOAD: 2.0, TaskType.KV_SAVE: 3.0}
 
+# fixed per-task payload sizes the fake model reports through the
+# scheduler's byte-accounting hooks — per-kind byte totals on the trace
+# are then exactly count * constant, assertable in the virtual tests
+NBYTES = {TaskType.WEIGHT_LOAD: 1000, TaskType.KV_LOAD: 40,
+          TaskType.KV_SAVE: 8}
+KV_EXTENT = (2, 7)                 # fake live (batch, len) on KV loads
+
 
 def cost_fn(task):
     return COSTS[task.kind]
@@ -40,6 +47,9 @@ class FakeModel:
         self.calls.append(("w", -1, j))
         return f"w{j}"
 
+    def weight_nbytes(self, j):
+        return NBYTES[TaskType.WEIGHT_LOAD]
+
     def release_weights(self, j, handle):
         self.calls.append(("rel", -1, j))
 
@@ -47,8 +57,17 @@ class FakeModel:
         self.calls.append(("kv_load", i, j))
         return f"kv{i},{j}"
 
+    def kv_nbytes(self, i, j):
+        return NBYTES[TaskType.KV_LOAD]
+
+    def kv_extent(self, i, j):
+        return KV_EXTENT
+
     def save_kv(self, i, j, kv):
         self.calls.append(("kv_save", i, j))
+
+    def kv_save_nbytes(self, i, j):
+        return NBYTES[TaskType.KV_SAVE]
 
     def compute(self, i, j, x, w, kv):
         assert w == f"w{j}", (w, j)

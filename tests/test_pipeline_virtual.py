@@ -496,6 +496,26 @@ def test_moe_expert_loads_overlap_unit_compute():
             assert c.t_start <= w.t_start <= c.t_end, (j, e)
 
 
+def test_trace_report_accounts_per_kind_bytes_and_extents():
+    """Per-kind byte totals on the trace are exact: every task kind's
+    reported bytes equal count x the model's per-payload constant —
+    including KV_SAVE, which used to go unaccounted (the quantized-KV
+    accounting satellite) — and KV_LOAD events carry the live extent."""
+    from fake_model import KV_EXTENT, NBYTES
+    model, trace, _ = run_virtual("performance", n_layers=3, iters=3)
+    rep = trace.report()
+    for kind in (TaskType.WEIGHT_LOAD, TaskType.KV_LOAD, TaskType.KV_SAVE):
+        pk = rep["per_kind"][kind.value]
+        assert pk["count"] > 0
+        assert pk["bytes"] == pk["count"] * NBYTES[kind], kind
+        # measured per-kind bandwidth is derivable from the same trace
+        assert pk["bw_Bps"] == pytest.approx(pk["bytes"] / pk["busy_s"])
+    kv_loads = [e for e in trace.events() if e.kind == "kv_load"]
+    assert kv_loads and all(e.extent == KV_EXTENT for e in kv_loads)
+    weight = [e for e in trace.events() if e.kind == "weight_load"]
+    assert all(e.extent is None for e in weight)
+
+
 def test_trace_report_accounts_busy_time():
     model, trace, _ = run_virtual("sequential", n_layers=2, iters=1)
     rep = trace.report()

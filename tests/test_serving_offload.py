@@ -172,6 +172,141 @@ def test_int4_quant_changes_tokens_vs_fp16():
 
 
 # ---------------------------------------------------------------------------
+# Tiered KV: live-row slabs + INT4 KV streaming
+# ---------------------------------------------------------------------------
+
+
+def test_kv_load_ships_live_rows_not_the_slab():
+    """Live-row slicing on the real engine: with ONE short request in a
+    4-slot engine, every decode KV_LOAD's traced bytes sit strictly
+    below the allocated (b_max, max_len) slab, the live extent is
+    recorded on the event, and fp32 tokens still match the resident
+    engine bit for bit (the padding is value-invisible)."""
+    cfg = _cfg()
+    prompt = _prompts(cfg, 1)[0]
+    ref = ServingEngine(cfg, b_max=4, max_len=64)
+    ref.submit(Request(rid=0, prompt=prompt.copy(), max_new=5))
+    want = ref.run()[0].out
+
+    eng = OffloadedServingEngine(cfg, b_max=4, max_len=64,
+                                 placement="host", pipeline="performance")
+    eng.submit(Request(rid=0, prompt=prompt.copy(), max_new=5))
+    got = eng.run()[0].out
+    assert got == want
+    kv_loads = [e for e in eng.trace.events()
+                if e.kind == "kv_load" and e.nbytes]
+    assert kv_loads
+    slab = max(eng.kvstore.slab_nbytes(j) for j in range(len(eng.units)))
+    assert all(e.nbytes < slab for e in kv_loads)
+    # one active slot, short positions: extents are (1, pos)-shaped
+    assert all(e.extent is not None and e.extent[0] == 1
+               for e in kv_loads)
+    assert max(e.extent[1] for e in kv_loads) < 64
+    # and the whole traced KV volume sits far below slab * loads
+    rep = eng.pipeline_report()
+    assert rep["per_kind"]["kv_load"]["bytes"] < \
+        0.5 * slab * rep["per_kind"]["kv_load"]["count"]
+    assert rep["per_kind"]["kv_save"]["bytes"] > 0     # saves accounted
+    eng.shutdown()
+
+
+@pytest.fixture(scope="module")
+def kv_roundtrip_tokens():
+    """Resident reference whose newly-written cache rows roundtrip
+    through the store's exact quantize->dequantize (fp32 weights)."""
+    from repro.serving import KVRoundtripServingEngine
+    cfg = _cfg()
+    return _serve(KVRoundtripServingEngine(cfg, b_max=2, max_len=64),
+                  _prompts(cfg))
+
+
+@pytest.fixture(scope="module")
+def kv_int4_roundtrip_tokens():
+    """Same reference with INT4-roundtripped weights on top — the
+    weights-int4 x kv-int4 corner."""
+    from repro.serving import KVRoundtripServingEngine
+    cfg = _cfg()
+    ref = KVRoundtripServingEngine(cfg, b_max=2, max_len=64)
+    ref.params = quant_roundtrip_params(cfg, ref.params)
+    return _serve(ref, _prompts(cfg))
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_kv_int4_decode_parity(kv_roundtrip_tokens, depth):
+    """Acceptance criterion: kv_mode='int4' decodes token-identical to
+    the KV-roundtripped resident reference at every preload depth
+    (fp32 weights)."""
+    cfg = _cfg()
+    eng = _offload_spec(cfg, b_max=2, max_len=64, pipeline="performance",
+                        kv_mode="int4", depth=depth)
+    assert eng.kvstore.kv_mode == "int4"
+    assert _serve(eng, _prompts(cfg)) == kv_roundtrip_tokens
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_kv_int4_weights_int4_decode_parity(kv_int4_roundtrip_tokens,
+                                            depth):
+    """Acceptance criterion: the full INT4 corner — packed weights AND
+    packed KV — still matches its roundtripped resident reference at
+    depth {1, 2}."""
+    cfg = _cfg()
+    eng = _offload_spec(cfg, b_max=2, max_len=64, pipeline="performance",
+                        quant="int4", kv_mode="int4", depth=depth)
+    assert _serve(eng, _prompts(cfg)) == kv_int4_roundtrip_tokens
+
+
+def test_kv_int4_actually_quantizes(resident_tokens, kv_roundtrip_tokens):
+    """Sanity: INT4 KV is a real precision change (the reference differs
+    from the plain resident tokens), so the parity above is not
+    vacuous; and the traced KV bytes shrink accordingly."""
+    assert kv_roundtrip_tokens != resident_tokens
+    cfg = _cfg()
+    eng4 = _offload_spec(cfg, b_max=2, max_len=64, kv_mode="int4")
+    fp = _offload_spec(cfg, b_max=2, max_len=64)
+    assert eng4.kvstore.slab_nbytes(0) < 0.5 * fp.kvstore.slab_nbytes(0)
+    fp.shutdown()
+    eng4.shutdown()
+
+
+def test_kv_int4_spill_restore_resume_parity():
+    """Preempt/resume under INT4 KV: packed rows spill and restore
+    losslessly, so the interrupted stream equals the uninterrupted
+    one."""
+    from repro.serving import KVRoundtripServingEngine
+    cfg = _cfg()
+    prompt = _prompts(cfg, 1)[0]
+    ref = KVRoundtripServingEngine(cfg, b_max=2, max_len=64)
+    ref.submit(Request(rid=0, prompt=prompt.copy(), max_new=8))
+    uninterrupted = ref.run()[0].out
+
+    eng = _offload_spec(cfg, b_max=2, max_len=64, kv_mode="int4")
+    eng.submit(Request(rid=0, prompt=prompt.copy(), max_new=8))
+    eng._admit()
+    done = []
+    for _ in range(3):
+        eng._decode_step(done)
+    assert not done
+    eng.preempt_slot(0)
+    done = eng.run()
+    eng.shutdown()
+    assert done[0].out == uninterrupted
+    assert eng.stats["slot_restores"] == 1
+
+
+def test_kv_mode_moe_decode_parity():
+    """INT4 KV composes with MoE routed-union serving (every mixer kind
+    the offloaded engine carries streams through the same store)."""
+    from repro.serving import KVRoundtripServingEngine
+    cfg = _moe_cfg()
+    prompts = _prompts(cfg, 3)
+    ref = _serve(KVRoundtripServingEngine(cfg, b_max=2, max_len=48),
+                 prompts, max_new=4)
+    eng = _offload_spec(cfg, b_max=2, max_len=48, pipeline="performance",
+                        kv_mode="int4")
+    assert _serve(eng, prompts, max_new=4) == ref
+
+
+# ---------------------------------------------------------------------------
 # MoE routed-union serving
 # ---------------------------------------------------------------------------
 

@@ -147,11 +147,13 @@ def test_cli_flags_build_the_spec():
 
 
 def test_legacy_offload_kwargs_shim_identical_plan():
+    from repro.serving.spec import reset_deprecation_warnings
     cfg = _cfg()
     spec = EngineSpec(arch=cfg.name, cfg=cfg, offload=True, b_max=2,
                       max_len=64, placement="host", quant="int4", depth=2,
                       fused_int4=True)
     eng = create_engine(spec)
+    reset_deprecation_warnings()
     with pytest.warns(DeprecationWarning):
         leg = OffloadedServingEngine(cfg, b_max=2, max_len=64,
                                      placement="host", quant="int4",
@@ -162,9 +164,28 @@ def test_legacy_offload_kwargs_shim_identical_plan():
     leg.shutdown()
 
 
+def test_legacy_shim_warns_once_per_process():
+    """The legacy-kwarg DeprecationWarning is deduped: a serving loop
+    constructing shimmed engines warns on the FIRST construction only
+    (reset_deprecation_warnings reopens it, for tests)."""
+    import warnings as w
+    from repro.serving.spec import reset_deprecation_warnings
+    cfg = _cfg()
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        OffloadedServingEngine(cfg, b_max=1, max_len=32,
+                               placement="host").shutdown()
+    with w.catch_warnings():
+        w.simplefilter("error", DeprecationWarning)
+        OffloadedServingEngine(cfg, b_max=1, max_len=32,
+                               placement="host").shutdown()
+
+
 def test_legacy_pipelined_lm_shim_identical_plan():
     from repro.core.engine import PipelinedLM
+    from repro.serving.spec import reset_deprecation_warnings
     cfg = _cfg()
+    reset_deprecation_warnings()
     with pytest.warns(DeprecationWarning):
         leg = PipelinedLM(cfg, batch=2, max_len=32, placement="host")
     spec = EngineSpec(arch=cfg.name, cfg=cfg, offload=True,
@@ -187,7 +208,9 @@ def test_plan_construction_rejects_stray_kwargs():
 
 
 def test_unsupported_model_typed_error():
+    from repro.serving.spec import reset_deprecation_warnings
     whisper = scaled_down(get_config("whisper-base"))
+    reset_deprecation_warnings()
     with pytest.warns(DeprecationWarning):
         with pytest.raises(UnsupportedModelError) as ei:
             OffloadedServingEngine(whisper, b_max=1, max_len=32)
@@ -319,16 +342,31 @@ def test_preload_policy_for_uses_plan_budget():
     assert pol.budget.device == 123 << 20 and pol.budget.host == 7 << 30
 
 
+def test_build_lm_rejects_int4_kv():
+    """PipelinedLM doesn't stream quantized KV (ROADMAP gap): a
+    kv_mode='int4' plan must be rejected, not silently downgraded —
+    plans are obeyed or refused."""
+    spec = _spec(offload=True, b_max=1, max_len=32, kv_mode="int4")
+    with pytest.raises(SpecError, match="kv_mode"):
+        build_lm(spec)
+    # the default (auto -> fp32) builds fine
+    build_lm(_spec(offload=True, b_max=1, max_len=32))
+
+
 def test_quant_policy_seam():
     import numpy as np
     none = quant_policy_for(None)
     int4 = quant_policy_for("int4")
-    assert none.weight_mode is None and none.kv_mode is None
-    assert int4.weight_mode == "int4" and int4.kv_mode is None
+    assert none.weight_mode is None and none.kv_mode == "fp32"
+    assert int4.weight_mode == "int4" and int4.kv_mode == "fp32"
     t = {"w": np.zeros((128, 64), np.float32)}
     assert none.prepare_unit(t) is t
     packed = int4.prepare_unit(t)
     assert "w#q" in packed and "w#s" in packed
+    # the kv_mode seam is live: every weight mode composes with INT4 KV
+    assert quant_policy_for(None, "int4").kv_mode == "int4"
+    assert quant_policy_for("int4", "int4").weight_mode == "int4"
+    assert quant_policy_for("int4", None).kv_mode == "fp32"   # auto
 
 
 # ---------------------------------------------------------------------------
