@@ -16,6 +16,7 @@ validated directionally against its claims in EXPERIMENTS.md.
   serving_offload    — continuous-batching decode: seq/cold/warm/warm+INT4
   serving_offload_depth — warm preload-depth sweep {1,2,3} x {fp32,int4}
   serving_kv_quant   — KV streaming sweep: kv_mode {fp32,int4} x depth {1,2}
+  pipelined_kv_quant — batch-generation KV streaming: kv_mode on PipelinedLM
   kernel_int4        — fused INT4 kernel vs dequant-then-matmul (§3.4)
   roofline           — aggregate dry-run roofline table (ours)
 """
@@ -29,9 +30,10 @@ import numpy as np
 
 ROWS: list[str] = []
 
-# --steps N overrides serving_kv_quant's steady-state decode length
-# (CI smoke runs `serving_kv_quant --steps 2` so the scenario can't rot
-# without paying the full sweep); None = the scenario's default
+# --steps N overrides the KV-streaming scenarios' decode length (CI
+# smoke runs `serving_kv_quant --steps 2` and `pipelined_kv_quant
+# --steps 2` so they can't rot without paying the full sweep); None =
+# the scenario's default
 STEPS: "int | None" = None
 
 
@@ -377,10 +379,13 @@ def serving_kv_quant():
     x depth {1, 2} on the sim link, weights pinned INT4 so the step is
     KV-dominated — the regime the PR-3 depth sweep exposed ("INT4 is
     KV-dominated on the sim link: quantized cache is the next byte
-    win").  All arms serve the same warm continuous-batching workload;
-    live-row slicing is on everywhere (it is the store's only load
-    path), so the fp32 rows already ship live rows, and the int4 rows
-    additionally pack them ~3.2x (bf16 -> nibbles + group scales).  The
+    win").  All arms serve the same warm continuous-batching workload
+    with prompt_len=64 of the 96-position extent live, so the KV rows
+    (not the packed weights) carry most of the link bytes and the
+    kv_mode delta is the dominant term at depth 1.  Live-row slicing is
+    on everywhere (it is the store's only load path), so the fp32 rows
+    already ship live rows, and the int4 rows additionally pack them
+    ~3.2x (bf16 -> nibbles + group scales).  The
     derived fields carry the mean traced DECODE KV_LOAD payload —
     prefill loads carry 0 bytes and are excluded, so the figure is the
     real per-load link cost.  Record the table in docs/BENCHMARKS.md."""
@@ -395,7 +400,8 @@ def serving_kv_quant():
                 quant="int4", fused_int4=True, kv_mode=kv_mode)
             slab_kb = eng.kvstore.slab_nbytes(0) / 2**10
             trace = eng.trace              # survives engine shutdown
-            tok_s, step_s, rep = _serve_steady_state(eng, max_new=max_new)
+            tok_s, step_s, rep = _serve_steady_state(eng, prompt_len=64,
+                                                     max_new=max_new)
             loads = [e.nbytes for e in trace.events()
                      if e.kind == "kv_load" and e.nbytes]
             kv_kb_load = sum(loads) / max(1, len(loads)) / 2**10
@@ -414,6 +420,50 @@ def serving_kv_quant():
          f"{results[('fp32', 2)] / results[('int4', 2)]:.2f}x;"
          f"fp32_d2_vs_d1={results[('fp32', 1)] / results[('fp32', 2)]:.2f}x;"
          f"int4_d2_vs_d1={results[('int4', 1)] / results[('int4', 2)]:.2f}x")
+
+
+def pipelined_kv_quant():
+    """Batch-generation twin of serving_kv_quant: ``PipelinedLM``'s host
+    KV cache now lives in the SAME tiered KV store serving uses, so
+    kv_mode {fp32, int4} applies to batch generation too (the PR-6
+    unification; before it the engine kept a bespoke fp32 host dict and
+    silently ignored --kv-mode).  Depth 1 on the sim link, weights
+    pinned INT4 so the decode step is KV-dominated; both arms ship only
+    the live (slots, positions) extent, int4 additionally packs it ~6x
+    (f32 -> nibbles + group scales) with the dequant on the transfer
+    thread.  The derived fields carry the mean traced decode KV_LOAD
+    payload vs the full-slab bytes the pre-PR-6 engine would have moved.
+    CI smoke runs `pipelined_kv_quant --steps 2`."""
+    from repro.serving.spec import EngineSpec, build_lm
+    cfg = _bench_cfg(layers=6, d=512, ff=2048)
+    batch, prompt_len = 8, 32
+    gen = (STEPS + 1) if STEPS else 12
+    results = {}
+    for kv_mode in ("fp32", "int4"):
+        spec = EngineSpec(
+            arch=cfg.name, cfg=cfg, offload=True, placement="host",
+            pipeline="performance", quant="int4", kv_mode=kv_mode,
+            b_max=batch, max_len=prompt_len + gen + 2, depth=1,
+            sim_bw=0.3e9, disk_root=f"/tmp/pipo_bench_pkv_{kv_mode}")
+        lm = build_lm(spec)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size,
+                              (batch, prompt_len)).astype(np.int32)
+        toks, stats = lm.generate(prompt, gen_len=gen)
+        loads = [e.nbytes for e in lm.trace.events()
+                 if e.kind == "kv_load" and e.nbytes]
+        kv_kb_load = sum(loads) / max(1, len(loads)) / 2**10
+        slab_kb = lm.kvstore.slab_nbytes(0) / 2**10
+        step_s = batch / max(1e-9, stats["decode_tok_s"])
+        results[kv_mode] = step_s
+        emit(f"pipelined_kv_quant_{kv_mode}_d1", step_s * 1e6,
+             f"decode_tok_s={stats['decode_tok_s']:.2f};"
+             f"step_ms={step_s * 1e3:.1f};"
+             f"kv_KB_per_load={kv_kb_load:.0f};"
+             f"slab_KB={slab_kb:.0f};"
+             f"compute_busy={stats['compute_busy']:.2f}")
+    emit("pipelined_kv_quant_summary", 0.0,
+         f"int4_vs_fp32_d1={results['fp32'] / results['int4']:.2f}x")
 
 
 def serving_adaptive_depth():
@@ -515,7 +565,7 @@ def roofline():
 BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            fig9_ablation, table3_latency, table6_memory, fig12_moe,
            serving_offload, serving_offload_depth, serving_kv_quant,
-           serving_adaptive_depth, kernel_int4, roofline]
+           pipelined_kv_quant, serving_adaptive_depth, kernel_int4, roofline]
 
 
 def run_spec_scenario(path: str):
@@ -553,10 +603,11 @@ def main(argv=None) -> "int | None":
                          "EngineSpec JSON (resolve -> create_engine -> "
                          "steady-state decode), then exit")
     ap.add_argument("--steps", type=int, metavar="N",
-                    help="steady-state decode steps for the "
-                         "serving_kv_quant scenario (smoke runs: CI "
-                         "uses 'serving_kv_quant --steps 2'); other "
-                         "scenarios run their documented full length")
+                    help="decode steps for the KV-streaming scenarios "
+                         "(smoke runs: CI uses 'serving_kv_quant "
+                         "--steps 2' and 'pipelined_kv_quant --steps "
+                         "2'); other scenarios run their documented "
+                         "full length")
     args = ap.parse_args(argv)
     if args.steps is not None and args.steps < 1:
         ap.error(f"--steps must be >= 1, got {args.steps}")

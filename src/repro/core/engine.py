@@ -4,7 +4,13 @@ and move through the PIPO pipeline (the paper's system, end to end).
 Layer granularity follows the paper ("treating MHA and MLP as separate
 layers"): the schedulable unit list is [mha_0, mlp_0, mha_1, mlp_1, ...].
 Per unit, weights are *merged* into one contiguous buffer (transfer suite
-§3.3) living on the placement tier; the KV cache lives in the host store.
+§3.3) living on the placement tier; the KV cache lives in the SAME
+``core.kvstore.TieredKVStore`` the serving engines use (``cache_on=
+"host"``): every KV_LOAD ships only the live ``(batch, positions)``
+rows, ``kv_mode="int4"`` streams them packed (dequantized post-link on
+the transfer thread), and both are byte-accounted on the trace.  With
+``cache_on="device"`` the cache is device-resident — KV_SAVE refreshes
+the device store and nothing crosses the link.
 
 Compute units are jitted once per (kind, phase) and run on the main
 thread; weight-load / kv-load / kv-save run on the 3-thread pool per
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MOE, ModelConfig
+from repro.core.kvstore import TieredKVStore
 from repro.core.offload import DeviceStore, DiskStore, HostStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
 from repro.core.tasks import Trace
@@ -38,7 +45,7 @@ from repro.quant.int4 import quantize_int4
 # constructor acted on (note depth defaulted to 1 here, NOT auto)
 _LEGACY_DEFAULTS = dict(
     batch=4, max_len=256, placement="host", cache_on="host",
-    pipeline="performance", quant=None, fused_int4=True,
+    pipeline="performance", quant=None, kv_mode=None, fused_int4=True,
     disk_root="/tmp/pipo_disk", block_bytes=None, n_io_threads=3,
     cold_reads=False, seed=0, depth=1)
 
@@ -48,9 +55,7 @@ _LEGACY_DEFAULTS = dict(
 # ---------------------------------------------------------------------------
 
 
-def _attn_unit(x, w, kc, vc, pos, *, cfg: ModelConfig, phase: str):
-    """x (b, s, d); kc/vc (b, L, hkv, dh) device copies of the host cache.
-    Returns (x', k_new, v_new)."""
+def _qkv(x, w, pos, cfg: ModelConfig):
     b, s, d = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     xn = rms_norm(x, w["norm"], cfg.norm_eps)
@@ -58,14 +63,27 @@ def _attn_unit(x, w, kc, vc, pos, *, cfg: ModelConfig, phase: str):
     k = (xn @ w["wk"]).reshape(b, s, hkv, dh)
     v = (xn @ w["wv"]).reshape(b, s, hkv, dh)
     angles = rope_angles(pos + jnp.arange(s), dh, cfg.rope_theta)
-    q = apply_rope(q, angles)
-    k = apply_rope(k, angles)
-    if phase == "prefill":
-        out = ref_attention(q, k, v, causal=True)
-    else:
-        out, kc, vc = decode_attention(q, kc, vc, k, v, pos, axes=())
-    x = x + out.reshape(b, s, h * dh) @ w["wo"]
-    return x, k, v
+    return apply_rope(q, angles), apply_rope(k, angles), v
+
+
+def _attn_prefill_unit(x, w, *, cfg: ModelConfig):
+    """Prefill attends within the prompt only — no cache is consumed.
+    Returns (x', k_new, v_new) with k/v (b, s, hkv, dh)."""
+    b, s, d = x.shape
+    q, k, v = _qkv(x, w, jnp.int32(0), cfg)
+    out = ref_attention(q, k, v, causal=True)
+    return x + out.reshape(b, s, -1) @ w["wo"], k, v
+
+
+def _attn_decode_unit(x, w, kc, vc, pos, *, cfg: ModelConfig):
+    """x (b, 1, d); kc/vc (b, L, hkv, dh) device copies of the tiered
+    cache.  Returns (x', k_new, v_new, kc', vc') — the functionally
+    updated caches back the ``cache_on="device"`` store refresh; host
+    mode persists through the KV store instead and drops them."""
+    b, s, d = x.shape
+    q, k, v = _qkv(x, w, pos, cfg)
+    out, kc, vc = decode_attention(q, kc, vc, k, v, pos, axes=())
+    return x + out.reshape(b, s, -1) @ w["wo"], k, v, kc, vc
 
 
 def _mlp_unit(x, w, *, cfg: ModelConfig):
@@ -146,6 +164,7 @@ class PipelinedLM:
                 placement=kw["placement"],
                 b_max=kw["batch"], max_len=kw["max_len"],
                 pipeline=kw["pipeline"], quant=kw["quant"],
+                kv_mode=kw["kv_mode"],
                 fused_int4=kw["fused_int4"], depth=kw["depth"],
                 cache_on=kw["cache_on"], disk_root=kw["disk_root"],
                 block_bytes=kw["block_bytes"],
@@ -166,6 +185,7 @@ class PipelinedLM:
         self.placement = plan.placement
         self.cache_on = plan.cache_on
         self.quant = plan.quant
+        self.kv_mode = plan.kv_mode or "fp32"
         self.depth = max(1, plan.depth)
         self.trace = Trace()
         self.host = HostStore()
@@ -175,7 +195,7 @@ class PipelinedLM:
             placement=plan.placement, host=self.host, device=self.device,
             disk=self.disk, quant=plan.quant, fused_int4=plan.fused_int4,
             block_bytes=plan.block_bytes, n_io_threads=plan.n_io_threads,
-            cold_reads=plan.cold_reads)
+            cold_reads=plan.cold_reads, sim_bw=plan.sim_bw)
         self.pipeline_mode = plan.pipeline
         self.units: list[UnitSpec] = []
         self._build(plan.seed)
@@ -247,23 +267,33 @@ class PipelinedLM:
 
     # -- KV cache --------------------------------------------------------------
     def _kv_init(self):
+        """One KV path for both engines: the host cache is a
+        ``TieredKVStore`` indexed by schedulable unit (mha units carry
+        ``k``/``v`` slabs, mlp/moe units are empty), sharing the weight
+        store's link so live-row/INT4 byte reductions pay the same
+        simulated interconnect serving pays.  ``cache_on="device"``
+        keeps plain device arrays (nothing ever crosses the link)."""
         cfg = self.cfg
         shape = (self.batch, self.max_len, cfg.num_kv_heads, cfg.head_dim)
-        for l in range(cfg.num_layers):
-            if self.cache_on == "host":
-                self.host.put(f"kc[{l}]", np.zeros(shape, np.float32))
-                self.host.put(f"vc[{l}]", np.zeros(shape, np.float32))
-            else:
+        if self.cache_on == "host":
+            shapes = [({"k": (shape, np.float32), "v": (shape, np.float32)}
+                       if u.kind == "mha" else {}) for u in self.units]
+            kinds = [({"k": "kv", "v": "kv"} if u.kind == "mha" else {})
+                     for u in self.units]
+            self.kvstore = TieredKVStore(
+                shapes, kinds, b_max=self.batch, max_len=self.max_len,
+                kv_mode=self.kv_mode, link=self.weights.link)
+        else:
+            self.kvstore = None
+            for l in range(cfg.num_layers):
                 self.device.put(f"kc[{l}]", np.zeros(shape, np.float32))
                 self.device.put(f"vc[{l}]", np.zeros(shape, np.float32))
 
     # -- jitted units ------------------------------------------------------------
     def _jit_units(self):
         cfg = self.cfg
-        self._attn_prefill = jax.jit(partial(_attn_unit, cfg=cfg,
-                                             phase="prefill"))
-        self._attn_decode = jax.jit(partial(_attn_unit, cfg=cfg,
-                                            phase="decode"))
+        self._attn_prefill = jax.jit(partial(_attn_prefill_unit, cfg=cfg))
+        self._attn_decode = jax.jit(partial(_attn_decode_unit, cfg=cfg))
         self._mlp = jax.jit(partial(_mlp_unit, cfg=cfg))
         self._embed = jax.jit(_embed_unit)
         self._head = jax.jit(_head_unit)
@@ -295,32 +325,68 @@ class PipelinedLM:
     def release_weights(self, j: int, handle):
         del handle  # device arrays freed by GC; stores unaffected
 
+    def _live_len(self, i: int) -> int:
+        """Sequence rows iteration ``i``'s decode attention actually
+        reads: the prompt plus the ``i-1`` decode rows already saved
+        (rows ``0..pos-1``; the row at ``pos`` arrives with the step's
+        own k/v).  Iteration 0 is the prefill — no cache is consumed."""
+        return min(self._prompt_len + i - 1, self.max_len)
+
     def kv_nbytes(self, i: int, j: int) -> int:
-        """Bytes unit j's KV_LOAD moves over the link (0 when the cache is
-        device-resident and nothing crosses)."""
+        """Bytes unit j's KV_LOAD moves over the link — the live rows,
+        packed under ``kv_mode='int4'`` (0 when the cache is
+        device-resident or the load precedes any decode row)."""
+        if self.cache_on == "device" or not self.is_mha(j) or i == 0:
+            return 0
+        return self.kvstore.load_nbytes(j, self.batch, self._live_len(i))
+
+    def kv_extent(self, i: int, j: int):
+        """Live (batch, positions) extent of iteration i's KV_LOAD —
+        copied onto the trace event so live-row slicing is assertable."""
+        if self.cache_on == "device" or not self.is_mha(j) or i == 0:
+            return None
+        return (self.batch, self._live_len(i))
+
+    def kv_save_nbytes(self, i: int, j: int) -> int:
+        """Bytes iteration i's KV_SAVE moves device->host: the prompt's
+        rows for the prefill, one row per slot for a decode step."""
         if self.cache_on == "device" or not self.is_mha(j):
             return 0
-        l = self.units[j].layer
-        return self.host.get(f"kc[{l}]").nbytes * 2
+        if i == 0:
+            return self.kvstore.prefill_save_nbytes(j, self.batch,
+                                                    self._prompt_len)
+        return self.kvstore.save_nbytes(j, self.batch)
 
     def load_kv(self, i: int, j: int):
-        l = self.units[j].layer
         if self.cache_on == "device":
-            return (self.device.get(f"kc[{l}]"), self.device.get(f"vc[{l}]"))
-        kc = jax.device_put(self.host.get(f"kc[{l}]"))
-        vc = jax.device_put(self.host.get(f"vc[{l}]"))
-        kc.block_until_ready()
-        return (kc, vc)
+            l = self.units[j].layer
+            return {"k": self.device.get(f"kc[{l}]"),
+                    "v": self.device.get(f"vc[{l}]")}
+        if i == 0:
+            return None       # prefill attends within the prompt only
+        return self.kvstore.load(j, self.batch, self._live_len(i))
 
     def save_kv(self, i: int, j: int, new_kv):
-        l = self.units[j].layer
-        k_new, v_new, pos, length = new_kv
+        phase, k_new, v_new, pos, length = new_kv
         if self.cache_on == "device":
-            return  # updated in compute (functional) — store refreshed there
-        kc = self.host.get(f"kc[{l}]")
-        vc = self.host.get(f"vc[{l}]")
-        kc[:, pos:pos + length] = np.asarray(k_new)
-        vc[:, pos:pos + length] = np.asarray(v_new)
+            # device-resident cache: refresh the store with the updated
+            # arrays; the scheduler's save-before-load ordering makes
+            # them visible to the next iteration's load (no bytes cross
+            # the link).  Decode ships the functionally-updated caches
+            # whole; the prefill ships the prompt's rows, scattered here.
+            l = self.units[j].layer
+            if phase == "prefill":
+                k_new = self.device.get(f"kc[{l}]").at[:, :length].set(k_new)
+                v_new = self.device.get(f"vc[{l}]").at[:, :length].set(v_new)
+            self.device.put(f"kc[{l}]", k_new)
+            self.device.put(f"vc[{l}]", v_new)
+            return
+        rows = {"k": k_new, "v": v_new}
+        if phase == "prefill":
+            self.kvstore.save_prefill_batch(j, rows, length)
+        else:
+            self.kvstore.save_decode(j, rows, active=range(self.batch),
+                                     pos=np.full(self.batch, pos, np.int32))
 
     def compute(self, i: int, j: int, x, weights, kv):
         u = self.units[j]
@@ -330,15 +396,15 @@ class PipelinedLM:
             return self._compute_moe(u, x, weights), None
         pos = self._pos
         if self._phase == "prefill":
-            x, k, v = self._attn_prefill(x, weights, kv[0], kv[1],
-                                         jnp.int32(0))
-            return x, (k, v, 0, x.shape[1])
-        x, k, v = self._attn_decode(x, weights, kv[0], kv[1], jnp.int32(pos))
+            x, k, v = self._attn_prefill(x, weights)
+            return x, ("prefill", k, v, 0, x.shape[1])
+        x, k, v, kc, vc = self._attn_decode(x, weights, kv["k"], kv["v"],
+                                            jnp.int32(pos))
         if self.cache_on == "device":
-            l = u.layer
-            # decode path returns updated device caches through closure-free
-            # functional update; re-put handled lazily (kv already device)
-        return x, (k, v, int(pos), 1)
+            # ship the whole updated caches to the save task (device
+            # puts, no link crossing); host mode ships only the new row
+            return x, ("decode", kc, vc, int(pos), 1)
+        return x, ("decode", k, v, int(pos), 1)
 
     def _compute_moe(self, u, x, shared_w):
         """Paper Appendix C.4: the gate forces a sync (experts unknown until
@@ -377,19 +443,25 @@ class PipelinedLM:
         return self._last_tokens
 
     # -- public API -----------------------------------------------------------
-    def generate(self, prompt: np.ndarray, gen_len: int):
+    def generate(self, prompt: np.ndarray, gen_len: int, pool=None):
         """prompt (b, s) int32.  Greedy-generates gen_len tokens.  Returns
-        (tokens (b, gen_len), stats dict)."""
+        (tokens (b, gen_len), stats dict).  ``pool`` injects a transfer
+        pool (e.g. ``VirtualPool`` for virtual-clock byte/cost tests);
+        its trace becomes the engine's."""
         b, s = prompt.shape
         assert b == self.batch and s + gen_len <= self.max_len
         cfg = self.cfg
+        self._prompt_len = s        # KV hooks derive live extents from this
+        if pool is not None and getattr(pool, "trace", None) is not None:
+            self.trace = pool.trace
         # warm: the scheduler persists across the per-token generate()
         # calls below, pre-submitting token t+1's first weight/KV loads
         # during token t's tail compute (performance mode only).  load_kv
-        # here is phase-independent (prefill consumes KV too), so warm
-        # preloads are always valid; saves drain at shutdown().
+        # depends only on the (global, deterministic) iteration index —
+        # never on the phase flag — so warm cross-call preloads stay
+        # valid; saves drain at shutdown().
         sched = PipelineScheduler(len(self.units), self.pipeline_mode,
-                                  trace=self.trace,
+                                  pool=pool, trace=self.trace,
                                   warm=self.pipeline_mode == "performance",
                                   depth=self.depth)
         self._pool = sched.pool

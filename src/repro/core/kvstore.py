@@ -29,10 +29,17 @@ the KV bytes two ways:
   quantize→dequantize roundtrip is applied exactly once per row and a
   resident reference that roundtrips newly-written rows reproduces the
   streamed tokens exactly (``serving.engine.KVRoundtripServingEngine``).
-  Loads ship packed bytes (+scales) over the link; the dequant runs
-  inside the consumer's jit (``device_cache``; XLA fuses it into the
-  attention compute — on TPU the Pallas rendering is
+  Loads ship packed bytes (+scales) over the link; the dequant runs on
+  the *transfer thread* right after the link, bounded by the live
+  ``(slots, positions)`` extent — never the allocated slab — exactly
+  like the weights path (``transfer._maybe_dequant``), so it overlaps
+  main-thread compute instead of competing with it inside the decode
+  jit (on TPU the in-kernel rendering is
   ``kernels/decode_attention.py::decode_attention_int4_kernel``).
+  Consumers receive plain compute-precision leaves in every mode — the
+  packed layout never escapes the store.  ``dequant_nbytes`` /
+  ``dequant_bytes_total`` account the unpacked bytes so the live-extent
+  bound is assertable on traces.
   Non-sequence leaves (rolling windows, SSM conv/state) are rewritten
   every step — requantizing them would compound error and break the
   roundtrip-once reference — so they stream at full precision.
@@ -59,7 +66,6 @@ import numpy as np
 __all__ = [
     "TieredKVStore", "KV_GROUP", "kv_group", "kv_eligible",
     "quantize_kv_rows", "dequantize_kv_rows", "kv_roundtrip_rows",
-    "device_cache",
 ]
 
 # canonical KV quantization group: rows are short (hkv*dh features), so
@@ -117,11 +123,37 @@ def _dequant_impl(packed, scale, group: int):
 _dequantize_rows = jax.jit(_dequant_impl, static_argnums=(2,))
 
 
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def _dequant_pad_rows(packed, scale, group: int, full: Tuple[int, ...],
+                      dtype):
+    """One-dispatch load body for INT4 leaves: dequantize the bucketed
+    live rows, cast to compute precision, and scatter them into a zeroed
+    full-slab array — fused so the f32 intermediate never materializes
+    (the eager chain costs real transfer-thread CPU per load)."""
+    rows = _dequant_impl(packed, scale, group)
+    rows = rows.reshape(rows.shape[:-1] + full[2:]).astype(dtype)
+    dev = jnp.zeros(full, dtype)
+    return dev.at[:rows.shape[0], :rows.shape[1]].set(rows)
+
+
+# live_len bucket for on-load shapes: the dequant/pad ops are shape-
+# specialized (jit / dispatch caches) and decode presents a FRESH
+# live_len every step — unbucketed that is a recompile per step, which
+# on real clocks dwarfs the dead-byte win this store exists to claim.
+# Rounding the sliced extent up to 32 positions caps the distinct
+# shapes at max_len/32.  The bucket's tail rows are zero-filled on the
+# host side (zero packed bytes under zero scales dequantize to exact
+# zeros), so padded rows stay value-invisible and the link still
+# prices only the true live bytes.
+KV_LEN_BUCKET = 32
+
+
 def quantize_kv_rows(x, group: Optional[int] = None):
     """Quantize cache rows (..., F) -> (packed, scale) numpy arrays.  The
     single quantization the store, the spill path, and the parity
-    reference all share — any drift breaks the roundtrip-once parity."""
-    x = jnp.asarray(np.asarray(x), jnp.float32)
+    reference all share — any drift breaks the roundtrip-once parity.
+    Accepts host or device arrays directly (no forced host bounce)."""
+    x = jnp.asarray(x, jnp.float32)
     g = group or kv_group(x.shape[-1])
     packed, scale = _quantize_rows(x, g)
     return np.asarray(packed), np.asarray(scale)
@@ -129,9 +161,9 @@ def quantize_kv_rows(x, group: Optional[int] = None):
 
 def dequantize_kv_rows(packed, scale, group: int, dtype=jnp.bfloat16):
     """Inverse of ``quantize_kv_rows`` -> (..., F) numpy array of
-    ``dtype`` (the cache's compute precision)."""
-    out = _dequantize_rows(jnp.asarray(np.asarray(packed)),
-                           jnp.asarray(np.asarray(scale)), group)
+    ``dtype`` (the cache's compute precision).  Accepts host or device
+    arrays directly (no forced host bounce)."""
+    out = _dequantize_rows(jnp.asarray(packed), jnp.asarray(scale), group)
     return np.asarray(out.astype(dtype))
 
 
@@ -140,7 +172,6 @@ def kv_roundtrip_rows(x, group: Optional[int] = None):
     streaming path uses, cast back to the input dtype — the reference
     transformation ``KVRoundtripServingEngine`` applies to newly-written
     cache rows so its tokens match the streamed engine's exactly."""
-    x = np.asarray(x)
     g = group or kv_group(x.shape[-1])
     packed, scale = quantize_kv_rows(x, g)
     return dequantize_kv_rows(packed, scale, g, jnp.dtype(x.dtype))
@@ -148,29 +179,14 @@ def kv_roundtrip_rows(x, group: Optional[int] = None):
 
 @dataclass
 class _LeafMeta:
-    """Per-leaf layout the store shares with its jitted consumers."""
+    """Per-leaf layout (kept public via ``leaf_meta`` for tests and
+    byte-accounting consumers; the packed layout itself never leaves the
+    store — ``load`` returns compute-precision leaves in every mode)."""
     kind: str                 # transformer cache kind ("kv"/"rep"/...)
     feat: Tuple[int, ...]     # trailing feature shape after (b[, L])
     dtype: Any                # compute-precision dtype of the leaf
-    quant: bool = False       # stored/streamed packed INT4
+    quant: bool = False       # stored packed INT4 (dequant on load)
     group: int = 0            # quant group over the flattened features
-
-
-def device_cache(cache: Dict[str, Any], meta: Dict[str, "_LeafMeta"]):
-    """Rebuild the compute-precision cache dict from a ``load()`` result
-    inside a consumer's jit: packed ``name#q``/``name#s`` pairs are
-    dequantized here (traceable; XLA fuses the unpack into the attention
-    that consumes it), full-precision leaves pass through untouched.
-    fp32 mode is the identity — bit-exact with the pre-store engines."""
-    out = {}
-    for name, m in meta.items():
-        if not m.quant:
-            out[name] = cache[name]
-            continue
-        packed, scale = cache[name + "#q"], cache[name + "#s"]
-        rows = _dequant_impl(packed, scale, m.group)
-        out[name] = rows.reshape(rows.shape[:-1] + m.feat).astype(m.dtype)
-    return out
 
 
 @dataclass
@@ -207,6 +223,10 @@ class TieredKVStore:
         self.kv_mode = kv_mode
         self.link = link
         self.kinds: List[Dict[str, str]] = [dict(k) for k in unit_kinds]
+        # running total of compute-precision bytes the load-side dequant
+        # materialized — bounded by live extents, never the slab
+        # (asserted in tests/test_kvstore.py); 0 forever under fp32
+        self.dequant_bytes_total = 0
         self._units: List[Dict[str, Any]] = []
         self._meta: List[Dict[str, _LeafMeta]] = []
         for shapes, kinds in zip(unit_shapes, unit_kinds):
@@ -235,8 +255,7 @@ class TieredKVStore:
         return len(self._units)
 
     def leaf_meta(self, j: int) -> Dict[str, _LeafMeta]:
-        """Per-leaf layout for unit ``j`` — closed over by the engine's
-        jitted decode fns (``device_cache`` consumes it)."""
+        """Per-leaf layout for unit ``j`` (introspection / tests)."""
         return self._meta[j]
 
     def has_kv(self, j: int) -> bool:
@@ -284,14 +303,35 @@ class TieredKVStore:
             total += lb * row
         return total
 
-    def prefill_save_nbytes(self, j: int) -> int:
-        """Bytes a prefill save moves: one slot's full rows."""
+    def prefill_save_nbytes(self, j: int, live_b: int = 1,
+                            length: Optional[int] = None) -> int:
+        """Bytes a prefill save moves: ``live_b`` slots' rows at compute
+        precision, ``length`` positions each for kv kinds (default the
+        full per-slot extent — one slot's whole rows, the serving
+        engine's per-slot admission payload)."""
+        ll = self.max_len if length is None else min(int(length),
+                                                     self.max_len)
         total = 0
         for name, m in self._meta[j].items():
             n = int(np.prod(m.feat)) * np.dtype(m.dtype).itemsize
             if m.kind == "kv":
-                n *= self.max_len
+                n *= ll
             total += n
+        return total * max(1, int(live_b))
+
+    def dequant_nbytes(self, j: int, live_b: Optional[int] = None,
+                       live_len: Optional[int] = None) -> int:
+        """Compute-precision bytes one ``load(j, live_b, live_len)``
+        materializes on the transfer thread when unpacking INT4 leaves —
+        the dequant cost, bounded by the live extent (0 in fp32 mode)."""
+        lb = self.b_max if live_b is None else min(int(live_b), self.b_max)
+        ll = self.max_len if live_len is None else min(int(live_len),
+                                                      self.max_len)
+        total = 0
+        for name, m in self._meta[j].items():
+            if m.quant:
+                total += lb * ll * int(np.prod(m.feat)) \
+                    * np.dtype(m.dtype).itemsize
         return total
 
     def max_live_load_nbytes(self, live_b: int, live_len: int) -> int:
@@ -308,25 +348,49 @@ class TieredKVStore:
                    for a in self._leaf_arrays(j, name))
 
     # ---- loads (transfer-pool thread) --------------------------------------
+    def _bucket_len(self, ll: int) -> int:
+        """``live_len`` rounded up to the shape bucket (see
+        ``KV_LEN_BUCKET``), clamped to the slab extent."""
+        return min(self.max_len,
+                   -(-int(ll) // KV_LEN_BUCKET) * KV_LEN_BUCKET)
+
+    @staticmethod
+    def _bucketed(arr: np.ndarray, lb: int, ll: int, ll_b: int):
+        """Host-side ``(lb, ll_b, ...)`` slice of a ``(b, L, ...)`` slab
+        with the ``ll..ll_b`` tail zero-filled — the fixed-shape payload
+        the shape-specialized device ops consume."""
+        if ll_b == ll:
+            return np.ascontiguousarray(arr[:lb, :ll])
+        out = np.zeros((lb, ll_b) + arr.shape[2:], arr.dtype)
+        out[:, :ll] = arr[:lb, :ll]
+        return out
+
     def _put_padded(self, arr: np.ndarray, lb: int, ll: int, seq: bool):
         sl = arr[:lb, :ll] if seq else arr[:lb]
         if sl.shape == arr.shape:
-            dev = jnp.asarray(arr)
-        else:
-            rows = jnp.asarray(np.ascontiguousarray(sl))
+            return jnp.asarray(arr)
+        if seq:
+            ll_b = self._bucket_len(ll)
+            rows = jnp.asarray(self._bucketed(arr, lb, ll, ll_b))
             dev = jnp.zeros(arr.shape, rows.dtype)
-            dev = dev.at[tuple(slice(0, s) for s in sl.shape)].set(rows)
-        return dev
+            return dev.at[:lb, :ll_b].set(rows)
+        rows = jnp.asarray(np.ascontiguousarray(sl))
+        dev = jnp.zeros(arr.shape, rows.dtype)
+        return dev.at[tuple(slice(0, s) for s in sl.shape)].set(rows)
 
     def load(self, j: int, live_b: Optional[int] = None,
              live_len: Optional[int] = None) -> Dict[str, Any]:
         """KV_LOAD body: host rows -> device, sliced to the live extent
         and zero-padded back to the full slab shape (device side, after
         the link) so jitted consumers keep one signature.  INT4 leaves
-        arrive packed under ``name#q``/``name#s`` — run the result
-        through ``device_cache(cache, leaf_meta(j))`` inside the
-        consumer's jit.  Transfer-pool thread; pays the link floor on
-        exactly the live bytes."""
+        cross the link packed, then dequantize HERE — on the transfer
+        thread, over only the live rows rounded up to the shape bucket
+        (never the slab), the same post-link discipline as
+        ``transfer._maybe_dequant`` for weights — so consumers receive
+        plain compute-precision leaves in every mode.  Pays the link
+        floor on exactly the (packed) live bytes; ``dequant_bytes_total``
+        likewise prices the live extent (bucket padding is a
+        compile-amortization detail, not modeled cost)."""
         t0 = time.perf_counter()
         lb = self.b_max if live_b is None else \
             max(1, min(int(live_b), self.b_max))
@@ -336,8 +400,16 @@ class TieredKVStore:
         for name, m in self._meta[j].items():
             leaf = self._units[j][name]
             if isinstance(leaf, _QuantLeaf):
-                out[name + "#q"] = self._put_padded(leaf.packed, lb, ll, True)
-                out[name + "#s"] = self._put_padded(leaf.scale, lb, ll, True)
+                ll_b = self._bucket_len(ll)
+                packed = jnp.asarray(self._bucketed(leaf.packed,
+                                                    lb, ll, ll_b))
+                scale = jnp.asarray(self._bucketed(leaf.scale,
+                                                   lb, ll, ll_b))
+                full = (self.b_max, self.max_len) + m.feat
+                out[name] = _dequant_pad_rows(packed, scale, leaf.group,
+                                              full, m.dtype)
+                self.dequant_bytes_total += lb * ll \
+                    * int(np.prod(m.feat)) * np.dtype(m.dtype).itemsize
             else:
                 out[name] = self._put_padded(leaf.arr, lb, ll,
                                              seq=m.kind == "kv")
@@ -371,6 +443,36 @@ class TieredKVStore:
                 leaf.scale[slot] = scale
             else:
                 leaf.arr[slot] = row
+
+    def save_prefill_batch(self, j: int, rows: Dict[str, np.ndarray],
+                           length: Optional[int] = None) -> None:
+        """Scatter ALL slots' freshly-prefilled rows at once (name ->
+        ``(b, length, *feat)`` live rows for kv kinds, ``(b, *feat)``
+        for per-slot state) — the batch-generation admission path
+        (``PipelinedLM``), where every slot prefills together.  Positions
+        beyond ``length`` reset to zeros (and zeros roundtrip to zeros
+        under INT4, so the tail stays value-invisible)."""
+        for name, m in self._meta[j].items():
+            leaf = self._units[j][name]
+            row = np.asarray(rows[name])
+            if isinstance(leaf, _QuantLeaf):
+                row = row.astype(m.dtype)     # compute precision first
+                ll = row.shape[1] if length is None else int(length)
+                F = int(np.prod(m.feat))
+                b = row.shape[0]
+                packed, scale = quantize_kv_rows(
+                    row[:, :ll].reshape(b, ll, F), leaf.group)
+                leaf.packed[:b, :ll] = packed
+                leaf.packed[:b, ll:] = 0
+                leaf.scale[:b, :ll] = scale
+                leaf.scale[:b, ll:] = 0
+            elif m.kind == "kv":
+                ll = row.shape[1] if length is None else int(length)
+                b = row.shape[0]
+                leaf.arr[:b, :ll] = row[:, :ll]
+                leaf.arr[:b, ll:] = 0
+            else:
+                leaf.arr[:row.shape[0]] = row
 
     def save_decode(self, j: int, rows: Dict[str, np.ndarray],
                     active: Sequence[int], pos: np.ndarray) -> None:

@@ -120,8 +120,9 @@ def int4_roundtrip(arr):
     if g is None:
         return arr
     packed, scale = quantize_int4(jnp.asarray(arr, jnp.float32), g)
-    return np.asarray(_fused_dequant(jnp.asarray(np.asarray(packed)),
-                                     jnp.asarray(np.asarray(scale)), g))
+    # packed/scale are already device arrays — feed them straight to the
+    # jitted dequant, no host bounce
+    return np.asarray(_fused_dequant(packed, scale, g))
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,8 @@ features as nibble pairs (``(b, S, F//2)`` uint8) + groupwise f32 scales
 the packed bytes crossed HBM->VMEM.  Only INT4 bytes pay the memory
 floor; no f32 cache is ever materialized (the cache rendering of the
 paper's §3.4 "no dequantization pass").  On the CPU container the same
-dequant traces inside the engines' decode jit (``kvstore.device_cache``)
-and XLA fuses it — numerics are identical (asserted in
+dequant runs on the transfer thread over live rows only
+(``kvstore.load``, post-link) — numerics are identical (asserted in
 tests/test_kernels.py).
 """
 from __future__ import annotations

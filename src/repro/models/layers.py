@@ -602,11 +602,30 @@ def _moe_ff_axis(ctx: Ctx):
     return "data" if (f % n == 0 and f >= n) else None
 
 
+def _dequant_moe_stacks(p, dtype):
+    """INT4-resident MoE (plan ``moe_quant='int4'``): the routed expert
+    stacks arrive packed (``w_gate#q``/``#s`` etc., per
+    ``QuantPolicy.prepare_moe_params``) — unpack them under the
+    ``vreg_fused_int4`` scope so the roofline analyzer prices packed
+    bytes as the HBM traffic, same as the 2-D ``_mm`` path.  The router
+    (``wg``) and shared experts stay at compute precision."""
+    if "w_gate#q" not in p:
+        return p
+    from repro.quant.int4 import dequantize_int4_stack
+    out = dict(p)
+    with jax.named_scope("vreg_fused_int4"):
+        for name in ("w_gate", "w_up", "w_down"):
+            q, s = out.pop(name + "#q"), out.pop(name + "#s")
+            out[name] = dequantize_int4_stack(q, s, dtype)
+    return out
+
+
 def apply_moe_ffn(p, x, ctx: Ctx):
     cfg = ctx.cfg
     m = cfg.moe
     b, s, d = x.shape
     xn = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+    p = _dequant_moe_stacks(p, xn.dtype)
     moe_params = {k: p[k] for k in ("wg", "w_gate", "w_up", "w_down")}
 
     axis = ctx.dist.model_axis if ctx.dist.is_dist else None

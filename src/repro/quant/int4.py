@@ -16,6 +16,9 @@ the TPU rendering of the paper's "no dequantization pass".
 """
 from __future__ import annotations
 
+import functools
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -58,6 +61,46 @@ def dequantize_int4(packed, scale, dtype=jnp.bfloat16, group: int = GROUP):
     w = q.reshape(K // group, group, N).astype(jnp.float32) \
         * scale[:, None, :]
     return w.reshape(K, N).astype(dtype)
+
+
+def stack_group(K: int) -> int:
+    """Group size for a stacked matrix with contraction dim ``K``:
+    ``gcd(K, 128)`` always divides K, so expert matrices whose
+    contraction dim is smaller than (or not a multiple of) the 2-D
+    GROUP stay quantizable with the same groupwise layout."""
+    return math.gcd(int(K), GROUP)
+
+
+def stack_eligible(shape) -> bool:
+    """Whether a stacked weight (..., K, N) packs as INT4: at least one
+    stack axis, an even N (nibble pairs), and a group of >= 16 along K
+    (smaller groups spend more scale bytes than they save)."""
+    return (len(shape) >= 3 and shape[-1] % 2 == 0
+            and stack_group(shape[-2]) >= 16)
+
+
+def quantize_int4_stack(w, group: int = 0):
+    """w (..., K, N) -> (packed (..., K, N//2) uint8, scale
+    (..., K//g, N) f32): ``quantize_int4`` vmapped over every leading
+    (stack) axis — each (K, N) slice carries exactly the 2-D layout, so
+    the fused kernels and ``dequantize_int4`` apply per slice.  ``group``
+    defaults to ``stack_group(K)``."""
+    g = group or stack_group(w.shape[-2])
+    fn = functools.partial(quantize_int4, group=g)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
+def dequantize_int4_stack(packed, scale, dtype=jnp.bfloat16,
+                          group: int = 0):
+    """Inverse of ``quantize_int4_stack`` -> (..., K, N) dtype.  The
+    group is inferable from the shapes (``K // scale.shape[-2]``)."""
+    g = group or packed.shape[-2] // scale.shape[-2]
+    fn = functools.partial(dequantize_int4, dtype=dtype, group=g)
+    for _ in range(packed.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(packed, scale)
 
 
 def quantize_tree(params, min_size: int = 1 << 16, group: int = GROUP):

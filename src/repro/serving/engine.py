@@ -50,6 +50,13 @@ class ServingEngine(SlotEngineBase):
         self.dist = Dist.local()
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
+        if self.plan is not None and self.plan.moe_quant:
+            # INT4-resident MoE: pack the routed expert stacks once at
+            # load; decode unpacks them through the fused-int4 path
+            from repro.serving.spec import quant_policy_for
+            self.params = quant_policy_for(
+                self.plan.quant, self.plan.kv_mode,
+                self.plan.moe_quant).prepare_moe_params(self.params)
         self.caches = self.model.init_cache(
             b_max, max_len, cfg.encoder_seq_len if cfg.enc_dec else None)
         self._jit()

@@ -77,7 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MOE, ModelConfig, LayerSpec
-from repro.core.kvstore import TieredKVStore, device_cache
+from repro.core.kvstore import TieredKVStore
 from repro.core.offload import DeviceStore, DiskStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
 from repro.core.tasks import Task, TaskType, Trace, _merged_busy
@@ -343,22 +343,16 @@ class OffloadedServingEngine(SlotEngineBase):
             if sig in self._decode_fns:
                 continue
             kinds = self.kv_kinds[j]
-            meta = self.kvstore.leaf_meta(j)
-            packed_kv = any(m.quant for m in meta.values())
             # MoE units run the mixer through apply_layer with a DENSE ffn
             # spec: the base params carry no dense "w_gate", so the ffn
             # half no-ops and the MoE ffn runs in _compute_moe (expert
             # loads overlap compute there).
             spec = (LayerSpec(u.spec.mixer) if u.moe else u.spec)
 
-            def decode_fn(w, x, cache, pos, angles, spec=spec, kinds=kinds,
-                          meta=meta, packed_kv=packed_kv):
-                if packed_kv:
-                    # INT4 KV: the loaded slab is packed nibbles+scales;
-                    # the dequant traces HERE, inside the decode jit, so
-                    # XLA fuses it into the attention that consumes it
-                    # (the paper-§3.4 discipline applied to the cache)
-                    cache = device_cache(cache, meta)
+            def decode_fn(w, x, cache, pos, angles, spec=spec, kinds=kinds):
+                # INT4 KV already dequantized on the transfer thread
+                # (kvstore.load, live rows only) — the cache arrives at
+                # compute precision in every kv_mode
                 ctx = L.Ctx(cfg=cfg, dist=dist, mode="decode", angles=angles,
                             pos=pos, batch_size=x.shape[0])
                 x, new_cache, _ = L.apply_layer(w, x, ctx, cache, spec)

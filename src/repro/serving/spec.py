@@ -196,6 +196,7 @@ class EngineSpec:
     quant: Optional[str] = None         # None|int4
     kv_mode: Optional[str] = None       # None(auto->fp32)|fp32|int4
     fused_int4: Optional[bool] = None   # None: §3.5 batch<16 rule
+    moe_quant: Optional[str] = None     # None|int4 resident expert stacks
     # -- spill / io / sim --------------------------------------------------
     spill_cap: int = 32
     cache_on: str = "host"              # PipelinedLM only: host|device
@@ -232,6 +233,11 @@ class EngineSpec:
             bad(f"quant {self.quant!r} not in {QUANT_MODES}")
         if self.kv_mode not in KV_MODES:
             bad(f"kv_mode {self.kv_mode!r} not in {KV_MODES}")
+        if self.moe_quant not in QUANT_MODES:
+            bad(f"moe_quant {self.moe_quant!r} not in {QUANT_MODES}")
+        if self.moe_quant is not None and self.model_config().moe is None:
+            bad(f"moe_quant={self.moe_quant!r} needs an MoE architecture "
+                f"({self.arch!r} has no expert stacks)")
         if self.depth_policy not in DEPTH_POLICIES:
             bad(f"depth_policy {self.depth_policy!r} not in "
                 f"{DEPTH_POLICIES}")
@@ -417,6 +423,21 @@ class EngineSpec:
                 prov["fused_int4"] = f"explicit: fused_int4={fused}"
             sim_bw = self.sim_bw
 
+        # ---- resident-only fields ----
+        if self.moe_quant is None:
+            moe_quant = None
+        elif engine == "resident":
+            moe_quant = self.moe_quant
+            prov["moe_quant"] = (
+                "explicit: resident expert stacks packed INT4 once at "
+                "load (~1/7 the f32 bytes incl. scales); compute unpacks "
+                "through the fused-int4 path")
+        else:
+            moe_quant = None
+            prov["moe_quant"] = (
+                f"dropped ({self.moe_quant!r}): the offloaded engine "
+                f"streams experts through the unit quant path (--quant)")
+
         if self.block_bytes is None:
             block_bytes = 8 << 20
             prov["block_bytes"] = ("auto: 8MiB blocks (Appendix A: disk "
@@ -431,7 +452,8 @@ class EngineSpec:
             arch=self.arch, scaled=self.scaled, engine=engine,
             b_max=self.b_max, max_len=self.max_len, seed=self.seed,
             placement=placement, pipeline=self.pipeline, quant=quant,
-            kv_mode=kv_mode, fused_int4=fused, warm=warm, depth=depth,
+            kv_mode=kv_mode, fused_int4=fused, moe_quant=moe_quant,
+            warm=warm, depth=depth,
             depth_policy=depth_policy, spill_cap=self.spill_cap,
             cache_on=self.cache_on, disk_root=disk_root,
             block_bytes=block_bytes, n_io_threads=self.n_io_threads,
@@ -464,6 +486,7 @@ class ResolvedPlan:
     quant: Optional[str]
     kv_mode: Optional[str]       # fp32|int4 streamed KV; None on resident
     fused_int4: bool
+    moe_quant: Optional[str]     # int4-resident expert stacks; resident only
     warm: bool
     depth: int                   # 0 on the resident engine
     depth_policy: str
@@ -686,24 +709,62 @@ def preload_policy_for(plan: ResolvedPlan,
 
 
 class QuantPolicy:
-    """What crosses the offload link quantized.  ``weight_mode`` feeds
+    """What lives or crosses the link quantized.  ``weight_mode`` feeds
     ``TieredWeightStore`` (packing + dequant-on-load); ``prepare_unit``
     packs a unit's tensors host-side at build time; ``kv_mode`` feeds
     ``core.kvstore.TieredKVStore`` — ``"fp32"`` streams the cache at
     compute precision (bit-exact with the pre-store engines), ``"int4"``
     stores/streams cache rows group-quantized (packed nibbles + scales,
-    dequant fused into the consuming jit; the PR-4 seam, now live)."""
+    dequantized post-link on the transfer thread).  ``moe_quant``
+    (resident engine) packs the routed expert stacks ONCE at load
+    (``prepare_moe_params``); compute unpacks them per step through the
+    fused-int4 path (``models.layers._dequant_moe_stacks``)."""
 
     name = "none"
     weight_mode: Optional[str] = None
 
-    def __init__(self, kv_mode: Optional[str] = "fp32"):
+    def __init__(self, kv_mode: Optional[str] = "fp32",
+                 moe_quant: Optional[str] = None):
         self.kv_mode = kv_mode or "fp32"
         if self.kv_mode not in ("fp32", "int4"):
             raise SpecError(f"kv_mode {kv_mode!r} not in {KV_MODES}")
+        self.moe_quant = moe_quant
+        if self.moe_quant not in QUANT_MODES:
+            raise SpecError(f"moe_quant {moe_quant!r} not in {QUANT_MODES}")
 
     def prepare_unit(self, tensors: Dict[str, Any]) -> Dict[str, Any]:
         return tensors
+
+    def prepare_moe_params(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Pack the resident model's routed expert stacks as INT4
+        (``moe_quant='int4'``; identity otherwise): every MoE layer
+        table (marked by its router ``wg``) gets its eligible
+        ``w_gate``/``w_up``/``w_down`` stacks replaced by ``#q``/``#s``
+        leaves — all three or none, so the consuming dequant never sees
+        a half-packed table.  Router and shared experts stay at compute
+        precision (tiny, and consumed every step)."""
+        if self.moe_quant != "int4":
+            return params
+        from repro.quant.int4 import quantize_int4_stack, stack_eligible
+        stacks = ("w_gate", "w_up", "w_down")
+
+        def pack(table):
+            if "wg" not in table or not all(
+                    name in table and stack_eligible(table[name].shape)
+                    for name in stacks):
+                return table
+            out = dict(table)
+            for name in stacks:
+                packed, scale = quantize_int4_stack(out.pop(name))
+                out[name + "#q"], out[name + "#s"] = packed, scale
+            return out
+
+        out = dict(params)
+        for part in ("pat", "rem"):
+            if part in out:
+                out[part] = tuple(pack(t) if isinstance(t, dict) else t
+                                  for t in out[part])
+        return out
 
 
 class WeightsInt4(QuantPolicy):
@@ -720,11 +781,12 @@ class WeightsInt4(QuantPolicy):
 
 
 def quant_policy_for(quant: Optional[str],
-                     kv_mode: Optional[str] = "fp32") -> QuantPolicy:
+                     kv_mode: Optional[str] = "fp32",
+                     moe_quant: Optional[str] = None) -> QuantPolicy:
     if quant == "int4":
-        return WeightsInt4(kv_mode)
+        return WeightsInt4(kv_mode, moe_quant)
     if quant is None:
-        return QuantPolicy(kv_mode)
+        return QuantPolicy(kv_mode, moe_quant)
     raise SpecError(f"quant {quant!r} not in {QUANT_MODES}")
 
 
@@ -750,16 +812,18 @@ def create_engine(plan: "ResolvedPlan | EngineSpec"):
 def build_lm(plan: "ResolvedPlan | EngineSpec"):
     """Batch-generation twin of ``create_engine``: a ``PipelinedLM``
     configured from the plan (``b_max`` is its batch; the resident case
-    maps to placement='device').  ``kv_mode='int4'`` is rejected rather
-    than silently ignored: PipelinedLM still ships whole-slab fp32 KV
-    (ROADMAP gap) and a plan's fields must be obeyed, not dropped."""
+    maps to placement='device').  ``kv_mode`` routes through the same
+    ``TieredKVStore`` serving uses — live-row slicing and INT4 KV
+    streaming apply to batch generation too (host cache; a
+    device-resident cache never crosses the link, so ``kv_mode='int4'``
+    with ``cache_on='device'`` is rejected as contradictory)."""
     if isinstance(plan, EngineSpec):
         plan = plan.resolve()
-    if plan.kv_mode == "int4":
+    if plan.kv_mode == "int4" and plan.cache_on == "device":
         raise SpecError(
-            "kv_mode='int4' is a serving-engine feature (TieredKVStore); "
-            "PipelinedLM does not stream quantized KV yet — drop kv_mode "
-            "or use create_engine(plan)")
+            "kv_mode='int4' streams the cache over the link; with "
+            "cache_on='device' nothing crosses — drop kv_mode or use "
+            "cache_on='host'")
     from repro.core.engine import PipelinedLM
     return PipelinedLM(plan)
 
@@ -817,6 +881,11 @@ CLI_FLAGS: Tuple[FlagSpec, ...] = (
                   "and streams them group-quantized (~1/3 the bf16 "
                   "bytes after group scales, dequant fused into decode "
                   "compute — see docs/TUNING.md)"),
+    FlagSpec("--moe-quant", "moe_quant", choices=("int4",),
+             help="pack the resident engine's routed expert stacks as "
+                  "INT4 once at load (~1/7 the f32 resident bytes incl. "
+                  "scales); compute unpacks through the fused-int4 path "
+                  "(MoE archs only — see docs/TUNING.md)"),
     FlagSpec("--no-warm", "warm", kind="false",
              help="disable cross-step preloading (cold per-step "
                   "pipeline, the pre-warm baseline)"),

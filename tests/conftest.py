@@ -28,3 +28,14 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "slow" in item.keywords:
             item.add_marker(skip_slow)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_deprecation_warnings():
+    """Deprecation warnings are deduped once per process
+    (``warn_deprecated_once``); reset the dedup set per TEST so every
+    test observes the warnings its own calls trigger, regardless of
+    which test touched the legacy path first."""
+    from repro.serving.spec import reset_deprecation_warnings
+    reset_deprecation_warnings()
+    yield

@@ -1,11 +1,15 @@
-"""PipelinedLM end-to-end: placements/pipeline modes agree token-for-token;
-INT4 engine runs; memory accounting sane."""
+"""PipelinedLM end-to-end: placements/pipeline modes/cache tiers agree
+token-for-token; INT4 weights and INT4-streamed KV hold parity; the
+tiered-KV trace accounts live-extent bytes and dequant cost."""
 import numpy as np
 import pytest
 
 from repro.configs.base import (ATTN, DENSE, MOE, LayerSpec, ModelConfig,
                                 MoEConfig)
 from repro.core.engine import PipelinedLM
+from repro.core.kvstore import kv_group, kv_roundtrip_rows
+from repro.core.pipeline import VirtualPool
+from repro.core.tasks import TaskType
 
 CFG = ModelConfig(name="pipo-tiny", num_layers=3, d_model=128, num_heads=4,
                   num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
@@ -37,6 +41,145 @@ def test_placements_agree(tmp_path):
     toks_disk, _ = _gen("disk", "performance", tmp_path)
     np.testing.assert_array_equal(toks_dev, toks_host)
     np.testing.assert_array_equal(toks_dev, toks_disk)
+
+
+def test_cache_tiers_agree(tmp_path):
+    """cache_on='device' (KV never crosses the link) generates the same
+    tokens as the tiered host cache — the device path's KV_SAVE really
+    persists the updated cache."""
+    toks_host, _ = _gen("host", "performance", tmp_path)
+    toks_dev, _ = _gen("host", "performance", tmp_path, cache_on="device")
+    np.testing.assert_array_equal(toks_host, toks_dev)
+    toks_dev_seq, _ = _gen("host", "sequential", tmp_path,
+                           cache_on="device")
+    np.testing.assert_array_equal(toks_host, toks_dev_seq)
+
+
+class _RoundtripKVLM(PipelinedLM):
+    """fp32-cache engine whose saves roundtrip rows through the INT4
+    quantize->dequantize — the bit-exact reference for kv_mode='int4'
+    (mirrors serving's KVRoundtripServingEngine)."""
+
+    def save_kv(self, i, j, new_kv):
+        phase, k, v, pos, length = new_kv
+
+        def rt(r):
+            r = np.asarray(r, np.float32)
+            b, s = r.shape[:2]
+            F = int(np.prod(r.shape[2:]))
+            flat = r.reshape(b, s, F)
+            return np.asarray(kv_roundtrip_rows(flat, kv_group(F))
+                              ).reshape(r.shape)
+
+        super().save_kv(i, j, (phase, rt(k), rt(v), pos, length))
+
+
+def test_int4_kv_parity(tmp_path):
+    """kv_mode='int4' decode == fp32 decode over roundtripped cache rows:
+    quantize-at-save / transfer-thread-dequant-at-load is the ONLY
+    difference from the fp32 path, so tokens match bit-for-bit."""
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 512, (2, 12)).astype(np.int32)
+    ref = _RoundtripKVLM(CFG, batch=2, max_len=48, placement="host",
+                         pipeline="performance",
+                         disk_root=str(tmp_path / "ref"))
+    toks_ref, _ = ref.generate(prompt, gen_len=6)
+    lm = PipelinedLM(CFG, batch=2, max_len=48, placement="host",
+                     pipeline="performance", kv_mode="int4",
+                     disk_root=str(tmp_path / "int4"))
+    toks, _ = lm.generate(prompt, gen_len=6)
+    np.testing.assert_array_equal(toks_ref, toks)
+    # and the quantization is real: plain fp32 tokens may differ
+    assert lm.kvstore.dequant_bytes_total > 0
+
+
+def _virtual_gen(tmp, kv_mode, cost_fn=None, gen_len=6):
+    lm = PipelinedLM(CFG, batch=2, max_len=48, placement="host",
+                     pipeline="performance", kv_mode=kv_mode,
+                     disk_root=str(tmp / f"v_{kv_mode}_{id(cost_fn)}"))
+    pool = VirtualPool(3, cost_fn=cost_fn)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 512, (2, 12)).astype(np.int32)
+    toks, _ = lm.generate(prompt, gen_len=gen_len, pool=pool)
+    return lm, pool.trace, toks
+
+
+def test_kv_trace_live_extent_bytes(tmp_path):
+    """Virtual-clock byte accounting for PipelinedLM-through-the-store:
+    every KV_LOAD event carries the live (batch, positions) extent, its
+    bytes equal the store's live-row answer (never the slab), the
+    per-kind report derives a bandwidth, and INT4 shrinks the same
+    events' bytes."""
+    lm, trace, _ = _virtual_gen(tmp_path, None)
+    kv_loads = [e for e in trace.events()
+                if e.kind == "kv_load" and e.extent is not None]
+    assert kv_loads
+    prompt_len = 12
+    for e in kv_loads:
+        i, j = map(int, e.name[3:-1].split(","))
+        live = min(prompt_len + i - 1, lm.max_len)
+        assert e.extent == (2, live), e.name
+        assert e.nbytes == lm.kvstore.load_nbytes(j, 2, live)
+        assert e.nbytes < lm.kvstore.load_nbytes(j)          # < slab
+    rep = trace.report()["per_kind"]
+    assert rep["kv_load"]["bytes"] == sum(e.nbytes for e in kv_loads)
+    assert rep["kv_load"]["bw_Bps"] > 0
+    # saves are accounted too: one prefill payload + one row per step
+    assert rep["kv_save"]["bytes"] > 0
+
+    lm4, trace4, _ = _virtual_gen(tmp_path, "int4")
+    kv4 = [e for e in trace4.events()
+           if e.kind == "kv_load" and e.extent is not None]
+    assert [e.name for e in kv4] == [e.name for e in kv_loads]
+    for e, e4 in zip(kv_loads, kv4):
+        assert e4.nbytes < e.nbytes // 4      # packed rows + scales
+    # transfer-thread dequant cost is bounded by the live extents the
+    # trace recorded — not by the slab
+    expect = sum(lm4.kvstore.dequant_nbytes(
+        int(e.name[3:-1].split(",")[1]), *e.extent) for e in kv4)
+    assert lm4.kvstore.dequant_bytes_total == expect
+    slab_priced = sum(lm4.kvstore.dequant_nbytes(
+        int(e.name[3:-1].split(",")[1])) for e in kv4)
+    assert lm4.kvstore.dequant_bytes_total < slab_priced
+
+
+def test_int4_kv_wins_at_depth1_on_virtual_clock(tmp_path):
+    """The PR-5 inversion, fixed: with KV_LOAD priced as link time +
+    transfer-thread dequant time, INT4 KV at depth 1 is strictly faster
+    than fp32 — because the dequant now costs the live extent.  Pricing
+    the dequant at the slab (the old in-jit ``device_cache`` behaviour)
+    reproduces the inversion."""
+    BW, DEQ_BW = 1e9, 4e9
+
+    def price(lm, slab):
+        def cost(task):
+            if task.kind == TaskType.KV_LOAD and task.nbytes:
+                j = int(task.name[3:-1].split(",")[1])
+                deq = (lm.kvstore.dequant_nbytes(j) if slab
+                       else lm.kvstore.dequant_nbytes(j, *task.extent))
+                return task.nbytes / BW + deq / DEQ_BW
+            if task.kind == TaskType.COMPUTE:
+                return 2e-6
+            return 1e-6              # KV-bound link: KV transfers dominate
+        return cost
+
+    def run(kv_mode, slab=False):
+        lm = PipelinedLM(CFG, batch=2, max_len=48, placement="host",
+                         pipeline="performance", kv_mode=kv_mode,
+                         disk_root=str(tmp_path / f"w_{kv_mode}_{slab}"))
+        pool = VirtualPool(3, cost_fn=price(lm, slab))
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, 512, (2, 12)).astype(np.int32)
+        lm.generate(prompt, gen_len=6, pool=pool)
+        return pool.trace.report()
+
+    fp32 = run(None)
+    int4 = run("int4")
+    int4_slab = run("int4", slab=True)
+    busy = lambda r: r["per_kind"]["kv_load"]["busy_s"]
+    assert busy(int4) < busy(fp32)                  # the recovered win
+    assert int4["span_s"] < fp32["span_s"]
+    assert busy(int4_slab) > busy(fp32)             # the old inversion
 
 
 def test_int4_engine_runs(tmp_path):

@@ -4,21 +4,30 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")  # optional test dep
-from hypothesis import given, settings, strategies as st
+try:                                  # optional test dep: only the
+    from hypothesis import given, settings, strategies as st
+except ImportError:                   # property test needs it
+    given = None
 
-from repro.quant.int4 import (dequantize_int4, pack_int4, quantize_int4,
-                              quantize_tree, unpack_int4)
+from repro.quant.int4 import (dequantize_int4, dequantize_int4_stack,
+                              pack_int4, quantize_int4, quantize_int4_stack,
+                              quantize_tree, stack_eligible, stack_group,
+                              unpack_int4)
 
 KEY = jax.random.PRNGKey(0)
 
 
-@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
-@settings(max_examples=25, deadline=None)
-def test_pack_unpack_bijection(kd2, nd2, seed):
-    K, N = 2 * kd2, 2 * nd2
-    q = jax.random.randint(jax.random.PRNGKey(seed), (K, N), -8, 8)
-    assert (unpack_int4(pack_int4(q)) == q).all()
+if given is not None:
+    @given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_pack_unpack_bijection(kd2, nd2, seed):
+        K, N = 2 * kd2, 2 * nd2
+        q = jax.random.randint(jax.random.PRNGKey(seed), (K, N), -8, 8)
+        assert (unpack_int4(pack_int4(q)) == q).all()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_pack_unpack_bijection():
+        pass
 
 
 def test_quantize_error_bound():
@@ -42,6 +51,39 @@ def test_quantize_tree_selects_eligible():
     assert "big" in quantized and len(quantized) == 1
     assert set(qt["big"]) == {"packed", "scale"}
     assert qt["small"].shape == (4, 4)
+
+
+def test_stack_quantize_matches_per_slice():
+    """quantize_int4_stack over (E, K, N) == quantize_int4 per slice —
+    one layout, vmapped; the group defaults to gcd(K, 128) so small
+    contraction dims (MoE expert stacks) stay eligible."""
+    w = jax.random.normal(KEY, (3, 2, 64, 32), jnp.float32)
+    g = stack_group(64)
+    assert g == 64
+    packed, scale = quantize_int4_stack(w)
+    assert packed.shape == (3, 2, 64, 16) and packed.dtype == jnp.uint8
+    assert scale.shape == (3, 2, 1, 32)
+    for i in range(3):
+        for j in range(2):
+            p2, s2 = quantize_int4(w[i, j], g)
+            assert (np.asarray(packed[i, j]) == np.asarray(p2)).all()
+            np.testing.assert_array_equal(np.asarray(scale[i, j]),
+                                          np.asarray(s2))
+    # roundtrip with the group inferred from shapes alone
+    deq = dequantize_int4_stack(packed, scale, jnp.float32)
+    ref = dequantize_int4(p2, s2, jnp.float32, g)
+    np.testing.assert_array_equal(np.asarray(deq[2, 1]), np.asarray(ref))
+    err = jnp.abs(deq - w)
+    bound = jnp.repeat(scale, g, axis=-2) * 0.5 + 1e-6
+    assert bool((err <= bound).all())
+
+
+def test_stack_eligible():
+    assert stack_eligible((4, 64, 32))          # expert stack
+    assert stack_eligible((2, 4, 64, 32))       # periods-stacked
+    assert not stack_eligible((64, 32))         # 2-D: _maybe_quant's job
+    assert not stack_eligible((4, 64, 31))      # odd N
+    assert not stack_eligible((4, 9, 32))       # gcd(9,128)=1 < 16
 
 
 def test_bytes_saved():

@@ -342,13 +342,17 @@ def test_preload_policy_for_uses_plan_budget():
     assert pol.budget.device == 123 << 20 and pol.budget.host == 7 << 30
 
 
-def test_build_lm_rejects_int4_kv():
-    """PipelinedLM doesn't stream quantized KV (ROADMAP gap): a
-    kv_mode='int4' plan must be rejected, not silently downgraded —
-    plans are obeyed or refused."""
-    spec = _spec(offload=True, b_max=1, max_len=32, kv_mode="int4")
+def test_build_lm_int4_kv():
+    """PipelinedLM streams quantized KV through the tiered store (the
+    PR-5 gap, now closed): a kv_mode='int4' host-cache plan builds, and
+    the nonsensical combination — int4 KV with a device-resident cache,
+    where nothing ever crosses the link — is rejected, not silently
+    downgraded (plans are obeyed or refused)."""
+    lm = build_lm(_spec(offload=True, b_max=1, max_len=32, kv_mode="int4"))
+    assert lm.kv_mode == "int4" and lm.kvstore is not None
     with pytest.raises(SpecError, match="kv_mode"):
-        build_lm(spec)
+        build_lm(_spec(offload=True, b_max=1, max_len=32, kv_mode="int4",
+                       cache_on="device"))
     # the default (auto -> fp32) builds fine
     build_lm(_spec(offload=True, b_max=1, max_len=32))
 

@@ -21,7 +21,7 @@ Four checks over README.md and docs/*.md:
    serving/benchmark knob fails the check instead of leaving the tuning
    guide pointing at a flag that no longer exists.
 
-Plus one structural check:
+Plus structural checks:
 
 5. flag<->spec three-way consistency: `serving.spec.CLI_FLAGS` (the
    single flag<->field table), the LIVE `launch.serve` argparse (built
@@ -31,6 +31,11 @@ Plus one structural check:
    a real spec field, and every spec field is either in the table or in
    the declared no-flag set.  A knob added in one place but not the
    others fails CI.
+
+6. benchmark scenarios: the scenario table in `docs/BENCHMARKS.md` and
+   `benchmarks/run.py::BENCHES` must list the same names, both ways — a
+   scenario added to the harness without a methodology row (or a
+   documented scenario that was renamed/removed) fails CI.
 
 Run locally:  python tools/check_docs.py
 """
@@ -101,6 +106,29 @@ def check_spec_cli_consistency(errors: list):
     if dup:
         errors.append(f"spec table maps multiple flags to field(s) "
                       f"{sorted(dup)}")
+
+
+def check_bench_scenarios(errors: list):
+    """Check 6: docs/BENCHMARKS.md's scenario table vs
+    ``benchmarks/run.py::BENCHES``, both directions.  run.py's top level
+    imports numpy/argparse only, so loading it here is cheap."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "_pipo_bench_run", ROOT / "benchmarks" / "run.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    bench_names = {b.__name__ for b in mod.BENCHES}
+    # scenario-table rows: the only BENCHMARKS.md table whose first
+    # column is a backticked identifier
+    table_names = set(re.findall(
+        r"^\|\s*`([a-z0-9_]+)`", (ROOT / "docs" / "BENCHMARKS.md")
+        .read_text(), re.M))
+    for n in sorted(bench_names - table_names):
+        errors.append(f"benchmarks/run.py scenario {n!r} has no row in "
+                      f"docs/BENCHMARKS.md's scenario table")
+    for n in sorted(table_names - bench_names):
+        errors.append(f"docs/BENCHMARKS.md scenario `{n}` is not in "
+                      f"benchmarks/run.py BENCHES")
 
 
 def doc_flags(text: str):
@@ -192,6 +220,7 @@ def main() -> int:
     commands: list[str] = []
     cli_flags = known_cli_flags()
     check_spec_cli_consistency(errors)
+    check_bench_scenarios(errors)
     for md in DOC_FILES:
         if not md.exists():
             errors.append(f"missing doc file: {md.relative_to(ROOT)}")
