@@ -145,6 +145,34 @@ def serving_depth_decision(cfg: ModelConfig, *, b_max: int, max_len: int,
                f"cap {depth_cap})")
 
 
+def replay_depth_decision(trace, *, depth_cap: int = 8,
+                          quant: Optional[str] = None,
+                          kv_mode: Optional[str] = None,
+                          sim_bw: Optional[float] = None,
+                          start_iter: Optional[int] = None,
+                          stop_iter: Optional[int] = None) -> tuple:
+    """Preload depth as a (depth, why) decision from a recorded trace:
+    ``core.replay.best_depth`` sweeps the window 1..depth_cap through
+    the simulator and the argmin wins — measured argmin instead of the
+    closed-form heuristic.  ``depth_cap`` stays the memory model's job
+    (the simulator knows time, not residency), so callers pass the
+    capacity-fit cap in.  The why string records the per-depth
+    predictions and names ``replay`` as the source —
+    ``EngineSpec.resolve(budget, trace=...)`` stores it as the depth
+    field's provenance."""
+    from repro.core.replay import ReplayKnobs, best_depth
+    knobs = ReplayKnobs(quant="fp32" if quant is None else quant,
+                        kv_mode="fp32" if kv_mode is None else kv_mode,
+                        sim_bw=sim_bw)
+    d, preds = best_depth(trace, depth_cap=depth_cap, knobs=knobs,
+                          start_iter=start_iter, stop_iter=stop_iter)
+    table = ", ".join(f"d{k}={v * 1e3:.2f}ms" for k, v in
+                      sorted(preds.items()))
+    return d, (f"simulated argmin over depths 1..{depth_cap}: depth {d} "
+               f"predicts the fastest steady step ({table}) "
+               f"(source=replay)")
+
+
 def serving_preload_depth(cfg: ModelConfig, *, b_max: int, max_len: int,
                           precision_bytes: int = 4,
                           quant: Optional[str] = None,

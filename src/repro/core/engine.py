@@ -465,6 +465,11 @@ class PipelinedLM:
                                   warm=self.pipeline_mode == "performance",
                                   depth=self.depth)
         self._pool = sched.pool
+        # link/precision stamps: a dumped trace replays without the model
+        self.trace.meta.update(
+            arch=cfg.name, b_max=self.batch, max_len=self.max_len,
+            sim_bw=self.plan.sim_bw, quant=self.quant,
+            kv_mode=self.kv_mode)
         t0 = time.perf_counter()
         outs = []
 

@@ -51,6 +51,7 @@ class ThreadPool:
 
     def __init__(self, n_threads: int = 3, trace: Optional[Trace] = None):
         self.trace = trace or Trace()
+        self.n_workers = n_threads
         self._q: "queue.PriorityQueue" = queue.PriorityQueue()
         self._seq = 0
         self._stop = False
@@ -120,6 +121,7 @@ class VirtualPool:
         self.clock = clock or VirtualClock()
         self.trace = trace if trace is not None else Trace(clock=self.clock)
         self.cost_fn = cost_fn or (lambda task: 1.0)
+        self.n_workers = n_threads
         self._free = [0.0] * n_threads
 
     def submit(self, task: Task, priority: int = 0) -> Task:
@@ -226,6 +228,15 @@ class PipelineScheduler:
         self._kv_tasks: Dict[tuple, Task] = {}       # (i, j) -> pending load
         self._save_tasks: Dict[tuple, Task] = {}     # (i, j) -> pending save
         self._iter0 = 0                              # global iteration base
+        # stamp the replayable scheduling context on the trace: with the
+        # per-call iteration counts generate() appends, core.replay can
+        # re-run the recorded schedule under hypothetical knobs
+        self.trace.meta.update(
+            mode=self.mode, warm=self.warm, depth=self.depth,
+            n_units=self.n,
+            pool_size=getattr(self.pool, "n_workers", None)
+            or self.pool_size(self.depth))
+        self.trace.meta.setdefault("calls", [])
 
     # -- helpers ------------------------------------------------------------
     @staticmethod
@@ -315,6 +326,7 @@ class PipelineScheduler:
         w_tasks, kv_tasks, save_tasks = (self._w_tasks, self._kv_tasks,
                                          self._save_tasks)
         base = self._iter0
+        self.trace.meta.setdefault("calls", []).append(num_iterations)
         total = n * num_iterations             # call-local position count
         outputs = []
         nbytes_of = getattr(model, "weight_nbytes", None)

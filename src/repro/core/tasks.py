@@ -18,6 +18,7 @@ sleeps) in tests and the wall clock in production.  See
 """
 from __future__ import annotations
 
+import json
 import threading
 import time
 from dataclasses import dataclass, field
@@ -156,6 +157,11 @@ class Trace:
         self._lock = threading.Lock()
         self.clock = clock
         self.t0 = clock.now()
+        # replayable context: schedulers/pools/engines stamp the knobs the
+        # trace was recorded under (mode, warm, depth, pool_size, per-call
+        # iteration counts, sim_bw, quant, kv_mode ...) so ``core.replay``
+        # can rebuild the run without the model.  Serialized by to_json.
+        self.meta: Dict[str, Any] = {}
 
     def add(self, task: Task, thread: str):
         with self._lock:
@@ -167,6 +173,42 @@ class Trace:
     def events(self):
         with self._lock:
             return list(self._events)
+
+    # -- (de)serialization --------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot: ``meta`` + every event, timestamps
+        already relative to the trace origin.  Committable as a golden
+        fixture; ``from_json`` rebuilds an equivalent trace for
+        ``core.replay`` (extent tuples survive the list round-trip)."""
+        return {
+            "meta": dict(self.meta),
+            "events": [
+                {"kind": e.kind, "name": e.name, "t_start": e.t_start,
+                 "t_end": e.t_end, "thread": e.thread, "nbytes": e.nbytes,
+                 "extent": None if e.extent is None else list(e.extent)}
+                for e in self.events()],
+        }
+
+    @classmethod
+    def from_json(cls, d: "Dict[str, Any] | str") -> "Trace":
+        """Rebuild a trace from ``to_json`` output (dict or JSON string).
+        The result reads back identically (events/meta/report); its clock
+        is a fresh ``VirtualClock`` so t0 is 0, matching the already-
+        relative recorded timestamps."""
+        if isinstance(d, str):
+            d = json.loads(d)
+        unknown = set(d) - {"meta", "events"}
+        if unknown:
+            raise ValueError(f"unknown Trace JSON key(s) {sorted(unknown)}")
+        tr = cls(clock=VirtualClock())
+        tr.meta = dict(d.get("meta", {}))
+        for ev in d.get("events", []):
+            ext = ev.get("extent")
+            tr._events.append(TraceEvent(
+                ev["kind"], ev["name"], ev["t_start"], ev["t_end"],
+                ev.get("thread", ""), ev.get("nbytes", 0),
+                None if ext is None else tuple(ext)))
+        return tr
 
     def span(self) -> float:
         evs = self.events()
@@ -207,7 +249,12 @@ class Trace:
         evs = self.events()
         span = self.span()
         per_kind = {}
-        for kind in (t.value for t in TaskType):
+        # the four task types always get a bucket (zeroed when absent);
+        # kinds the schema doesn't know (hand-built or future traces) get
+        # their own bucket instead of silently vanishing from the report
+        kinds = [t.value for t in TaskType]
+        kinds += sorted({e.kind for e in evs} - set(kinds))
+        for kind in kinds:
             sub = [e for e in evs if e.kind == kind]
             ivals = [(e.t_start, e.t_end) for e in sub]
             busy = _merged_busy(ivals)

@@ -22,6 +22,12 @@ request (the end-to-end plan smoke):
   PYTHONPATH=src python -m repro.launch.dryrun --serving --all
   PYTHONPATH=src python -m repro.launch.dryrun --serving \
       --arch tinyllama-1.1b --scaled
+
+Trace-replay what-if sweep (--replay): predict step time + link bytes
+per (depth, quant, kv-mode) knob point from a recorded trace, offline
+(``core.replay``; see docs/TUNING.md):
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --replay tests/fixtures/trace_warm_d1.json
 """
 import argparse
 import json
@@ -183,6 +189,39 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     return row
 
 
+def replay_dryrun(path: str):
+    """Offline what-if table over a recorded trace (``--replay``): load
+    the ``Trace.to_json`` dump, then sweep the knobs through the
+    ``core.replay`` simulator — preload depth x weight/KV precision —
+    printing the predicted steady step time and per-step link volume of
+    every point.  No model build, no hardware: capacity planning from a
+    single recording."""
+    from repro.core.replay import ReplayKnobs, replay
+    from repro.core.tasks import Trace
+
+    tr = Trace.from_json(Path(path).read_text())
+    m = tr.meta
+    bw = m.get("sim_bw")
+    print(f"[TRACE] {path}: arch={m.get('arch', '?')} "
+          f"mode={m.get('mode', '?')} warm={m.get('warm', '?')} "
+          f"depth={m.get('depth', '?')} quant={m.get('quant') or 'fp32'} "
+          f"kv={m.get('kv_mode') or 'fp32'} "
+          f"sim_bw={f'{bw / 1e9:.2f}GB/s' if bw else 'n/a'} "
+          f"events={len(tr.events())}")
+    base = replay(tr).steady_step_s         # knobs exactly as recorded
+    print(f"{'depth':>5s} {'weights':>8s} {'kv':>5s} {'step_ms':>8s} "
+          f"{'link_MB/step':>12s} {'vs_recorded':>11s}")
+    for depth in (1, 2, 3, 4):
+        for wq, kv in ((None, None), ("int4", None), ("int4", "int4")):
+            res = replay(tr, ReplayKnobs(depth=depth, quant=wq, kv_mode=kv))
+            b = res.bytes_by_kind
+            link_mb = (b["weight_load"] + b["kv_load"] + b["kv_save"]) \
+                / max(1, len(res.step_times_s)) / 2**20
+            print(f"{depth:5d} {wq or 'rec':>8s} {kv or 'rec':>5s} "
+                  f"{res.steady_step_s * 1e3:8.2f} {link_mb:12.2f} "
+                  f"{base / max(1e-12, res.steady_step_s):10.2f}x")
+
+
 def serving_dryrun(arch, scaled: bool, run_all: bool):
     """Resolve serving plans through the EngineSpec API.  Per arch: one
     plan row (engine/placement/depth + provenance).  Single-arch scaled
@@ -234,8 +273,18 @@ def main():
     ap.add_argument("--scaled", action="store_true",
                     help="(--serving) resolve/build the scaled smoke "
                          "config instead of the full-size one")
+    ap.add_argument("--replay", metavar="TRACE_JSON", default=None,
+                    help="offline knob sweep over a recorded trace "
+                         "(Trace.to_json dump): predicted steady step "
+                         "time + link bytes per (depth, quant, kv-mode) "
+                         "point via core.replay — no model build, no "
+                         "hardware (see docs/TUNING.md)")
     args = ap.parse_args()
     out_dir = Path(args.out)
+
+    if args.replay:
+        replay_dryrun(args.replay)
+        return
 
     if args.serving:
         serving_dryrun(args.arch, args.scaled, args.all)

@@ -256,6 +256,12 @@ class OffloadedServingEngine(SlotEngineBase):
         self.sched = PipelineScheduler(len(self.units), plan.pipeline,
                                        pool=pool, trace=self.trace,
                                        warm=self.warm, depth=depth)
+        # stamp the link/precision knobs next to the scheduler's context
+        # so a dumped trace is self-describing for core.replay
+        self.trace.meta.update(
+            arch=plan.arch, b_max=plan.b_max, max_len=plan.max_len,
+            sim_bw=plan.sim_bw, quant=plan.quant,
+            kv_mode=plan.kv_mode or "fp32")
         self._jit_units()
 
     @staticmethod

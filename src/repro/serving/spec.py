@@ -273,11 +273,21 @@ class EngineSpec:
         self.model_config()          # arch resolvable (raises SpecError)
 
     # ---- resolution ------------------------------------------------------
-    def resolve(self, budget: Optional[MemoryBudget] = None) -> "ResolvedPlan":
+    def resolve(self, budget: Optional[MemoryBudget] = None,
+                trace=None) -> "ResolvedPlan":
         """Materialize every auto field against ``budget`` (paper §3.5 /
         Eq. 1 via ``core.autoconfig``), recording each decision's why in
-        the plan's provenance map."""
+        the plan's provenance map.
+
+        ``trace`` (a recorded ``core.tasks.Trace``, e.g. loaded with
+        ``Trace.from_json``) switches depth resolution from the
+        closed-form heuristic to the trace-replay simulator
+        (``core.replay``): the memory model still sets the affordable
+        cap, but WITHIN the cap the simulated-argmin depth wins and the
+        provenance records ``replay`` as the source.  Explicit depths
+        and non-performance pipelines ignore the trace."""
         from repro.core.autoconfig import (choose_placement,
+                                           replay_depth_decision,
                                            serving_depth_decision)
         self.validate()
         budget = budget or MemoryBudget()
@@ -401,6 +411,20 @@ class EngineSpec:
                     placement=placement, budget=budget)
                 depth = d
                 prov["depth"] = f"auto: {why}"
+                if trace is not None:
+                    # the memory model's fit is the cap; within it the
+                    # simulated argmin from the recorded trace wins
+                    from repro.core.replay import ReplayError
+                    try:
+                        d, why = replay_depth_decision(
+                            trace, depth_cap=max(1, d), quant=quant,
+                            kv_mode=kv_mode, sim_bw=self.sim_bw)
+                        depth = d
+                        prov["depth"] = f"replay: {why}"
+                    except ReplayError as e:
+                        prov["depth"] += (f"; trace given but not "
+                                          f"replayable ({e}), kept the "
+                                          f"heuristic depth")
             depth_policy = self.depth_policy
             if depth_policy == "adaptive":
                 prov["depth_policy"] = (

@@ -1,0 +1,352 @@
+"""core.replay: deterministic trace replay + simulated depth argmin.
+
+All workloads here run on the virtual clock (tests/fake_model.py), so
+every assertion is exact — no wall-clock, no tolerance fudging except
+where the ISSUE's <10% predicted-vs-measured criterion is itself the
+contract.  Coverage:
+
+  * golden-fixture regression: replaying a committed recording with
+    unchanged knobs reproduces its step times AND its full event
+    multiset bit-for-bit (plus a freshness check that the fixtures
+    still match what tools/make_trace_fixtures.py would emit);
+  * property tests (hypothesis, skipped when not installed): replay is
+    deterministic across runs, monotone in ``sim_bw``, and
+    ``best_depth``/``replay_depth_decision`` never exceed the cap;
+  * predicted vs measured on byte-driven virtual workloads at depth
+    {1,2} x kv_mode {fp32,int4}: relative error < 10%;
+  * ``EngineSpec.resolve(budget, trace=...)`` picks the same depth as
+    the measured-best static depth, with ``replay`` provenance, and
+    falls back to the heuristic on an unreplayable trace.
+"""
+import dataclasses
+import importlib.util
+import itertools
+import json
+from pathlib import Path
+
+import pytest
+
+from fake_model import COSTS, NBYTES, FakeModel, run_virtual, run_virtual_moe
+from repro.core.autoconfig import replay_depth_decision
+from repro.core.memory_model import quant_kv_ratio
+from repro.core.pipeline import PipelineScheduler, VirtualPool
+from repro.core.replay import (ReplayError, ReplayKnobs, best_depth, replay,
+                               steady_step_s, step_times)
+from repro.core.tasks import TaskType, Trace
+from repro.serving import EngineSpec
+
+try:                                  # optional test dep: only the
+    from hypothesis import given, settings, strategies as st
+except ImportError:                   # property tests need it
+    given = None
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+# recorded step times of the committed golden fixtures (first step
+# includes the pipeline fill) — regenerate with
+# PYTHONPATH=src python tools/make_trace_fixtures.py
+GOLDEN = {
+    "trace_warm_d1.json": [64.0, 60.0, 60.0],
+    "trace_warm_d2.json": [44.0, 30.0, 30.0, 30.0],
+}
+
+
+def _load(name):
+    return Trace.from_json((FIXTURES / name).read_text())
+
+
+def _ev_key(e):
+    return (e.kind, e.name, e.t_start, e.t_end, e.nbytes, e.extent)
+
+
+# ---------------------------------------------------------------------------
+# golden-fixture regression: bit-for-bit with unchanged knobs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_fixture_replay_bit_for_bit(name):
+    rec = _load(name)
+    assert step_times(rec) == GOLDEN[name]
+    res = replay(rec)                      # no knobs: as recorded
+    assert res.step_times_s == GOLDEN[name]
+    assert res.steady_step_s == steady_step_s(rec)
+    # the entire simulated timeline matches the recording, not just the
+    # step boundaries (threads differ only in pool-worker naming, which
+    # the recording also used, so compare full event multisets)
+    assert (sorted(map(_ev_key, res.trace.events()))
+            == sorted(map(_ev_key, rec.events())))
+    assert res.trace.meta["replayed"] is True
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_fixture_matches_generator(name):
+    """The committed fixture is exactly what the generator would write —
+    scheduler or fake-model changes that alter the recorded timeline
+    must show up as a reviewed fixture diff, not silent drift."""
+    spec = importlib.util.spec_from_file_location(
+        "make_trace_fixtures",
+        Path(__file__).parent.parent / "tools" / "make_trace_fixtures.py")
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+    kwargs = dict(gen.CASES)[name]
+    want = json.dumps(gen.build(kwargs), indent=1, sort_keys=True) + "\n"
+    assert (FIXTURES / name).read_text() == want
+
+
+def test_replay_deterministic_twice():
+    rec = _load("trace_warm_d2.json")
+    k = ReplayKnobs(depth=3, kv_mode="int4", sim_bw=200.0)
+    a, b = replay(rec, k), replay(rec, k)
+    assert a.step_times_s == b.step_times_s
+    assert a.bytes_by_kind == b.bytes_by_kind
+    assert (list(map(_ev_key, a.trace.events()))
+            == list(map(_ev_key, b.trace.events())))
+
+
+# ---------------------------------------------------------------------------
+# knob semantics: byte scaling, windows, depth sweep
+# ---------------------------------------------------------------------------
+
+
+def test_int4_knobs_scale_bytes_by_pack_ratio():
+    rec = _load("trace_warm_d2.json")
+    base = replay(rec)
+    kv = replay(rec, ReplayKnobs(kv_mode="int4"))
+    w = replay(rec, ReplayKnobs(quant="int4"))
+    # int4 vs fp32 packing is 1/8 of the 4-byte baseline (0.5/4); the
+    # fake payloads (1000/40/8 B) round exactly
+    assert kv.bytes_by_kind["kv_load"] * 8 == base.bytes_by_kind["kv_load"]
+    assert kv.bytes_by_kind["kv_save"] * 8 == base.bytes_by_kind["kv_save"]
+    assert kv.bytes_by_kind["weight_load"] == base.bytes_by_kind["weight_load"]
+    assert w.bytes_by_kind["weight_load"] * 8 == base.bytes_by_kind["weight_load"]
+    assert w.bytes_by_kind["kv_load"] == base.bytes_by_kind["kv_load"]
+
+
+def test_iteration_window_slices_steady_steps():
+    rec = _load("trace_warm_d1.json")       # 3 calls x 1 iteration
+    res = replay(rec, start_iter=1)         # drop the cold first step
+    assert len(res.step_times_s) == 2
+    assert res.step_times_s[-1] == 60.0
+    assert res.profile.calls == [1, 1]
+    with pytest.raises(ReplayError, match="iteration window"):
+        replay(rec, start_iter=99)
+
+
+def test_best_depth_fixture_sweep():
+    rec = _load("trace_warm_d1.json")
+    d, preds = best_depth(rec, depth_cap=4)
+    assert preds == {1: 60.0, 2: 30.0, 3: 24.0, 4: 24.0}
+    assert d == 3                           # tie at 24.0 breaks shallow
+    assert replay(rec, ReplayKnobs(depth=3)).steady_step_s == 24.0
+
+
+def test_replay_depth_decision_capped_and_sourced():
+    rec = _load("trace_warm_d1.json")
+    d, why = replay_depth_decision(rec, depth_cap=2)
+    assert 1 <= d <= 2
+    assert "source=replay" in why and "simulated argmin" in why
+
+
+def test_moe_trace_replays_with_experts_folded():
+    # expert loads carry engine-minted names the replayer skips; their
+    # cost stays inside the recorded compute durations, so the replay
+    # still reproduces the step structure
+    _, rec, _ = run_virtual_moe(iters=3)
+    rec.meta.setdefault("calls", [3])
+    res = replay(rec)
+    assert len(res.step_times_s) == 3
+    assert res.steady_step_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (skipped when hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+if given is not None:
+    _knobs = st.builds(
+        ReplayKnobs,
+        depth=st.one_of(st.none(), st.integers(min_value=1, max_value=6)),
+        sim_bw=st.one_of(st.none(),
+                         st.floats(min_value=10.0, max_value=1e4)),
+        quant=st.sampled_from([None, "fp32", "int4"]),
+        kv_mode=st.sampled_from([None, "fp32", "int4"]))
+
+    @given(knobs=_knobs)
+    @settings(max_examples=25, deadline=None)
+    def test_replay_deterministic_property(knobs):
+        rec = _load("trace_warm_d2.json")
+        a, b = replay(rec, knobs), replay(rec, knobs)
+        assert a.step_times_s == b.step_times_s
+        assert a.bytes_by_kind == b.bytes_by_kind
+
+    @given(bw_lo=st.floats(min_value=1.0, max_value=1e3),
+           ratio=st.floats(min_value=1.0, max_value=100.0),
+           depth=st.integers(min_value=1, max_value=5))
+    @settings(max_examples=25, deadline=None)
+    def test_replay_monotone_in_sim_bw(bw_lo, ratio, depth):
+        # a slower hypothetical link can never predict a faster run:
+        # transfer costs fall monotonically with bw and the virtual
+        # makespan is monotone in task durations
+        rec = _load("trace_warm_d2.json")
+        slow = replay(rec, ReplayKnobs(depth=depth, sim_bw=bw_lo))
+        fast = replay(rec, ReplayKnobs(depth=depth, sim_bw=bw_lo * ratio))
+        assert slow.span_s >= fast.span_s - 1e-9
+        assert slow.steady_step_s >= fast.steady_step_s - 1e-9
+
+    @given(cap=st.integers(min_value=1, max_value=8))
+    @settings(max_examples=10, deadline=None)
+    def test_best_depth_respects_cap(cap):
+        rec = _load("trace_warm_d1.json")
+        d, preds = best_depth(rec, depth_cap=cap)
+        assert 1 <= d <= cap
+        assert sorted(preds) == list(range(1, cap + 1))
+        dd, _ = replay_depth_decision(rec, depth_cap=cap)
+        assert dd == d
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_replay_deterministic_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_replay_monotone_in_sim_bw():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_best_depth_respects_cap():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# predicted vs measured: byte-driven virtual workloads
+# ---------------------------------------------------------------------------
+
+_BW = 100.0                 # virtual link: bytes per virtual second
+_OH = {TaskType.WEIGHT_LOAD: 1.0, TaskType.KV_LOAD: 0.5,
+       TaskType.KV_SAVE: 0.25}
+_B = {TaskType.WEIGHT_LOAD: 1024, TaskType.KV_LOAD: 64,
+      TaskType.KV_SAVE: 16}
+
+
+class _ByteModel(FakeModel):
+    """FakeModel whose KV payloads honour ``kv_mode`` through the same
+    §3.5 packing ratio the replayer applies, so a measured int4 run and
+    a replayed fp32->int4 prediction price identical byte streams."""
+
+    def __init__(self, n_layers=3, kv_mode="fp32"):
+        super().__init__(n_layers)
+        self.rkv = quant_kv_ratio(4, kv_mode) / quant_kv_ratio(4, "fp32")
+
+    def weight_nbytes(self, j):
+        return _B[TaskType.WEIGHT_LOAD]
+
+    def kv_nbytes(self, i, j):
+        return int(round(_B[TaskType.KV_LOAD] * self.rkv))
+
+    def kv_save_nbytes(self, i, j):
+        return int(round(_B[TaskType.KV_SAVE] * self.rkv))
+
+
+def _byte_cost(task):
+    # transfers: fixed per-kind overhead + bytes over the virtual link;
+    # compute: constant
+    if task.kind is TaskType.COMPUTE:
+        return COSTS[TaskType.COMPUTE]
+    return _OH[task.kind] + task.nbytes / _BW
+
+
+def _run_byte_workload(depth, kv_mode="fp32", iters=6):
+    """One measured virtual run at (depth, kv_mode), pool sized the way
+    an engine (and the replayer's depth override) would size it."""
+    model = _ByteModel(kv_mode=kv_mode)
+    pool = VirtualPool(PipelineScheduler.pool_size(depth),
+                       cost_fn=_byte_cost)
+    sched = PipelineScheduler(model.n, "performance", pool=pool,
+                              trace=pool.trace, warm=True, depth=depth)
+    sched.generate(model, lambda i: 0, iters)
+    sched.shutdown()
+    return pool.trace
+
+
+def test_replay_error_under_10pct_depth_x_kv_mode():
+    """ISSUE acceptance: record once (depth 1, fp32 KV), predict every
+    (depth, kv_mode) in {1,2} x {fp32, int4}, and check the prediction
+    against an independent measured virtual run of that configuration.
+    On the virtual clock the cost model is exact, so the <10% bound is
+    loose — assert the contract, then pin near-equality."""
+    rec = _run_byte_workload(depth=1, kv_mode="fp32")
+    # the engines stamp link + precisions; mirror that on the recording
+    rec.meta.update(sim_bw=_BW, quant="fp32", kv_mode="fp32")
+    for depth, kv in itertools.product((1, 2), ("fp32", "int4")):
+        pred = replay(rec, ReplayKnobs(depth=depth, kv_mode=kv))
+        meas = steady_step_s(_run_byte_workload(depth=depth, kv_mode=kv))
+        err = abs(pred.steady_step_s - meas) / meas
+        assert err < 0.10, (depth, kv, pred.steady_step_s, meas)
+        assert pred.steady_step_s == pytest.approx(meas, rel=1e-9)
+
+
+def test_replay_predicts_int4_kv_speedup_at_depth1():
+    # sanity on the direction, not just the magnitude: packed KV moves
+    # 1/8 of the bytes so the depth-1 steady step must not get slower
+    rec = _run_byte_workload(depth=1, kv_mode="fp32")
+    rec.meta.update(sim_bw=_BW, quant="fp32", kv_mode="fp32")
+    base = replay(rec).steady_step_s
+    packed = replay(rec, ReplayKnobs(kv_mode="int4")).steady_step_s
+    assert packed <= base
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec.resolve(budget, trace=...)
+# ---------------------------------------------------------------------------
+
+
+def _spec(**kw):
+    kw.setdefault("arch", "tinyllama-1.1b")
+    kw.setdefault("scaled", True)
+    return EngineSpec(**kw)
+
+
+def test_resolve_trace_picks_measured_best_static_depth():
+    """The resolved depth equals the argmin over measured static runs
+    (same workload re-run at every depth the heuristic cap allows, each
+    with the pool an engine would build), and the provenance names the
+    replay source."""
+    _, rec, _ = run_virtual("performance", n_layers=3, iters=6, warm=True,
+                            calls=1, depth=1)
+    spec = _spec(offload=True, b_max=2, max_len=64)
+    cap = spec.resolve().depth                # heuristic depth = the cap
+    assert cap >= 2
+
+    from fake_model import cost_fn
+    measured = {}
+    for d in range(1, cap + 1):
+        model = FakeModel(3)
+        pool = VirtualPool(PipelineScheduler.pool_size(d), cost_fn=cost_fn)
+        sched = PipelineScheduler(model.n, "performance", pool=pool,
+                                  trace=pool.trace, warm=True, depth=d)
+        sched.generate(model, lambda i: 0, 6)
+        sched.shutdown()
+        measured[d] = steady_step_s(pool.trace)
+    best_measured = min(measured, key=lambda d: (measured[d], d))
+
+    plan = spec.resolve(trace=rec)
+    assert plan.depth == best_measured
+    why = plan.provenance["depth"]
+    assert why.startswith("replay:") and "source=replay" in why
+
+
+def test_resolve_unreplayable_trace_keeps_heuristic():
+    spec = _spec(offload=True, b_max=2, max_len=64)
+    heuristic = spec.resolve()
+    plan = spec.resolve(trace=Trace())        # no events: not replayable
+    assert plan.depth == heuristic.depth
+    assert "not replayable" in plan.provenance["depth"]
+    assert "kept the heuristic depth" in plan.provenance["depth"]
+
+
+def test_resolve_trace_ignored_with_explicit_depth():
+    rec = _load("trace_warm_d1.json")
+    plan = _spec(offload=True, b_max=2, max_len=64,
+                 depth=2).resolve(trace=rec)
+    assert plan.depth == 2
+    assert plan.provenance["depth"].startswith("explicit:")

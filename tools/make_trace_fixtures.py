@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Regenerate the golden trace fixtures in tests/fixtures/.
+
+Each fixture is a ``Trace.to_json`` dump of a virtual-clock fake-model
+run (``tests/fake_model.run_virtual``): fully deterministic — fixed
+per-task-type costs/bytes, virtual timeline, no wall clock — so the
+files are byte-stable across machines and the replayer's bit-for-bit
+regression tests (tests/test_replay.py) can assert against them.
+
+Run after changing the scheduler, the fake model's cost tables, or the
+trace schema:  PYTHONPATH=src python tools/make_trace_fixtures.py
+(then review the diff — a changed fixture means the recorded schedule
+changed, which is exactly what the regression tests exist to catch).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tests"))
+
+FIXTURES = ROOT / "tests" / "fixtures"
+
+# (filename, run_virtual kwargs): a warm depth-1 serving-style pipeline
+# (3 calls of 1 iteration — the per-decode-step drain pattern) and a
+# warm depth-2 window over a longer single call
+CASES = (
+    ("trace_warm_d1.json",
+     dict(mode="performance", n_layers=3, iters=1, warm=True, calls=3,
+          depth=1)),
+    ("trace_warm_d2.json",
+     dict(mode="performance", n_layers=3, iters=4, warm=True, calls=1,
+          depth=2)),
+)
+
+
+def build(kwargs) -> dict:
+    from fake_model import run_virtual
+    _, trace, _ = run_virtual(**kwargs)
+    return trace.to_json()
+
+
+def main() -> int:
+    FIXTURES.mkdir(parents=True, exist_ok=True)
+    changed = 0
+    for name, kwargs in CASES:
+        path = FIXTURES / name
+        text = json.dumps(build(kwargs), indent=1, sort_keys=True) + "\n"
+        if not path.exists() or path.read_text() != text:
+            path.write_text(text)
+            changed += 1
+            print(f"wrote {path.relative_to(ROOT)}")
+        else:
+            print(f"up-to-date {path.relative_to(ROOT)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
