@@ -17,6 +17,7 @@ validated directionally against its claims in EXPERIMENTS.md.
   serving_offload_depth — warm preload-depth sweep {1,2,3} x {fp32,int4}
   serving_kv_quant   — KV streaming sweep: kv_mode {fp32,int4} x depth {1,2}
   pipelined_kv_quant — batch-generation KV streaming: kv_mode on PipelinedLM
+  serving_spec_decode — k-token draft-then-verify vs plain decode (ours)
   replay_validate    — trace-replay predicted vs measured step time (ours)
   kernel_int4        — fused INT4 kernel vs dequant-then-matmul (§3.4)
   roofline           — aggregate dry-run roofline table (ours)
@@ -473,6 +474,117 @@ def pipelined_kv_quant():
          f"int4_vs_fp32_d1={results['fp32'] / results['int4']:.2f}x")
 
 
+def serving_spec_decode():
+    """Speculative decoding through the offload pipeline: k-token
+    draft-then-verify vs plain decode on the sim link, weights {fp32,
+    int4}.  The verify scores all k+1 positions in ONE ragged pass, so
+    a speculative step moves the same weight bytes over the link as a
+    plain step but can emit up to k+1 tokens per slot — on a
+    weight-dominated link decode tok/s scales with the mean acceptance
+    length.  Two proposal sources bound the range: an oracle draft
+    replaying the baseline's own emitted stream (acceptance = k, the
+    best case) and a seeded random draft (acceptance ~ 0, the overhead
+    floor).  Greedy accept/reject keeps the emitted tokens
+    bit-identical to the baseline either way — draft quality moves the
+    speed, never the text — and the summary row carries a live
+    ``bit_exact`` check of exactly that.  CI smoke:
+    `serving_spec_decode --steps 2`."""
+    from repro.serving import Request
+    cfg = _bench_cfg(layers=6, d=512, ff=2048)
+    b, prompt_len, k = 8, 32, 3
+    max_new = STEPS * (k + 1) if STEPS else 16
+
+    class _OracleDraft:
+        """Proposes the recorded baseline stream — full acceptance."""
+
+        def __init__(self, streams):
+            self.streams = streams
+
+        def prefill_slot(self, slot, prompt):
+            pass
+
+        def propose(self, tokens, pos, kk):
+            pos = np.asarray(pos).reshape(-1)
+            out = np.zeros((len(pos), kk), np.int32)
+            for r, st in enumerate(self.streams):
+                # prefill emitted stream[0] while pos still sat at
+                # prompt_len, so the next unemitted stream index is
+                # pos - prompt_len + 1
+                i0 = int(pos[r]) - prompt_len + 1
+                for t in range(kk):
+                    out[r, t] = st[i0 + t] if 0 <= i0 + t < len(st) else 0
+            return out
+
+    class _NoisyDraft:
+        """Seeded random proposals — the ~zero-acceptance floor."""
+
+        def __init__(self):
+            self.rng = np.random.default_rng(7)
+
+        def prefill_slot(self, slot, prompt):
+            pass
+
+        def propose(self, tokens, pos, kk):
+            rows = len(np.asarray(pos).reshape(-1))
+            return self.rng.integers(0, cfg.vocab_size,
+                                     (rows, kk)).astype(np.int32)
+
+    def run(quant, make_draft):
+        eng = _serving_engine(cfg, b_max=b, max_len=96, placement="host",
+                              sim_bw=0.3e9, pipeline="performance",
+                              warm=True, depth=1, quant=quant,
+                              fused_int4=bool(quant))
+        if make_draft is not None:
+            eng.attach_draft(make_draft(), k)
+        rng = np.random.default_rng(0)
+        for i in range(b):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, (prompt_len,)).astype(np.int32),
+                max_new=max_new))
+        eng._admit()
+        done = []
+        eng._decode_step(done)        # untimed jit warm
+        t0 = time.perf_counter()
+        n0, s0 = eng.stats["tokens_out"], eng.stats["decode_steps"]
+        while any(s is not None for s in eng.slots):
+            eng._decode_step(done)
+        dt = time.perf_counter() - t0
+        ntok = eng.stats["tokens_out"] - n0
+        nstep = eng.stats["decode_steps"] - s0
+        accept = (eng.stats.get("spec_accepted", 0)
+                  / max(1, eng.stats.get("spec_steps", 0) * b))
+        out = {r.rid: [int(t) for t in r.out] for r in done}
+        eng.shutdown()
+        return dict(tok_s=ntok / max(1e-9, dt), step_s=dt / max(1, nstep),
+                    steps=nstep, accept=accept, out=out)
+
+    results = {}
+    for quant in (None, "int4"):
+        tag = "int4" if quant else "fp32"
+        base = run(quant, None)
+        streams = [base["out"][i] for i in range(b)]
+        oracle = run(quant, lambda: _OracleDraft(streams))
+        noisy = run(quant, _NoisyDraft)
+        results[tag] = (base, oracle, noisy)
+        for name, r in (("base", base), ("oracle", oracle),
+                        ("random", noisy)):
+            emit(f"serving_spec_decode_{tag}_{name}", r["step_s"] * 1e6,
+                 f"decode_tok_s={r['tok_s']:.2f};"
+                 f"step_ms={r['step_s'] * 1e3:.1f};"
+                 f"steps={r['steps']};accept={r['accept']:.2f}")
+    bit_exact = all(results[t][1]["out"] == results[t][0]["out"]
+                    and results[t][2]["out"] == results[t][0]["out"]
+                    for t in results)
+    emit("serving_spec_decode_summary", 0.0,
+         f"k={k};bit_exact={int(bit_exact)};"
+         f"oracle_vs_base_fp32="
+         f"{results['fp32'][1]['tok_s'] / max(1e-9, results['fp32'][0]['tok_s']):.2f}x;"
+         f"oracle_vs_base_int4="
+         f"{results['int4'][1]['tok_s'] / max(1e-9, results['int4'][0]['tok_s']):.2f}x;"
+         f"random_vs_base_fp32="
+         f"{results['fp32'][2]['tok_s'] / max(1e-9, results['fp32'][0]['tok_s']):.2f}x")
+
+
 def serving_adaptive_depth():
     """AdaptiveDepth vs static windows under RAMPING request load: the
     engine starts near-empty (2 requests) and admits 2 more every 4
@@ -636,8 +748,8 @@ def roofline():
 BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            fig9_ablation, table3_latency, table6_memory, fig12_moe,
            serving_offload, serving_offload_depth, serving_kv_quant,
-           pipelined_kv_quant, serving_adaptive_depth, replay_validate,
-           kernel_int4, roofline]
+           pipelined_kv_quant, serving_spec_decode, serving_adaptive_depth,
+           replay_validate, kernel_int4, roofline]
 
 
 def run_spec_scenario(path: str):
@@ -675,9 +787,10 @@ def main(argv=None) -> "int | None":
                          "EngineSpec JSON (resolve -> create_engine -> "
                          "steady-state decode), then exit")
     ap.add_argument("--steps", type=int, metavar="N",
-                    help="decode steps for the KV-streaming and replay "
-                         "scenarios (smoke runs: CI uses 'serving_kv_quant "
-                         "--steps 2', 'pipelined_kv_quant --steps 2' and "
+                    help="decode steps for the KV-streaming, speculative "
+                         "and replay scenarios (smoke runs: CI uses "
+                         "'serving_kv_quant --steps 2', 'pipelined_kv_quant "
+                         "--steps 2', 'serving_spec_decode --steps 2' and "
                          "'replay_validate --steps 2'); other scenarios "
                          "run their documented full length")
     args = ap.parse_args(argv)

@@ -30,12 +30,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MOE, ModelConfig
-from repro.core.kvstore import TieredKVStore
+from repro.core.draft import accept_length
+from repro.core.kvstore import TieredKVStore, kv_roundtrip_traceable
 from repro.core.offload import DeviceStore, DiskStore, HostStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
 from repro.core.tasks import Trace
 from repro.core.transfer import Manifest, TieredWeightStore
-from repro.models.attention import decode_attention, ref_attention
+from repro.models.attention import (decode_attention, ref_attention,
+                                    spec_decode_attention)
 from repro.models.common import rms_norm, silu
 from repro.models.rope import apply_rope, rope_angles
 from repro.quant.int4 import quantize_int4
@@ -75,14 +77,24 @@ def _attn_prefill_unit(x, w, *, cfg: ModelConfig):
     return x + out.reshape(b, s, -1) @ w["wo"], k, v
 
 
-def _attn_decode_unit(x, w, kc, vc, pos, *, cfg: ModelConfig):
-    """x (b, 1, d); kc/vc (b, L, hkv, dh) device copies of the tiered
-    cache.  Returns (x', k_new, v_new, kc', vc') — the functionally
-    updated caches back the ``cache_on="device"`` store refresh; host
-    mode persists through the KV store instead and drops them."""
+def _attn_decode_unit(x, w, kc, vc, pos, *, cfg: ModelConfig,
+                      kv_roundtrip=None):
+    """x (b, s, d) — s == 1 for plain decode, k+1 for a speculative
+    verify pass (the current token plus the draft's proposals, scored in
+    one ragged step); kc/vc (b, L, hkv, dh) device copies of the tiered
+    cache.  ``kv_roundtrip`` (host cache tier + kv_mode='int4') lets the
+    verify pass attend its own earlier rows at the precision sequential
+    decode would reload them at.  Returns (x', k_new, v_new, kc', vc')
+    — the functionally updated caches back the ``cache_on="device"``
+    store refresh; host mode persists through the KV store instead and
+    drops them."""
     b, s, d = x.shape
     q, k, v = _qkv(x, w, pos, cfg)
-    out, kc, vc = decode_attention(q, kc, vc, k, v, pos, axes=())
+    if s > 1:
+        out, kc, vc = spec_decode_attention(q, kc, vc, k, v, pos,
+                                            kv_roundtrip=kv_roundtrip)
+    else:
+        out, kc, vc = decode_attention(q, kc, vc, k, v, pos, axes=())
     return x + out.reshape(b, s, -1) @ w["wo"], k, v, kc, vc
 
 
@@ -117,6 +129,16 @@ def _head_unit(x, emb):
     return jnp.argmax(x[:, -1].astype(jnp.float32) @ emb.T, axis=-1)
 
 
+def _spec_head_unit(x, emb):
+    """Per-POSITION greedy argmax for the verify pass: each of the b*s
+    rows goes through exactly ``_head_unit``'s row arithmetic, so the
+    per-position tokens match what s sequential single-token heads
+    would emit.  x (b, s, d) -> (b, s) int32."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d).astype(jnp.float32) @ emb.T
+    return jnp.argmax(flat, axis=-1).reshape(b, s)
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -148,6 +170,7 @@ class PipelinedLM:
         kwargs are converted to an ``EngineSpec`` and resolved, so both
         paths act on an identical plan."""
         from repro.serving.spec import (EngineSpec, ResolvedPlan,
+                                        draft_policy_for,
                                         warn_deprecated_once)
         if isinstance(plan, ModelConfig):
             warn_deprecated_once(
@@ -201,6 +224,34 @@ class PipelinedLM:
         self._build(plan.seed)
         self._kv_init()
         self._jit_units()
+        # speculative decoding (core.draft): device-resident draft
+        # proposes, the streamed target verifies k+1 positions per trip
+        self.draft = None
+        self._spec_k = 0
+        self._spec_s = 1                 # rows the current step writes
+        self._spec_mode = False
+        self._iter_pos: Dict[int, int] = {}   # global iter -> start pos
+        dp = draft_policy_for(plan)
+        if dp is not None:
+            self.attach_draft(
+                dp.build(b_max=plan.b_max, max_len=plan.max_len), dp.k)
+
+    def attach_draft(self, draft, k: int):
+        """Enable speculative decoding with ``draft`` — anything with
+        ``prefill_batch(tokens)`` and ``propose(tokens, pos, k) ->
+        (batch, k)`` (``core.draft.ResidentDraft``, or a test fake).
+        The uniform-batch engine advances all rows in lockstep, so a
+        step accepts min-over-rows proposals; rows that accepted more
+        re-derive their surplus next step (greedy decode is
+        deterministic, so the stream stays bit-identical).  Main
+        thread, before ``generate``."""
+        if self.cfg.moe is not None:
+            raise ValueError(
+                "speculative decoding needs a dense stack: routing k+1 "
+                "tokens jointly would change MoE capacity assignment "
+                "versus sequential decode, breaking token parity")
+        self.draft = draft
+        self._spec_k = max(1, int(k))
 
     # -- weights -------------------------------------------------------------
     def _unit_tensors(self, kind: str, rng: np.random.Generator):
@@ -293,10 +344,14 @@ class PipelinedLM:
     def _jit_units(self):
         cfg = self.cfg
         self._attn_prefill = jax.jit(partial(_attn_prefill_unit, cfg=cfg))
-        self._attn_decode = jax.jit(partial(_attn_decode_unit, cfg=cfg))
+        rt = (kv_roundtrip_traceable
+              if self.cache_on == "host" and self.kv_mode == "int4" else None)
+        self._attn_decode = jax.jit(partial(_attn_decode_unit, cfg=cfg,
+                                            kv_roundtrip=rt))
         self._mlp = jax.jit(partial(_mlp_unit, cfg=cfg))
         self._embed = jax.jit(_embed_unit)
         self._head = jax.jit(_head_unit)
+        self._spec_head = jax.jit(_spec_head_unit)
         if cfg.moe is not None:
             self._gate = jax.jit(partial(_gate_unit, top_k=cfg.moe.top_k))
             self._expert = jax.jit(partial(_expert_unit, cfg=cfg))
@@ -327,9 +382,18 @@ class PipelinedLM:
 
     def _live_len(self, i: int) -> int:
         """Sequence rows iteration ``i``'s decode attention actually
-        reads: the prompt plus the ``i-1`` decode rows already saved
-        (rows ``0..pos-1``; the row at ``pos`` arrives with the step's
-        own k/v).  Iteration 0 is the prefill — no cache is consumed."""
+        reads: the prompt plus the decode rows already saved (rows
+        ``0..pos-1``; the rows at ``pos..`` arrive with the step's own
+        k/v).  Iteration 0 is the prefill — no cache is consumed.
+        Non-speculative decode is a pure function of ``i`` (one row per
+        iteration) so warm cross-call preloads price exactly what they
+        later ship; speculative steps advance by a variable 1..k+1 rows,
+        so the per-iteration start positions are PLANNED on the main
+        thread before submission (``_iter_pos``; the next iteration is
+        planned at full acceptance — a superset when rows are rejected,
+        and superset rows are zeros the attention mask ignores)."""
+        if self._spec_mode:
+            return min(self._iter_pos.get(i, self.max_len), self.max_len)
         return min(self._prompt_len + i - 1, self.max_len)
 
     def kv_nbytes(self, i: int, j: int) -> int:
@@ -355,7 +419,7 @@ class PipelinedLM:
         if i == 0:
             return self.kvstore.prefill_save_nbytes(j, self.batch,
                                                     self._prompt_len)
-        return self.kvstore.save_nbytes(j, self.batch)
+        return self.kvstore.save_nbytes(j, self.batch, rows=self._spec_s)
 
     def load_kv(self, i: int, j: int):
         if self.cache_on == "device":
@@ -402,9 +466,10 @@ class PipelinedLM:
                                             jnp.int32(pos))
         if self.cache_on == "device":
             # ship the whole updated caches to the save task (device
-            # puts, no link crossing); host mode ships only the new row
-            return x, ("decode", kc, vc, int(pos), 1)
-        return x, ("decode", k, v, int(pos), 1)
+            # puts, no link crossing); host mode ships only the new
+            # rows (1 plain, k+1 for a speculative verify pass)
+            return x, ("decode", kc, vc, int(pos), x.shape[1])
+        return x, ("decode", k, v, int(pos), x.shape[1])
 
     def _compute_moe(self, u, x, shared_w):
         """Paper Appendix C.4: the gate forces a sync (experts unknown until
@@ -438,7 +503,11 @@ class PipelinedLM:
         return x + out
 
     def finalize(self, i: int, x):
-        tok = self._head(x, self.device.get("emb"))
+        if self._phase == "decode" and x.shape[1] > 1:
+            # speculative verify: per-position argmax, (b, k+1)
+            tok = self._spec_head(x, self.device.get("emb"))
+        else:
+            tok = self._head(x, self.device.get("emb"))
         self._last_tokens = np.asarray(tok)
         return self._last_tokens
 
@@ -484,11 +553,15 @@ class PipelinedLM:
 
         # ---- decode ----
         self._phase = "decode"
-        for t in range(1, gen_len):
-            self._pos = s + t - 1
-            x_tok = self._embed(jnp.asarray(outs[-1][:, None]), emb)
-            nxt = sched.generate(self._model_view(), lambda i: x_tok, 1)
-            outs.append(nxt[-1])
+        spec = {"spec_steps": 0, "spec_proposed": 0, "spec_accepted": 0}
+        if self.draft is None:
+            for t in range(1, gen_len):
+                self._pos = s + t - 1
+                x_tok = self._embed(jnp.asarray(outs[-1][:, None]), emb)
+                nxt = sched.generate(self._model_view(), lambda i: x_tok, 1)
+                outs.append(nxt[-1])
+        else:
+            self._decode_spec(sched, prompt, gen_len, outs, emb, spec)
         sched.shutdown()
         dt = time.perf_counter() - t0
         toks = np.stack(outs, axis=1)
@@ -501,8 +574,82 @@ class PipelinedLM:
             "host_peak_gb": self.host.peak_bytes / 2**30,
             "device_peak_gb": self.device.peak_bytes / 2**30,
             "pipeline": self.trace.report(),
+            **spec,
         }
         return toks, stats
+
+    def _decode_spec(self, sched, prompt, gen_len, outs, emb, spec):
+        """Draft-then-verify decode loop (main thread).  Each step: the
+        draft proposes ``k`` tokens while ``prime_weights`` streams the
+        verify pass's first weight loads over the idle link; the target
+        scores all ``k+1`` positions in one trip through the layer
+        stack; the batch advances by the MINIMUM accepted run over rows
+        (uniform-batch lockstep — surplus accepted tokens re-derive
+        next step, so the stream is bit-identical to plain greedy).
+        Rejection truncates the tiered store's rows and drops the
+        now-stale warm KV preloads; full acceptance keeps them (their
+        planned extent was exact)."""
+        s = prompt.shape[1]
+        self._iter_pos.clear()
+        # seed the first decode iteration's plan BEFORE flipping the
+        # mode flag: the prefill's warm tail preload may still be in
+        # flight and must resolve the same extent it was priced at
+        self._iter_pos[sched._iter0] = s
+        self._spec_mode = True
+        self.draft.prefill_batch(prompt)
+        try:
+            while len(outs) < gen_len:
+                pos = s + len(outs) - 1
+                self._pos = pos
+                remaining = gen_len - len(outs)
+                k = min(self._spec_k, remaining - 1, self.max_len - 1 - pos)
+                gi = sched._iter0
+                if k < 1:
+                    self._spec_s = 1
+                    self._iter_pos[gi] = pos
+                    self._iter_pos[gi + 1] = pos + 1
+                    x_tok = self._embed(jnp.asarray(outs[-1][:, None]), emb)
+                    nxt = sched.generate(self._model_view(),
+                                         lambda i: x_tok, 1)
+                    outs.append(nxt[-1])
+                    continue
+                self._spec_s = k + 1
+                self._iter_pos[gi] = pos
+                self._iter_pos[gi + 1] = pos + k + 1   # full-accept plan
+                t0 = time.perf_counter()
+                primed = sched.prime_weights(self._model_view())
+                props = np.asarray(self.draft.propose(
+                    outs[-1], np.full(self.batch, pos, np.int32), k),
+                    np.int32)                          # (b, k)
+                draft_s = time.perf_counter() - t0
+                seq = np.concatenate(
+                    [np.asarray(outs[-1], np.int32)[:, None], props], axis=1)
+                x_tok = self._embed(jnp.asarray(seq), emb)
+                nxt = sched.generate(self._model_view(), lambda i: x_tok, 1)
+                tgt = np.asarray(nxt[-1])              # (b, k+1)
+                a_min = min(accept_length(props[r], tgt[r])
+                            for r in range(self.batch))
+                emitted = min(a_min + 1, remaining)
+                for t in range(emitted):
+                    outs.append(tgt[:, t])
+                if emitted < k + 1:
+                    # rejected (or generation-capped) rows: the saves in
+                    # flight would re-write them after the truncate, and
+                    # the warm KV preloads priced the full-accept extent
+                    # — drain, invalidate, drop (weight preloads stay)
+                    sched.drain_saves()
+                    sched.drop_kv_preloads()
+                    if self.kvstore is not None:
+                        for r in range(self.batch):
+                            self.kvstore.truncate(r, pos + emitted)
+                spec["spec_steps"] += 1
+                spec["spec_proposed"] += k * self.batch
+                spec["spec_accepted"] += int(a_min) * self.batch
+                self.trace.meta.setdefault("spec_steps", []).append(dict(
+                    k=int(k), primed=int(primed), draft_s=float(draft_s),
+                    accepts=[int(a_min)] * self.batch))
+        finally:
+            self._spec_mode = False
 
     def _model_view(self):
         return self

@@ -177,6 +177,27 @@ def kv_roundtrip_rows(x, group: Optional[int] = None):
     return dequantize_kv_rows(packed, scale, g, jnp.dtype(x.dtype))
 
 
+def kv_roundtrip_traceable(x):
+    """Traceable in-graph form of ``kv_roundtrip_rows`` for cache rows
+    shaped ``(b, s, *feat)`` — the SAME quantize/dequantize ops
+    ``save_decode``/``load`` run, so the result is bitwise what the host
+    tier will serve back for these rows.  The speculative verify pass
+    uses it so query ``t`` attends rows ``pos..pos+t-1`` at exactly the
+    precision sequential decode would have read them at (they went
+    through the store between sequential steps; in the fused verify pass
+    they never left the device).  Ineligible leaves (odd flattened
+    feature count) stream at full precision in the store, so they pass
+    through unchanged here too.  Shape/group resolve at trace time."""
+    feat = x.shape[2:]
+    if not kv_eligible("kv", feat):
+        return x
+    F = int(np.prod(feat))
+    g = kv_group(F)
+    flat = x.reshape(x.shape[0], x.shape[1], F).astype(jnp.float32)
+    packed, scale = _quantize_rows(flat, g)
+    return _dequant_impl(packed, scale, g).reshape(x.shape).astype(x.dtype)
+
+
 @dataclass
 class _LeafMeta:
     """Per-leaf layout (kept public via ``leaf_meta`` for tests and
@@ -292,14 +313,20 @@ class TieredKVStore:
         — the pre-live-row KV_LOAD payload, kept for tests/pricing."""
         return self.load_nbytes(j, self.b_max, self.max_len)
 
-    def save_nbytes(self, j: int, live_b: Optional[int] = None) -> int:
+    def save_nbytes(self, j: int, live_b: Optional[int] = None,
+                    rows: int = 1) -> int:
         """Bytes one decode ``save_decode`` payload moves device->host:
         the freshly-written rows of ``live_b`` slots at compute precision
-        (quantization happens at the host tier, after the transfer)."""
+        (quantization happens at the host tier, after the transfer).
+        ``rows`` is the per-slot row count — 1 for plain decode, ``k+1``
+        for a speculative verify pass (non-kv kinds ship full per-slot
+        state either way)."""
         lb = self.b_max if live_b is None else min(int(live_b), self.b_max)
         total = 0
         for name, m in self._meta[j].items():
             row = int(np.prod(m.feat)) * np.dtype(m.dtype).itemsize
+            if m.kind == "kv":
+                row *= max(1, int(rows))
             total += lb * row
         return total
 
@@ -477,27 +504,54 @@ class TieredKVStore:
     def save_decode(self, j: int, rows: Dict[str, np.ndarray],
                     active: Sequence[int], pos: np.ndarray) -> None:
         """Scatter a decode step's new rows: for kv kinds ``rows[name]``
-        is ``(live_b, 1, *feat)`` (slot s's new row at position
-        ``pos[s]``), other kinds carry the full per-slot state.  INT4
-        leaves quantize the new row — the only time it is ever
-        quantized."""
+        is ``(live_b, n, *feat)`` (slot s's ``n`` new rows at positions
+        ``pos[s]..pos[s]+n-1`` — ``n == 1`` for plain decode, ``k+1``
+        for a speculative verify pass), other kinds carry the full
+        per-slot state.  INT4 leaves quantize the new rows — the only
+        time they are ever quantized."""
         for name, m in self._meta[j].items():
             leaf = self._units[j][name]
             row = np.asarray(rows[name])
             if isinstance(leaf, _QuantLeaf):
                 row = row.astype(m.dtype)     # compute precision first
                 F = int(np.prod(m.feat))
+                n = row.shape[1]
                 packed, scale = quantize_kv_rows(
-                    row.reshape(row.shape[0], 1, F), leaf.group)
+                    row.reshape(row.shape[0], n, F), leaf.group)
                 for s in active:
-                    leaf.packed[s, pos[s]] = packed[s, 0]
-                    leaf.scale[s, pos[s]] = scale[s, 0]
+                    p = int(pos[s])
+                    leaf.packed[s, p:p + n] = packed[s]
+                    leaf.scale[s, p:p + n] = scale[s]
             elif m.kind == "kv":
+                n = row.shape[1]
                 for s in active:
-                    leaf.arr[s, pos[s]] = row[s, 0]
+                    p = int(pos[s])
+                    leaf.arr[s, p:p + n] = row[s]
             else:
                 for s in active:
                     leaf.arr[s] = row[s]
+
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Shrink one slot's live position extent to ``new_len`` rows:
+        positions ``new_len..max_len-1`` reset to zeros across every
+        unit's sequence-extent (kind ``'kv'``) leaves.  Packed-INT4-safe:
+        zero packed bytes under zero scales dequantize to exact zeros
+        (the same invariant ``save_prefill_batch`` tail-zeroing relies
+        on), so a truncate-then-append round-trip is bit-exact in both
+        modes.  This is the rejection path of speculative decoding — a
+        verify pass appends ``k+1`` rows, then the engine truncates back
+        to the accepted prefix.  Non-sequence leaves (rolling windows,
+        SSM state) are rewritten every step and carry no position
+        extent, so they are left untouched."""
+        nl = max(0, min(int(new_len), self.max_len))
+        for j in range(len(self._units)):
+            for name, m in self._meta[j].items():
+                leaf = self._units[j][name]
+                if isinstance(leaf, _QuantLeaf):
+                    leaf.packed[slot, nl:] = 0
+                    leaf.scale[slot, nl:] = 0
+                elif m.kind == "kv":
+                    leaf.arr[slot, nl:] = 0
 
     # ---- slot spill/restore (transfer-pool / main thread) ------------------
     def spill(self, host, ns: str, slot: int) -> None:

@@ -314,6 +314,35 @@ class PipelineScheduler:
             t.wait()
         self._save_tasks.clear()
 
+    def prime_weights(self, model, count: Optional[int] = None) -> int:
+        """Pre-submit the NEXT ``generate()`` call's first ``count``
+        weight loads (default: the preload depth) — the warm-window
+        generalization of the cross-step preload for speculative
+        decoding: while the device-resident DRAFT computes its
+        proposals, the link is idle, so the verify pass's first layers
+        stream during draft compute instead of cold-starting after it.
+        Main thread; non-blocking; a no-op for layers already in flight
+        (a warm tail may have submitted them) and outside performance
+        mode (the single-layer-resident/sequential invariants forbid a
+        second pending load).  Never primes beyond the window — the
+        ``depth + 1`` residency bound holds exactly as in steady state.
+        Returns the number of loads actually submitted."""
+        if self.mode != "performance":
+            return 0
+        nbytes_of = getattr(model, "weight_nbytes", None)
+        c = self.depth if count is None else \
+            max(0, min(int(count), self.depth))
+        submitted = 0
+        for j in range(min(c, self.n)):
+            if j in self._w_tasks:
+                continue
+            self._w_tasks[j] = self._submit(
+                TaskType.WEIGHT_LOAD, f"w[{j}]",
+                lambda j=j: model.load_weights(j),
+                nbytes=nbytes_of(j) if nbytes_of else 0)
+            submitted += 1
+        return submitted
+
     # -- Algorithm 1 ----------------------------------------------------------
     def generate(self, model, x0, num_iterations: int):
         """Run ``num_iterations`` full passes over the layer stack (one per

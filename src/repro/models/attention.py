@@ -282,6 +282,61 @@ def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *, axes=(),
     return out, k_cache, v_cache
 
 
+def spec_decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *,
+                          kv_roundtrip=None, softcap: float = 0.0):
+    """Multi-position decode for the speculative verify pass: one step
+    appends ``s`` new rows per sequence (the current token plus the
+    draft's proposals) and attends each query position through its own
+    causal prefix.  q: (b, s, h, dh); caches (b, S, hkv, dh); k_new/v_new
+    (b, s, hkv, dh); pos: scalar int32 or (b,) ragged — the position of
+    the FIRST new token (query t writes/attends position ``pos + t``).
+
+    Each query runs as its own (b, 1, S) ``attn_partials`` call — the
+    exact shape and reduction structure of the sequential ragged
+    ``decode_attention`` path — against exactly the rows sequential
+    decode would see: the loaded prefix, the pass's earlier new rows,
+    and its OWN row fresh.  Under a lossy KV tier the distinction
+    matters: between sequential steps rows pos..pos+t-1 round-trip the
+    host store, so ``kv_roundtrip`` (e.g. ``kvstore.
+    kv_roundtrip_traceable`` for kv_mode='int4') is applied to the new
+    rows every LATER query attends, while each query's own row stays
+    fresh — precisely the sequential write-then-attend semantics.  The
+    returned caches hold the fresh rows: the save path quantizes them
+    once, exactly as sequential decode would.  Returns (out (b,s,h,dv),
+    k_cache', v_cache')."""
+    b, s, hkv, dh = k_new.shape
+    S = k_cache.shape[1]
+    p0 = pos if jnp.ndim(pos) == 1 else jnp.broadcast_to(pos, (b,))
+    rowsb = jnp.arange(b)
+    rows = rowsb[:, None]                             # (b, 1)
+    locs = p0[:, None] + jnp.arange(s)[None, :]       # (b, s)
+    kn = k_new.astype(k_cache.dtype)
+    vn = v_new.astype(v_cache.dtype)
+    k_out = k_cache.at[rows, locs].set(kn)
+    v_out = v_cache.at[rows, locs].set(vn)
+    lossy = kv_roundtrip is not None and s > 1
+    if lossy:
+        k_att = k_cache.at[rows, locs].set(kv_roundtrip(kn))
+        v_att = v_cache.at[rows, locs].set(kv_roundtrip(vn))
+    else:
+        k_att, v_att = k_out, v_out
+    kv_pos = jnp.arange(S)
+    outs = []
+    for t in range(s):
+        loc_t = locs[:, t]
+        if lossy:
+            kc = k_att.at[rowsb, loc_t].set(kn[:, t])
+            vc = v_att.at[rowsb, loc_t].set(vn[:, t])
+        else:
+            kc, vc = k_att, v_att
+        valid = (kv_pos[None, :] <= loc_t[:, None])[:, None, :]  # (b,1,S)
+        m, l, o = attn_partials(q[:, t:t + 1], kc, vc, valid,
+                                softcap=softcap)
+        outs.append(jnp.moveaxis(finalize_partials(m, l, o), 1, 2))
+    out = jnp.concatenate(outs, axis=1).astype(q.dtype)
+    return out, k_out, v_out
+
+
 def local_decode_attention(q, k_cache, v_cache, k_new, v_new, pos, window):
     """Rolling-buffer decode for sliding-window layers; cache (b, W, hkv, dh)
     replicated (W is small).  Slot j holds position pos - ((pos - j) mod W).

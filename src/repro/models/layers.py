@@ -11,7 +11,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -223,6 +223,10 @@ class Ctx:
     cache_len: int = 0               # decode/prefill cache allocation length
     is_encoder: bool = False
     batch_size: int = 0              # global batch (0 = assume shardable)
+    # lossy-KV roundtrip for the speculative verify pass: applied to the
+    # pass's fresh rows that LATER queries attend (they round-trip the
+    # host tier between sequential steps); None = cache tier is lossless
+    kv_roundtrip: Optional[Any] = None
 
     @property
     def dp(self):
@@ -339,6 +343,16 @@ def _build_cache(k, v, ctx: Ctx, window):
 
 def _decode_attn(q, k_new, v_new, ctx: Ctx, cache, window):
     cfg = ctx.cfg
+    if q.shape[1] > 1 and not window:
+        # speculative verify pass: one ragged decode step appends s = k+1
+        # rows (current token + draft proposals) and scores every position
+        # through its own causal prefix.  Single-device path only — the
+        # speculative engines run Dist.local() and spec_decode_capability
+        # gates out window/MLA/SSM mixers.
+        out, kc, vc = attn.spec_decode_attention(q, cache["k"], cache["v"],
+                                                 k_new, v_new, ctx.pos,
+                                                 kv_roundtrip=ctx.kv_roundtrip)
+        return out, {"k": kc, "v": vc}
     if window:
         # the window cache is replicated over `model`; without a constraint
         # GSPMD replicates the *updated cache* by all-gathering cache-sized

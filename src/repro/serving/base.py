@@ -228,24 +228,38 @@ class SlotEngineBase:
             self.tokens[slot] = tok
             self.stats["tokens_out"] += 1
 
+    def _emitted_tokens(self, active: List[int],
+                        nt: np.ndarray) -> Dict[int, List[int]]:
+        """Tokens each active slot emitted this step, in stream order.
+        The base emits exactly one per slot (``nt[i]``); speculative
+        engines override to surface the whole accepted run of a
+        draft-then-verify step (up to k+1 tokens)."""
+        return {i: [int(nt[i])] for i in active}
+
     def _decode_step(self, done: List[Request]):
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
         nt = self._decode_active(active)
         self.stats["decode_steps"] += 1
+        emitted = self._emitted_tokens(active, nt)
         for i in active:
             req = self.slots[i]
-            req.out.append(int(nt[i]))
-            self.stats["tokens_out"] += 1
-            self.pos[i] += 1
-            self.tokens[i] = int(nt[i])
-            if (len(req.out) >= req.max_new
-                    or int(nt[i]) == req.eos_id
-                    or self.pos[i] >= self.max_len - 1):
-                req.t_done = time.perf_counter()
-                done.append(req)
-                self._release_slot(i)
+            for tok in emitted[i]:
+                req.out.append(int(tok))
+                self.stats["tokens_out"] += 1
+                self.pos[i] += 1
+                self.tokens[i] = int(tok)
+                # completion checks run per emitted token: a speculative
+                # run past max_new/eos is cut exactly where sequential
+                # decode would have stopped (surplus tokens discarded)
+                if (len(req.out) >= req.max_new
+                        or int(tok) == req.eos_id
+                        or self.pos[i] >= self.max_len - 1):
+                    req.t_done = time.perf_counter()
+                    done.append(req)
+                    self._release_slot(i)
+                    break
 
     def _release_slot(self, slot: int):
         """Free a finished slot; the KV spill overlaps with the next decode

@@ -69,6 +69,7 @@ Pipeline modes (pick with ``pipeline=``):
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List
 
@@ -77,7 +78,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MOE, ModelConfig, LayerSpec
-from repro.core.kvstore import TieredKVStore
+from repro.core.draft import accepted_tokens
+from repro.core.kvstore import TieredKVStore, kv_roundtrip_traceable
 from repro.core.offload import DeviceStore, DiskStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
 from repro.core.tasks import Task, TaskType, Trace, _merged_busy
@@ -90,8 +92,9 @@ from repro.models.common import silu
 from repro.serving.base import Request, SlotEngineBase
 from repro.serving.spec import (AdaptiveDepth, EngineSpec, Pressure,
                                 ResolvedPlan, StaticDepth,
-                                UnsupportedModelError, offload_capability,
-                                preload_policy_for, quant_policy_for,
+                                UnsupportedModelError, draft_policy_for,
+                                offload_capability, preload_policy_for,
+                                quant_policy_for, spec_decode_capability,
                                 warn_deprecated_once)
 
 __all__ = ["Request", "OffloadedServingEngine", "quant_roundtrip_params"]
@@ -263,6 +266,19 @@ class OffloadedServingEngine(SlotEngineBase):
             sim_bw=plan.sim_bw, quant=plan.quant,
             kv_mode=plan.kv_mode or "fp32")
         self._jit_units()
+        # speculative decoding: a device-resident draft proposes spec_k
+        # tokens per step; the streamed target verifies them in one
+        # ragged k+1-position pass (core.draft module docstring)
+        self.draft = None
+        self._spec_k = 0
+        self._spec_s = 1                  # rows the current step writes
+        self._spec_emitted = None         # per-slot tokens of the last step
+        for key in ("spec_steps", "spec_proposed", "spec_accepted"):
+            self.stats[key] = 0
+        dp = draft_policy_for(plan)
+        if dp is not None:
+            self.attach_draft(
+                dp.build(b_max=plan.b_max, max_len=plan.max_len), dp.k)
 
     @staticmethod
     def _n_units(cfg: ModelConfig) -> int:
@@ -358,17 +374,26 @@ class OffloadedServingEngine(SlotEngineBase):
             def decode_fn(w, x, cache, pos, angles, spec=spec, kinds=kinds):
                 # INT4 KV already dequantized on the transfer thread
                 # (kvstore.load, live rows only) — the cache arrives at
-                # compute precision in every kv_mode
+                # compute precision in every kv_mode.  kv_roundtrip hands
+                # the speculative verify pass the tier's lossy write-back,
+                # so its later queries attend the pass's earlier rows at
+                # the precision sequential decode would reload them at
                 ctx = L.Ctx(cfg=cfg, dist=dist, mode="decode", angles=angles,
-                            pos=pos, batch_size=x.shape[0])
+                            pos=pos, batch_size=x.shape[0],
+                            kv_roundtrip=kv_roundtrip_traceable
+                            if self.quant_policy.kv_mode == "int4" else None)
                 x, new_cache, _ = L.apply_layer(w, x, ctx, cache, spec)
                 # gather only the newly written sequence rows so KV_SAVE
-                # ships (b, 1, ...) instead of the whole cache
+                # ships (b, s, ...) instead of the whole cache — s new
+                # rows per slot at pos..pos+s-1 (s=1 plain decode, k+1
+                # for a speculative verify pass)
+                s = x.shape[1]
                 rows = {}
                 for name, kind in kinds.items():
                     leaf = new_cache[name]
                     if kind == "kv":
-                        idx = pos.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                        locs = pos.reshape(-1, 1) + jnp.arange(s)[None, :]
+                        idx = locs.reshape((-1, s) + (1,) * (leaf.ndim - 2))
                         rows[name] = jnp.take_along_axis(
                             leaf, idx.astype(jnp.int32), axis=1)
                     else:
@@ -396,8 +421,20 @@ class OffloadedServingEngine(SlotEngineBase):
             x = L.rms_norm(x, fn_p["scale"], cfg.norm_eps)
             return L.lm_head_argmax(emb_p, x[:, -1:], ctx)
 
+        def spec_head_fn(emb_p, fn_p, x):
+            # per-POSITION greedy argmax for the verify pass: reshape
+            # (b, s, d) -> (b*s, 1, d) so every position goes through the
+            # exact lm_head_argmax row arithmetic the plain head uses —
+            # per-row numerics identical, hence token parity
+            b, s, d = x.shape
+            ctx = L.Ctx(cfg=cfg, dist=dist, mode="decode", batch_size=b * s)
+            x = L.rms_norm(x, fn_p["scale"], cfg.norm_eps)
+            return L.lm_head_argmax(
+                emb_p, x.reshape(b * s, 1, d), ctx).reshape(b, s)
+
         self._embed = jax.jit(embed_fn, static_argnums=(2,))
         self._head = jax.jit(head_fn)
+        self._spec_head = jax.jit(spec_head_fn)
 
     def _jit_moe_fns(self):
         """Four jitted stages replicating ``layers.apply_moe_ffn`` exactly
@@ -521,7 +558,7 @@ class OffloadedServingEngine(SlotEngineBase):
         if self._phase != "decode":
             return self.kvstore.prefill_save_nbytes(j)
         _, lb, _ = self._decode_view
-        return self.kvstore.save_nbytes(j, lb)
+        return self.kvstore.save_nbytes(j, lb, rows=self._spec_s)
 
     def save_kv(self, i: int, j: int, new_kv):
         """KV_SAVE body: scatter freshly-written cache rows back into the
@@ -596,8 +633,13 @@ class OffloadedServingEngine(SlotEngineBase):
                        shared_term)
 
     def finalize(self, i: int, x):
-        tok = self._head(self.resident["embed"], self.resident["final_norm"],
-                         x)
+        if self._phase == "decode" and x.shape[1] > 1:
+            # speculative verify: per-position argmax, (b, k+1)
+            tok = self._spec_head(self.resident["embed"],
+                                  self.resident["final_norm"], x)
+        else:
+            tok = self._head(self.resident["embed"],
+                             self.resident["final_norm"], x)
         return np.asarray(tok)
 
     # ---- SlotEngineBase compute hooks ---------------------------------------
@@ -615,6 +657,10 @@ class OffloadedServingEngine(SlotEngineBase):
                          jnp.asarray(req.prompt)[None], "prefill")
         toks = self.sched.generate(self, lambda i: x0, 1)
         self.sched.drop_kv_preloads()
+        if self.draft is not None:
+            # admit the prompt into the draft's device cache too (the
+            # draft is slaved to the same slot/pos state)
+            self.draft.prefill_slot(slot, req.prompt)
         # skip the prefill's trace window for the bandwidth feedback: a
         # full-prompt forward is far costlier per layer than a decode
         # step, and folding it into the compute EWMA would resolve the
@@ -667,19 +713,18 @@ class OffloadedServingEngine(SlotEngineBase):
             self.stats["depth_resizes"] += 1
             self.stats["preload_depth"] = d
 
-    def _decode_active(self, active: List[int]) -> np.ndarray:
-        """One batched decode step through the pipeline (main thread).
-        With a warm scheduler the step's first weight/KV loads were
-        pre-submitted during the previous step's tail compute."""
+    def _step_setup(self, active: List[int]):
+        """Shared per-step state refresh (main thread): preload-policy
+        resize, phase flip, position snapshot, and the atomic live view
+        for this step's (and its tail preloads') KV extents — scheduler
+        iteration base + occupied slots + written positions.  live_len =
+        max(pos) covers every row attention can read below the write
+        position; the rows AT pos.. are written by this step's compute
+        before they are attended."""
         self._resize_window(active)
         self._phase = "decode"
         self._active = list(active)
         self._pos_snap = self.pos.copy()
-        # atomic live view for this step's (and its tail preloads') KV
-        # extents: scheduler iteration base + occupied slots + written
-        # positions.  live_len = max(pos) covers every row attention can
-        # read below the write position; the row AT pos is written by
-        # this step's compute before it is attended.
         base = self.sched._iter0
         self._decode_view = (base, max(active) + 1,
                              max(1, int(max(self.pos[s] for s in active))))
@@ -687,12 +732,117 @@ class OffloadedServingEngine(SlotEngineBase):
         # longer have loads in flight; main thread, GIL-atomic dels)
         for k in [k for k in self._extent_memo if k < base]:
             del self._extent_memo[k]
+
+    def attach_draft(self, draft, k: int):
+        """Enable speculative decoding with ``draft`` — anything with
+        ``prefill_slot(slot, prompt)`` and ``propose(tokens, pos, k) ->
+        (b_max, k)`` (``core.draft.ResidentDraft``, or a test fake).
+        Greedy accept/reject keeps the emitted stream bit-identical to
+        non-speculative decode for ANY proposal stream, so a draft whose
+        cache went stale (e.g. a preemption resume skips the draft
+        prefill) only costs acceptance length, never correctness.  Main
+        thread, between steps."""
+        cap = spec_decode_capability(self.cfg)
+        if cap is not None:
+            raise UnsupportedModelError(
+                cap, f"speculative decoding needs a global-attention "
+                     f"dense decoder target (failing capability: {cap})")
+        self.draft = draft
+        self._spec_k = max(1, int(k))
+        self.trace.meta.update(spec_k=self._spec_k)
+
+    def _emitted_tokens(self, active, nt):
+        if self._spec_emitted is not None:
+            return self._spec_emitted
+        return super()._emitted_tokens(active, nt)
+
+    def _decode_active(self, active: List[int]) -> np.ndarray:
+        """One batched decode step through the pipeline (main thread).
+        With a warm scheduler the step's first weight/KV loads were
+        pre-submitted during the previous step's tail compute.  With a
+        draft attached the step is a draft-then-verify pass emitting up
+        to spec_k + 1 tokens per slot (``_emitted_tokens``)."""
+        self._spec_emitted = None
+        self._spec_s = 1
+        k = 0
+        if self.draft is not None:
+            # headroom: the verify writes rows pos..pos+k, and the last
+            # emitted token must still fit under the max_len-1 release
+            # bound the base class enforces per token
+            head = self.max_len - 1 - int(max(self.pos[s] for s in active))
+            k = max(0, min(self._spec_k, head))
+        if k >= 1:
+            return self._decode_spec(active, k)
+        self._step_setup(active)
         self._pos_dev = jnp.asarray(self.pos)
         self._angles = T._angles(self.cfg, self._pos_dev[:, None])
         x0 = self._embed(self.resident["embed"],
                          jnp.asarray(self.tokens)[:, None], "decode")
         toks = self.sched.generate(self, lambda i: x0, 1)
         return toks[-1]
+
+    def _decode_spec(self, active: List[int], k: int) -> np.ndarray:
+        """Draft-then-verify decode step (main thread): the resident
+        draft proposes ``k`` tokens while ``prime_weights`` streams the
+        verify pass's first weight loads over the otherwise-idle link;
+        the target then scores all ``k+1`` positions in ONE trip through
+        the streamed layer stack and the greedy accept rule
+        (``core.draft.accepted_tokens``) emits the longest prefix that
+        matches non-speculative decode — plus the target's bonus token
+        at the divergence.  Rejected rows are invalidated in the tiered
+        store (``truncate``) and the stale KV preloads dropped."""
+        self._step_setup(active)
+        self._spec_s = k + 1
+        # verify-pass weight loads stream while the draft computes (the
+        # warm-window generalization of the cross-step preload; a warm
+        # tail already has them in flight, making this a no-op)
+        t0 = time.perf_counter()
+        primed = self.sched.prime_weights(self)
+        props = np.asarray(self.draft.propose(self.tokens, self.pos, k),
+                           np.int32)                       # (b_max, k)
+        draft_s = time.perf_counter() - t0
+        # verify input: [current token, d1..dk] at positions pos..pos+k
+        seq = np.concatenate(
+            [np.asarray(self.tokens, np.int32)[:, None], props], axis=1)
+        self._pos_dev = jnp.asarray(self.pos)
+        pos_mat = self._pos_dev[:, None] + jnp.arange(k + 1)[None, :]
+        self._angles = T._angles(self.cfg, pos_mat)
+        x0 = self._embed(self.resident["embed"], jnp.asarray(seq), "decode")
+        toks = self.sched.generate(self, lambda i: x0, 1)
+        tgt = np.asarray(toks[-1])                         # (b_max, k+1)
+        # greedy accept/reject + row invalidation.  Saves may still be in
+        # flight (warm mode) and would re-write rejected rows after the
+        # truncate; drain first.  The in-flight KV preloads are stale
+        # either way — a spec step advances the extent by up to k+1,
+        # past the +1 the warm tail priced — so they are dropped and the
+        # next step reloads fresh (weight preloads stay: immutable).
+        self.sched.drain_saves()
+        self.sched.drop_kv_preloads()
+        # the dropped preloads memoized their extents (priced at the old
+        # +1-per-step heuristic); with the tasks gone the memos are dead
+        # weight, and the next step's fresh loads must re-price at the
+        # advanced positions — a stale memo under-ships rows the verify
+        # mask then admits as zeros, corrupting the softmax
+        self._extent_memo.clear()
+        emitted: Dict[int, List[int]] = {}
+        accepts = []
+        for i in active:
+            acc = accepted_tokens(props[i], tgt[i])
+            emitted[i] = acc
+            accepts.append(len(acc) - 1)
+            # valid rows: inputs [cur, d1..da] at pos..pos+a
+            self.kvstore.truncate(i, int(self._pos_snap[i]) + len(acc))
+        self._spec_emitted = emitted
+        self.stats["spec_steps"] += 1
+        self.stats["spec_proposed"] += k * len(active)
+        self.stats["spec_accepted"] += int(sum(accepts))
+        self.trace.meta.setdefault("spec_steps", []).append(dict(
+            k=int(k), primed=int(primed), draft_s=float(draft_s),
+            accepts=[int(a) for a in accepts]))
+        nt = np.zeros(self.b_max, np.int32)
+        for i in active:
+            nt[i] = emitted[i][-1]
+        return nt
 
     # ---- slot spill/restore (host<->host; rows already offloaded) -----------
     def _offload_snapshot(self, slot: int):

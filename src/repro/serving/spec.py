@@ -63,8 +63,10 @@ from repro.core.pipeline import PIPELINE_MODES
 __all__ = [
     "EngineSpec", "ResolvedPlan", "SpecError", "UnsupportedModelError",
     "create_engine", "build_lm", "offload_capability",
+    "spec_decode_capability",
     "PreloadPolicy", "StaticDepth", "AdaptiveDepth", "Pressure",
     "QuantPolicy", "WeightsInt4", "quant_policy_for",
+    "DraftPolicy", "draft_policy_for",
     "warn_deprecated_once", "reset_deprecation_warnings",
     "CLI_FLAGS", "FlagSpec", "NO_FLAG_FIELDS", "WORKLOAD_FLAGS",
     "add_spec_args", "spec_from_args",
@@ -123,6 +125,27 @@ def offload_capability(cfg: ModelConfig) -> Optional[str]:
         return "embeds_frontend"
     if cfg.rope_theta == 0:
         return "no_rope"
+    return None
+
+
+def spec_decode_capability(cfg: ModelConfig) -> Optional[str]:
+    """The capability that rules out speculative decoding for ``cfg`` as
+    the TARGET model, or None when supported.  The verify pass scores
+    k+1 positions in one ragged decode step
+    (``attention.spec_decode_attention``), which exists for global
+    attention only — window/MLA/SSM mixers keep single-token decode
+    state.  MoE is out too: routing k+1 tokens jointly changes the
+    capacity/slot assignment versus k+1 sequential steps, which would
+    break the bit-exact parity speculation promises."""
+    cap = offload_capability(cfg)
+    if cap is not None:
+        return cap
+    from repro.configs.base import ATTN, MOE
+    for spec in tuple(cfg.pattern) + tuple(cfg.remainder):
+        if spec.mixer != ATTN:
+            return f"mixer_{spec.mixer}"
+        if spec.ffn == MOE:
+            return "moe_ffn"
     return None
 
 
@@ -205,6 +228,9 @@ class EngineSpec:
     n_io_threads: int = 3
     cold_reads: bool = False
     sim_bw: Optional[float] = None
+    # -- speculative decoding ----------------------------------------------
+    draft_arch: Optional[str] = None    # device-resident draft arch; None=off
+    spec_k: Optional[int] = None        # proposals per verify (None: auto)
     # -- ad-hoc config override (not serialized, not compared) -------------
     cfg: Optional[ModelConfig] = field(default=None, compare=False,
                                        repr=False)
@@ -257,8 +283,26 @@ class EngineSpec:
             bad(f"block_bytes must be >= 4096, got {self.block_bytes}")
         if self.sim_bw is not None and self.sim_bw <= 0:
             bad(f"sim_bw must be > 0, got {self.sim_bw}")
+        if self.spec_k is not None and self.spec_k < 1:
+            bad(f"spec_k must be >= 1 (or None for auto), got {self.spec_k}")
+        if self.spec_k is not None and self.draft_arch is None:
+            bad("spec_k needs a draft model (set draft_arch; speculation "
+                "is draft-proposes, target-verifies)")
+        if self.draft_arch is not None:
+            dcfg = _registry_config(self.draft_arch, self.scaled, None)
+            if dcfg.vocab_size != self.model_config().vocab_size:
+                bad(f"draft_arch {self.draft_arch!r} vocab "
+                    f"({dcfg.vocab_size}) != target vocab "
+                    f"({self.model_config().vocab_size}); the draft "
+                    f"proposes target token ids")
+            cap = spec_decode_capability(self.model_config())
+            if cap is not None:
+                bad(f"draft_arch needs a speculation-capable target "
+                    f"(failing capability: {cap}; global-attention dense "
+                    f"decoder stacks only)")
         if self.offload is False:
-            for name in ("quant", "kv_mode", "sim_bw", "depth", "warm"):
+            for name in ("quant", "kv_mode", "sim_bw", "depth", "warm",
+                         "draft_arch", "spec_k"):
                 if getattr(self, name) is not None:
                     bad(f"{name} only applies to the offloaded engine "
                         f"(offload=False pins the resident ServingEngine)")
@@ -361,11 +405,14 @@ class EngineSpec:
             kv_mode = None
             fused = True
             sim_bw = None
+            draft_arch, spec_k = None, None
             for name, was in (("quant", self.quant),
                               ("kv_mode", self.kv_mode),
                               ("sim_bw", self.sim_bw),
                               ("warm", self.warm),
-                              ("depth", self.depth)):
+                              ("depth", self.depth),
+                              ("draft_arch", self.draft_arch),
+                              ("spec_k", self.spec_k)):
                 if was is not None:
                     prov[name] = (f"dropped ({was!r}): the resident engine "
                                   f"streams nothing over the link")
@@ -446,6 +493,23 @@ class EngineSpec:
                 fused = bool(self.fused_int4)
                 prov["fused_int4"] = f"explicit: fused_int4={fused}"
             sim_bw = self.sim_bw
+            draft_arch = self.draft_arch
+            if draft_arch is None:
+                spec_k = None
+            else:
+                prov["draft_arch"] = (
+                    f"explicit: device-resident draft {draft_arch!r} "
+                    f"proposes, the streamed target verifies k+1 positions "
+                    f"in one ragged decode step")
+                if self.spec_k is None:
+                    spec_k = 4
+                    prov["spec_k"] = ("auto: 4 proposals per verify pass "
+                                      "(the acceptance-length sweet spot on "
+                                      "weight-dominated links; see "
+                                      "benchmarks serving_spec_decode)")
+                else:
+                    spec_k = int(self.spec_k)
+                    prov["spec_k"] = f"explicit: spec_k={spec_k}"
 
         # ---- resident-only fields ----
         if self.moe_quant is None:
@@ -482,6 +546,7 @@ class EngineSpec:
             cache_on=self.cache_on, disk_root=disk_root,
             block_bytes=block_bytes, n_io_threads=self.n_io_threads,
             cold_reads=self.cold_reads, sim_bw=sim_bw,
+            draft_arch=draft_arch, spec_k=spec_k,
             device_budget=budget.device, host_budget=budget.host,
             provenance=prov, cfg=self.cfg)
 
@@ -521,6 +586,8 @@ class ResolvedPlan:
     n_io_threads: int
     cold_reads: bool
     sim_bw: Optional[float]
+    draft_arch: Optional[str]    # device-resident draft; None = no speculation
+    spec_k: Optional[int]        # proposals per verify pass; None = off
     # the budget the plan was resolved under (bytes) — recorded so the
     # plan is auditable and so AdaptiveDepth re-sizes against the SAME
     # budget at run time
@@ -547,7 +614,9 @@ class ResolvedPlan:
                 f"depth={self.depth}({self.depth_policy}) "
                 f"quant={self.quant or 'fp32'} "
                 f"kv={self.kv_mode or 'n/a'} b_max={self.b_max} "
-                f"max_len={self.max_len}")
+                f"max_len={self.max_len}"
+                + (f" draft={self.draft_arch} spec_k={self.spec_k}"
+                   if self.draft_arch else ""))
 
 
 # ---------------------------------------------------------------------------
@@ -725,6 +794,51 @@ def preload_policy_for(plan: ResolvedPlan,
                              kv_mode=plan.kv_mode,
                              placement=plan.placement, budget=budget)
     return StaticDepth(max(1, plan.depth))
+
+
+# ---------------------------------------------------------------------------
+# DraftPolicy seam
+# ---------------------------------------------------------------------------
+
+
+class DraftPolicy:
+    """Speculative-decoding seam: WHO proposes and HOW MANY tokens per
+    verify pass.  The policy is resolved from the plan like
+    ``PreloadPolicy``/``QuantPolicy`` (``draft_arch``/``spec_k`` fields,
+    provenance-stamped); ``build()`` constructs the fully
+    device-resident draft model (``core.draft.ResidentDraft``) sized to
+    the engine's slots.  Engines treat the draft as an opaque proposer
+    (``prefill_slot``/``propose``), so tests can inject a fake draft —
+    greedy accept/reject is correct for ANY proposal stream, and the
+    parity matrix exercises exactly that."""
+
+    def __init__(self, arch: str, scaled: bool, k: int, *, seed: int = 0):
+        if k < 1:
+            raise SpecError(f"spec_k must be >= 1, got {k}")
+        self.arch = arch
+        self.scaled = scaled
+        self.k = int(k)
+        self.seed = int(seed)
+
+    def build(self, *, b_max: int, max_len: int):
+        from repro.core.draft import ResidentDraft
+        cfg = _registry_config(self.arch, self.scaled, None)
+        return ResidentDraft(cfg, b_max=b_max, max_len=max_len,
+                             seed=self.seed)
+
+    def __repr__(self):
+        return (f"DraftPolicy({self.arch!r}"
+                f"{'(scaled)' if self.scaled else ''}, k={self.k})")
+
+
+def draft_policy_for(plan: ResolvedPlan) -> Optional[DraftPolicy]:
+    """The plan's draft policy, or None when the plan doesn't
+    speculate (``draft_arch`` unset, or dropped by a resident
+    resolution)."""
+    if plan.draft_arch is None:
+        return None
+    return DraftPolicy(plan.draft_arch, plan.scaled, plan.spec_k or 1,
+                       seed=plan.seed)
 
 
 # ---------------------------------------------------------------------------
@@ -928,6 +1042,17 @@ CLI_FLAGS: Tuple[FlagSpec, ...] = (
              help="simulated link bandwidth floor in bytes/s "
                   "(deterministic transfer timing; see "
                   "docs/BENCHMARKS.md)"),
+    FlagSpec("--draft-arch", "draft_arch",
+             help="speculative decoding (--offload only): registry arch "
+                  "of a fully device-resident draft model; the draft "
+                  "proposes --spec-k tokens, the streamed target scores "
+                  "all k+1 positions in ONE ragged decode step and "
+                  "greedy accept/reject keeps the non-speculative token "
+                  "stream bit-exact (see docs/TUNING.md)"),
+    FlagSpec("--spec-k", "spec_k", type=int, metavar="K",
+             help="draft proposals per verify pass (needs --draft-arch; "
+                  "default 4 — the link amortization grows with the "
+                  "acceptance length)"),
 )
 
 # EngineSpec fields deliberately without a CLI flag (engine-internal or

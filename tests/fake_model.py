@@ -12,6 +12,8 @@ WEIGHT_LOAD per *routed* expert through the pool from inside the compute
 callback — exactly how ``OffloadedServingEngine._compute_moe`` overlaps
 expert streaming with compute.
 """
+import numpy as np
+
 from repro.core.pipeline import PipelineScheduler, VirtualPool
 from repro.core.tasks import Task, TaskType
 
@@ -159,3 +161,91 @@ def run_virtual_moe(mode: str = "performance", n_layers: int = 2,
         outs = sched.generate(model, lambda i: 0, iters)
     sched.shutdown()
     return model, pool.trace, outs
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding fakes: proposal sources for the engines' parity
+# tests, and a virtual-clock driver for the draft-then-verify schedule.
+# ---------------------------------------------------------------------------
+
+
+class FakeDraft:
+    """Proposal stand-in for the real ``core.draft.ResidentDraft``:
+    deterministic seeded pseudo-random tokens (mostly WRONG — exercising
+    the rejection/truncate path).  Greedy accept/reject keeps the emitted
+    stream bit-identical to non-speculative decode for ANY proposal
+    source, so the engines' parity matrix injects this instead of paying
+    for a second real model."""
+
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = int(vocab)
+        self.rng = np.random.default_rng(seed)
+        self.prefills = []                 # (slot-or-'batch', n_tokens)
+
+    def prefill_slot(self, slot, prompt):
+        self.prefills.append((int(slot), len(prompt)))
+
+    def prefill_batch(self, tokens):
+        self.prefills.append(("batch", int(tokens.shape[1])))
+
+    def propose(self, tokens, pos, k):
+        b = len(np.asarray(tokens).reshape(-1))
+        return self.rng.integers(0, self.vocab, (b, k)).astype(np.int32)
+
+
+class OracleDraft(FakeDraft):
+    """Proposals replayed from the recorded non-speculative stream(s) —
+    the target agrees with every one, forcing FULL acceptance each step
+    (the truncate-is-a-no-op boundary and the bench's best case).
+    ``streams``: per-row emitted token lists; ``prompt_len``: the shared
+    prompt length (uniform batch / single slot).  At a step's start the
+    cache holds rows ``0..pos-1`` and the LAST emitted token (stream
+    index ``pos - prompt_len``, the prefill's token not yet written back)
+    is the verify input, so row r's next proposal is stream index
+    ``pos[r] - prompt_len + 1``."""
+
+    def __init__(self, streams, prompt_len: int):
+        super().__init__(vocab=1)
+        self.streams = [list(map(int, s)) for s in streams]
+        self.prompt_len = int(prompt_len)
+
+    def propose(self, tokens, pos, k):
+        pos = np.asarray(pos).reshape(-1)
+        out = np.zeros((len(pos), k), np.int32)
+        for r, st in enumerate(self.streams):
+            idx = int(pos[r]) - self.prompt_len + 1   # next stream index
+            for t in range(k):
+                out[r, t] = st[idx + t] if 0 <= idx + t < len(st) else 0
+        return out
+
+
+DRAFT_NAME = "draft"      # virtual draft-compute event (replay skips it)
+
+
+def run_virtual_spec(iters: int = 3, n_layers: int = 3, depth: int = 1,
+                     reject=(), pool_width: int = 3):
+    """Drive the engines' speculative step sequence on the virtual clock:
+    per decode step, ``prime_weights`` pre-submits the verify pass's
+    first weight window, the draft runs as a main-thread COMPUTE while
+    those loads stream, the verify runs as one warm ``generate`` call,
+    and steps listed in ``reject`` finish with the engines' rejection
+    sequence (``drain_saves`` + ``drop_kv_preloads``).  Returns (model,
+    trace, steps) where steps[i] = dict(primed, draft=(t0, t1),
+    outs)."""
+    model = FakeModel(n_layers)
+    pool = VirtualPool(pool_width, cost_fn=cost_fn)
+    sched = PipelineScheduler(model.n, "performance", pool=pool,
+                              trace=pool.trace, warm=True, depth=depth)
+    steps = []
+    for it in range(iters):
+        primed = sched.prime_weights(model)
+        d = Task(TaskType.COMPUTE, f"{DRAFT_NAME}[{it}]", lambda: None)
+        pool.run_on_main(d)
+        outs = sched.generate(model, lambda i: 0, 1)
+        if it in reject:
+            sched.drain_saves()
+            sched.drop_kv_preloads()
+        steps.append(dict(primed=primed, draft=(d.t_start, d.t_end),
+                          outs=outs))
+    sched.shutdown()
+    return model, pool.trace, steps

@@ -155,6 +155,85 @@ def test_spill_restore_lossless(kv_mode):
 
 
 # ---------------------------------------------------------------------------
+# truncate: the speculative rejection path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_mode", ["fp32", "int4"])
+def test_truncate_then_append_bit_exact(kv_mode):
+    """The speculative invariant the rejection path rests on: a slot
+    that admitted k+1 verify rows, truncated back to the accepted
+    prefix, and re-appended fresh rows is BIT-IDENTICAL to a store that
+    never saw the rejected rows — in fp32 and in packed INT4 (zero
+    packed nibbles under zero scales dequantize to exact zeros, so no
+    ghost of the rejected rows survives in scales or padding)."""
+    KEEP, APPEND = 8, 4
+    junk = _rows(7, (MAX_LEN,) + FEAT)
+    clean = junk.copy()
+    clean[KEEP:] = 0                   # what an untainted slot looks like
+    fresh = _rows(8, (APPEND,) + FEAT)
+    other = _rows(9, (MAX_LEN,) + FEAT)
+    st_t, st_ref = _store(kv_mode), _store(kv_mode)
+    for st, rows in ((st_t, junk), (st_ref, clean)):
+        for j in range(2):
+            st.save_prefill(j, 1, {"k": rows, "v": rows})
+            st.save_prefill(j, 0, {"k": other, "v": other})  # bystander
+    st_t.truncate(1, KEEP)
+    for st in (st_t, st_ref):          # truncate-then-append round-trip
+        for t in range(APPEND):
+            dec = np.zeros((2, 1) + FEAT, np.float32)
+            dec[1, 0] = fresh[t]
+            pos = np.full(B_MAX, KEEP + t, np.int32)
+            for j in range(2):
+                st.save_decode(j, {"k": dec, "v": dec}, active=[1], pos=pos)
+    for j in range(2):
+        for name in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(st_t.load(j)[name]),
+                np.asarray(st_ref.load(j)[name]), err_msg=f"{j}/{name}")
+    if kv_mode == "int4":              # live packed bytes match too, not
+        live = KEEP + APPEND           # just the dequantized view; the
+        for j in range(2):             # truncated tail is EXACT zeros
+            for name in ("k", "v"):    # (the ref's prefill encodes zero
+                lt = st_t._units[j][name]       # rows as offset-binary
+                lr = st_ref._units[j][name]     # zeros under a floor
+                np.testing.assert_array_equal(  # scale instead)
+                    lt.packed[1, :live], lr.packed[1, :live])
+                np.testing.assert_array_equal(
+                    lt.scale[1, :live], lr.scale[1, :live])
+                assert (lt.packed[1, live:] == 0).all()
+                assert (lt.scale[1, live:] == 0).all()
+
+
+@pytest.mark.parametrize("kv_mode", ["fp32", "int4"])
+def test_truncate_clamps_and_zeroes(kv_mode):
+    st = _store(kv_mode)
+    rows = _rows(11, (MAX_LEN,) + FEAT)
+    st.save_prefill(0, 2, {"k": rows, "v": rows})
+    before = np.asarray(st.load(0)["k"][2]).copy()
+    st.truncate(2, MAX_LEN + 99)       # beyond the slab: no-op
+    np.testing.assert_array_equal(np.asarray(st.load(0)["k"][2]), before)
+    st.truncate(2, -5)                 # below zero: clamp, full wipe
+    assert (np.asarray(st.load(0)["k"][2]) == 0).all()
+
+
+def test_truncate_leaves_non_sequence_leaves_alone():
+    """Rolling-window / state leaves (kind != 'kv') carry no position
+    extent — they are rewritten every step, and truncate must not touch
+    them."""
+    st = TieredKVStore(
+        [{"k": ((2, 8, 4), np.float32), "conv": ((2, 3, 6), np.float32)}],
+        [{"k": "kv", "conv": "rep"}], b_max=2, max_len=8, kv_mode="int4")
+    k_rows = _rows(12, (8, 4))
+    conv = _rows(13, (3, 6))
+    st.save_prefill(0, 1, {"k": k_rows, "conv": conv})
+    st.truncate(1, 2)
+    out = st.load(0, 2, 8)
+    assert (np.asarray(out["k"][1][2:]) == 0).all()
+    np.testing.assert_array_equal(np.asarray(out["conv"][1]), conv)
+
+
+# ---------------------------------------------------------------------------
 # store through the scheduler on the virtual clock
 # ---------------------------------------------------------------------------
 

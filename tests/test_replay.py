@@ -50,6 +50,12 @@ GOLDEN = {
     "trace_warm_d2.json": [44.0, 30.0, 30.0, 30.0],
 }
 
+# fixtures checked against the generator but NOT replayed bit-for-bit:
+# the speculative recording carries draft[i] main-thread COMPUTE events
+# that replay() folds out, so its replayed timeline is legitimately
+# faster than the recording (asserted separately below)
+FIXTURE_NAMES = sorted(GOLDEN) + ["trace_spec_d2.json"]
+
 
 def _load(name):
     return Trace.from_json((FIXTURES / name).read_text())
@@ -79,7 +85,7 @@ def test_fixture_replay_bit_for_bit(name):
     assert res.trace.meta["replayed"] is True
 
 
-@pytest.mark.parametrize("name", sorted(GOLDEN))
+@pytest.mark.parametrize("name", FIXTURE_NAMES)
 def test_fixture_matches_generator(name):
     """The committed fixture is exactly what the generator would write —
     scheduler or fake-model changes that alter the recorded timeline
@@ -146,6 +152,23 @@ def test_replay_depth_decision_capped_and_sourced():
     d, why = replay_depth_decision(rec, depth_cap=2)
     assert 1 <= d <= 2
     assert "source=replay" in why and "simulated argmin" in why
+
+
+def test_spec_trace_replays_with_draft_folded():
+    """A speculative recording replays through the same machinery: the
+    draft[i] main-thread COMPUTE events carry names the replayer skips,
+    so the replayed schedule is the verify-only pipeline — strictly no
+    slower than the recording (which serialized draft compute between
+    steps) — and replaying the replay is a fixed point."""
+    rec = _load("trace_spec_d2.json")
+    res = replay(rec)
+    assert len(res.step_times_s) == 4
+    assert res.steady_step_s > 0.0
+    assert not any(e.name.startswith("draft")
+                   for e in res.trace.events())
+    assert res.steady_step_s < steady_step_s(rec)
+    again = replay(res.trace)
+    assert again.step_times_s == res.step_times_s
 
 
 def test_moe_trace_replays_with_experts_folded():

@@ -1,0 +1,437 @@
+"""Speculative decoding through the offload pipeline, proven bit-exact.
+
+Greedy accept/reject makes speculative decode a *scheduling* change
+only: for ANY proposal stream the emitted tokens are bit-identical to
+non-speculative greedy decode.  This file asserts that promise across
+the full parity matrix — engine {OffloadedServingEngine, PipelinedLM}
+x depth {1, 2} x weights {fp32, int4} x kv_mode {fp32, int4} — with a
+deliberately BAD draft (seeded pseudo-random proposals exercising the
+rejection/truncate path), plus an oracle draft forcing full acceptance
+(the truncate-is-a-no-op boundary), the real device-resident
+``ResidentDraft`` end-to-end, the DraftPolicy/EngineSpec resolution
+seam, and a hypothesis property suite for the shared accept kernel.
+"""
+import argparse
+
+import numpy as np
+import pytest
+
+from fake_model import FakeDraft, OracleDraft
+from repro.configs import get_config, scaled_down
+from repro.configs.base import (ATTN, DENSE, MOE, LayerSpec, ModelConfig,
+                                MoEConfig)
+from repro.core.draft import ResidentDraft, accept_length, accepted_tokens
+from repro.core.engine import PipelinedLM
+from repro.serving import (EngineSpec, OffloadedServingEngine, Request,
+                           create_engine)
+from repro.serving.spec import (DraftPolicy, SpecError,
+                                UnsupportedModelError, add_spec_args,
+                                build_lm, draft_policy_for,
+                                spec_decode_capability, spec_from_args)
+
+try:                                  # optional test dep
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+CFG = ModelConfig(name="pipo-tiny", num_layers=3, d_model=128, num_heads=4,
+                  num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+                  pattern=(LayerSpec(ATTN, DENSE),))
+
+MOE_CFG = ModelConfig(name="pipo-moe", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+                      pattern=(LayerSpec(ATTN, MOE),),
+                      moe=MoEConfig(num_experts=4, top_k=2, expert_d_ff=128,
+                                    num_shared=1, shared_d_ff=128))
+
+
+# ---------------------------------------------------------------------------
+# serving parity matrix: FakeDraft vs non-speculative reference
+# ---------------------------------------------------------------------------
+
+
+def _prompts(n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, (5 + i,)).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve_engine(quant, kv, depth=1):
+    plan = EngineSpec(arch=CFG.name, cfg=CFG, offload=True,
+                      placement="host", pipeline="performance", b_max=2,
+                      max_len=64, quant=quant, kv_mode=kv,
+                      depth=depth).resolve()
+    return create_engine(plan)
+
+
+def _serve(eng, prompts, max_new=6):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new=max_new))
+    done = eng.run()
+    out = {r.rid: r.out for r in done}
+    eng.shutdown()
+    return out
+
+
+_REF = {}                         # (quant, kv) -> non-speculative tokens
+
+
+def _ref_tokens(quant, kv):
+    key = (quant, kv)
+    if key not in _REF:
+        _REF[key] = _serve(_serve_engine(quant, kv), _prompts())
+    return _REF[key]
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+@pytest.mark.parametrize("kv", ["fp32", "int4"])
+@pytest.mark.parametrize("quant", [None, "int4"])
+def test_serving_spec_parity_matrix(quant, kv, depth):
+    """The acceptance criterion: speculative greedy decode emits the
+    SAME token stream as non-speculative greedy decode — with a bad
+    draft (mostly-rejected proposals), at every depth, under INT4
+    weight streaming and INT4 KV streaming.  Rejections exercise the
+    truncate + drop-stale-preloads path every few steps; 3 requests
+    through 2 slots exercise slot reuse with a live draft cache."""
+    eng = _serve_engine(quant, kv, depth)
+    eng.attach_draft(FakeDraft(CFG.vocab_size, seed=3), 3)
+    got = _serve(eng, _prompts())
+    assert got == _ref_tokens(quant, kv)
+    assert eng.stats["spec_steps"] > 0
+    assert eng.stats["spec_proposed"] > 0
+    # a bad draft rejects most proposals but parity never depends on it
+    assert eng.stats["spec_accepted"] <= eng.stats["spec_proposed"]
+
+
+def test_serving_oracle_draft_full_acceptance():
+    """OracleDraft replays the recorded non-speculative stream, so the
+    target agrees with every proposal: acceptance == proposals, each
+    verify pass emits k+1 tokens, truncate is a no-op — and the stream
+    still matches bit-for-bit."""
+    prompt = _prompts(1)[:1]
+    ref = _serve(_serve_engine(None, "fp32"), prompt, max_new=8)
+    eng = _serve_engine(None, "fp32")
+    eng.attach_draft(OracleDraft([ref[0]], prompt_len=len(prompt[0])), 3)
+    got = _serve(eng, prompt, max_new=8)
+    assert got == ref
+    assert eng.stats["spec_steps"] > 0
+    assert eng.stats["spec_accepted"] == eng.stats["spec_proposed"] > 0
+    for s in eng.trace.meta["spec_steps"]:
+        assert s["accepts"] == [s["k"]] * len(s["accepts"])
+
+
+def test_serving_spec_trace_meta_stamped():
+    """The trace carries what replay()/benchmarks need to cost a
+    speculative schedule: spec_k plus one spec_steps record per verify
+    pass (k, primed weight loads, draft seconds, per-slot acceptance
+    lengths), consistent with the engine's stats counters."""
+    eng = _serve_engine(None, "fp32")
+    eng.attach_draft(FakeDraft(CFG.vocab_size, seed=1), 3)
+    _serve(eng, _prompts(2))
+    meta = eng.trace.meta
+    assert meta["spec_k"] == 3
+    steps = meta["spec_steps"]
+    assert len(steps) == eng.stats["spec_steps"] > 0
+    for s in steps:
+        assert 1 <= s["k"] <= 3
+        assert s["primed"] >= 0 and s["draft_s"] >= 0.0
+        assert all(0 <= a <= s["k"] for a in s["accepts"])
+    assert (sum(sum(s["accepts"]) for s in steps)
+            == eng.stats["spec_accepted"])
+
+
+def test_serving_draft_prefilled_on_admission():
+    """Every admitted request's prompt is prefilled into the draft's
+    device cache (the draft is slaved to the engine's slot state)."""
+    eng = _serve_engine(None, "fp32")
+    draft = FakeDraft(CFG.vocab_size)
+    eng.attach_draft(draft, 2)
+    prompts = _prompts(3)
+    _serve(eng, prompts)
+    assert sorted(n for _, n in draft.prefills) == sorted(
+        len(p) for p in prompts)
+    assert all(0 <= slot < 2 for slot, _ in draft.prefills)
+
+
+def test_serving_resident_draft_end_to_end():
+    """The real path, no fakes: a plan with draft_arch builds a
+    device-resident ResidentDraft in the engine constructor and the
+    emitted stream still matches the non-speculative engine exactly
+    (the draft's quality only moves acceptance, never tokens)."""
+    cfg = scaled_down(get_config("tinyllama-1.1b"))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)]
+    ref = _serve(create_engine(EngineSpec(
+        arch="tinyllama-1.1b", scaled=True, cfg=cfg, offload=True,
+        placement="host", b_max=1, max_len=64)), prompts, max_new=5)
+    eng = create_engine(EngineSpec(
+        arch="tinyllama-1.1b", scaled=True, cfg=cfg, offload=True,
+        placement="host", b_max=1, max_len=64,
+        draft_arch="tinyllama-1.1b", spec_k=2))
+    assert isinstance(eng, OffloadedServingEngine)
+    assert isinstance(eng.draft, ResidentDraft)
+    assert eng._spec_k == 2
+    got = _serve(eng, prompts, max_new=5)
+    assert got == ref
+    assert eng.stats["spec_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# PipelinedLM parity matrix
+# ---------------------------------------------------------------------------
+
+
+def _lm_plan(kv, depth, quant=None):
+    return EngineSpec(arch=CFG.name, cfg=CFG, offload=True,
+                      placement="host", pipeline="performance", b_max=2,
+                      max_len=48, quant=quant, kv_mode=kv,
+                      depth=depth).resolve()
+
+
+_LM_REF = {}
+
+
+def _lm_ref(kv):
+    if kv not in _LM_REF:
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, 512, (2, 10)).astype(np.int32)
+        toks, _ = build_lm(_lm_plan(kv, 1)).generate(prompt, gen_len=8)
+        _LM_REF[kv] = (prompt, toks)
+    return _LM_REF[kv]
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+@pytest.mark.parametrize("kv", ["fp32", "int4"])
+def test_lm_spec_parity_matrix(kv, depth):
+    """Batch generation through the same tiered stores: the uniform
+    batch accepts min-over-rows proposals per step, and the stream is
+    bit-identical to non-speculative generation at every depth and KV
+    precision."""
+    prompt, ref = _lm_ref(kv)
+    lm = build_lm(_lm_plan(kv, depth))
+    lm.attach_draft(FakeDraft(512, seed=5), 3)
+    toks, stats = lm.generate(prompt, gen_len=8)
+    np.testing.assert_array_equal(toks, ref)
+    assert stats["spec_steps"] > 0
+    assert stats["spec_accepted"] <= stats["spec_proposed"]
+
+
+def test_lm_oracle_draft_full_acceptance():
+    """Full acceptance on the uniform batch: the oracle proposes each
+    row's own recorded stream, so every step emits k+1 tokens per row
+    and the step count collapses toward gen_len / (k+1)."""
+    prompt, ref = _lm_ref("fp32")
+    lm = build_lm(_lm_plan("fp32", 1))
+    lm.attach_draft(OracleDraft(list(ref), prompt_len=prompt.shape[1]), 3)
+    toks, stats = lm.generate(prompt, gen_len=8)
+    np.testing.assert_array_equal(toks, ref)
+    assert stats["spec_accepted"] == stats["spec_proposed"] > 0
+    assert stats["spec_steps"] == 2          # ceil(8 / (3+1)) verify passes
+
+
+def test_lm_int4_weights_spec_parity():
+    """INT4 weight streaming and speculation compose in PipelinedLM."""
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 512, (2, 10)).astype(np.int32)
+    ref, _ = build_lm(_lm_plan("fp32", 1, quant="int4")).generate(
+        prompt, gen_len=6)
+    lm = build_lm(_lm_plan("fp32", 1, quant="int4"))
+    lm.attach_draft(FakeDraft(512, seed=2), 2)
+    toks, stats = lm.generate(prompt, gen_len=6)
+    np.testing.assert_array_equal(toks, ref)
+    assert stats["spec_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# DraftPolicy / EngineSpec resolution seam
+# ---------------------------------------------------------------------------
+
+
+def test_spec_k_requires_draft_arch():
+    with pytest.raises(SpecError, match="draft_arch"):
+        EngineSpec(offload=True, spec_k=3).validate()
+    with pytest.raises(SpecError, match="spec_k"):
+        EngineSpec(offload=True, draft_arch="tinyllama-1.1b",
+                   spec_k=0).validate()
+
+
+def test_draft_vocab_must_match_target():
+    with pytest.raises(SpecError, match="vocab"):
+        EngineSpec(arch=CFG.name, cfg=CFG, offload=True,
+                   draft_arch="tinyllama-1.1b").validate()
+
+
+def test_draft_rejected_on_resident_engine():
+    with pytest.raises(SpecError, match="offload"):
+        EngineSpec(offload=False, draft_arch="tinyllama-1.1b").validate()
+
+
+def test_draft_rejected_for_moe_target():
+    # draft vocab matches (same arch), so the capability gate is what
+    # fires: MoE targets can't verify k+1 tokens without re-routing
+    with pytest.raises(SpecError, match="moe_ffn"):
+        EngineSpec(arch="mixtral-8x7b", scaled=True, offload=True,
+                   draft_arch="mixtral-8x7b").validate()
+
+
+def test_spec_decode_capability():
+    assert spec_decode_capability(CFG) is None
+    assert spec_decode_capability(MOE_CFG) == "moe_ffn"
+    assert spec_decode_capability(
+        scaled_down(get_config("tinyllama-1.1b"))) is None
+
+
+def test_resolve_spec_k_provenance():
+    spec = EngineSpec(arch="tinyllama-1.1b", scaled=True, offload=True,
+                      draft_arch="tinyllama-1.1b")
+    plan = spec.resolve()
+    assert plan.draft_arch == "tinyllama-1.1b" and plan.spec_k == 4
+    assert plan.provenance["spec_k"].startswith("auto")
+    assert "draft_arch" in plan.provenance
+    explicit = EngineSpec(arch="tinyllama-1.1b", scaled=True, offload=True,
+                          draft_arch="tinyllama-1.1b", spec_k=2).resolve()
+    assert explicit.spec_k == 2
+    assert explicit.provenance["spec_k"].startswith("explicit")
+    assert "draft" in explicit.summary() and "spec_k=2" in explicit.summary()
+    # JSON round-trip carries the speculation fields
+    assert type(plan).from_json(plan.to_json()) == plan
+
+
+def test_resolve_drops_draft_on_resident_fallback():
+    """offload=None with an unsupported-for-offload target falls back to
+    the resident engine and DROPS the speculation fields (provenance
+    says why); draft_policy_for then returns None."""
+    plan = EngineSpec(arch="tinyllama-1.1b", scaled=True,
+                      placement="device",
+                      draft_arch="tinyllama-1.1b").resolve()
+    assert plan.engine == "resident"
+    assert plan.draft_arch is None and plan.spec_k is None
+    assert "dropped" in plan.provenance["draft_arch"]
+    assert draft_policy_for(plan) is None
+
+
+def test_draft_policy_for_plan():
+    plan = EngineSpec(arch="tinyllama-1.1b", scaled=True, offload=True,
+                      draft_arch="tinyllama-1.1b", spec_k=3).resolve()
+    dp = draft_policy_for(plan)
+    assert isinstance(dp, DraftPolicy)
+    assert dp.k == 3 and dp.arch == "tinyllama-1.1b" and dp.scaled
+    with pytest.raises(SpecError, match="spec_k"):
+        DraftPolicy("tinyllama-1.1b", True, 0)
+
+
+def test_cli_flags_round_trip():
+    parser = argparse.ArgumentParser()
+    add_spec_args(parser)
+    args = parser.parse_args(["--offload", "--draft-arch",
+                              "tinyllama-1.1b", "--spec-k", "5"])
+    spec = spec_from_args(args)
+    assert spec.draft_arch == "tinyllama-1.1b" and spec.spec_k == 5
+    # absent flags leave speculation off
+    off = spec_from_args(parser.parse_args(["--offload"]))
+    assert off.draft_arch is None and off.spec_k is None
+
+
+def test_attach_draft_rejects_moe_engines():
+    eng = OffloadedServingEngine(MOE_CFG, b_max=1, max_len=32,
+                                 placement="host")
+    with pytest.raises(UnsupportedModelError) as ei:
+        eng.attach_draft(FakeDraft(MOE_CFG.vocab_size), 2)
+    assert ei.value.capability == "moe_ffn"
+    eng.shutdown()
+    lm = PipelinedLM(MOE_CFG, batch=1, max_len=32, placement="host")
+    with pytest.raises(ValueError, match="dense"):
+        lm.attach_draft(FakeDraft(MOE_CFG.vocab_size), 2)
+
+
+# ---------------------------------------------------------------------------
+# the shared accept kernel: hypothesis property suite
+# ---------------------------------------------------------------------------
+
+
+def _sequential_greedy(step, cur, n):
+    out = []
+    for _ in range(n):
+        cur = step(cur)
+        out.append(cur)
+    return out
+
+
+def _speculative_greedy(step, propose, cur, n, k):
+    """Emit >= n tokens via draft-then-verify: the target's greedy map
+    ``step`` scores [cur, d1..dk] and the accept kernel emits the
+    matching prefix plus the bonus token — the engines' loop, distilled."""
+    out = []
+    while len(out) < n:
+        draft = propose(cur, k)
+        target = [step(cur)] + [step(d) for d in draft]
+        acc = accepted_tokens(draft, target)
+        out.extend(acc)
+        cur = acc[-1]
+    return out[:n]
+
+
+if given is not None:
+    @given(seed=st.integers(0, 2**32 - 1),
+           k=st.integers(min_value=1, max_value=6),
+           vocab=st.integers(min_value=2, max_value=32),
+           n=st.integers(min_value=1, max_value=24),
+           quality=st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_spec_greedy_equals_sequential_for_any_draft(seed, k, vocab,
+                                                         n, quality):
+        """For EVERY greedy target map, draft quality, k, and horizon:
+        the speculative stream equals the sequential stream exactly.
+        ``quality`` sweeps the draft from adversarial to oracle — it
+        must move nothing but the step count."""
+        rng = np.random.default_rng(seed)
+        table = rng.integers(0, vocab, vocab)
+        step = lambda t: int(table[t % vocab])
+
+        def propose(cur, k):
+            out, c = [], cur
+            for _ in range(k):
+                c = step(c) if rng.random() < quality \
+                    else int(rng.integers(0, vocab))
+                out.append(c)
+            return out
+
+        want = _sequential_greedy(step, 0, n)
+        got = _speculative_greedy(step, propose, 0, n, k)
+        assert got == want
+
+    @given(draft=st.lists(st.integers(0, 7), min_size=0, max_size=8),
+           target=st.lists(st.integers(0, 7), min_size=9, max_size=9))
+    @settings(max_examples=60, deadline=None)
+    def test_accept_kernel_invariants(draft, target):
+        """accept_length is the longest matching prefix; accepted_tokens
+        is target[:a+1] with 1 <= len <= k+1; truncating the draft never
+        grows acceptance."""
+        a = accept_length(draft, target)
+        assert 0 <= a <= len(draft)
+        assert all(draft[i] == target[i] for i in range(a))
+        assert a == len(draft) or draft[a] != target[a]
+        toks = accepted_tokens(draft, target)
+        assert toks == [int(t) for t in target[:a + 1]]
+        assert 1 <= len(toks) <= len(draft) + 1
+        for cut in range(len(draft)):
+            assert accept_length(draft[:cut], target) == min(a, cut)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_spec_greedy_equals_sequential_for_any_draft():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_accept_kernel_invariants():
+        pass
+
+
+def test_accept_kernel_examples():
+    """Pinned examples (run even without hypothesis): full accept,
+    first-token reject, mid reject."""
+    assert accept_length([1, 2, 3], [1, 2, 3, 9]) == 3
+    assert accepted_tokens([1, 2, 3], [1, 2, 3, 9]) == [1, 2, 3, 9]
+    assert accept_length([5, 2], [1, 2, 3]) == 0
+    assert accepted_tokens([5, 2], [1, 2, 3]) == [1]
+    assert accept_length([1, 9, 3], [1, 2, 3, 4]) == 1
+    assert accepted_tokens([1, 9, 3], [1, 2, 3, 4]) == [1, 2]

@@ -24,9 +24,12 @@ sys.path.insert(0, str(ROOT / "tests"))
 
 FIXTURES = ROOT / "tests" / "fixtures"
 
-# (filename, run_virtual kwargs): a warm depth-1 serving-style pipeline
-# (3 calls of 1 iteration — the per-decode-step drain pattern) and a
-# warm depth-2 window over a longer single call
+# (filename, runner kwargs): a warm depth-1 serving-style pipeline
+# (3 calls of 1 iteration — the per-decode-step drain pattern), a warm
+# depth-2 window over a longer single call, and a speculative
+# draft-then-verify step sequence (runner="spec" dispatches to
+# fake_model.run_virtual_spec; a rejection mid-run drops stale KV
+# preloads, so the fixture records the truncate-path schedule too)
 CASES = (
     ("trace_warm_d1.json",
      dict(mode="performance", n_layers=3, iters=1, warm=True, calls=3,
@@ -34,12 +37,17 @@ CASES = (
     ("trace_warm_d2.json",
      dict(mode="performance", n_layers=3, iters=4, warm=True, calls=1,
           depth=2)),
+    ("trace_spec_d2.json",
+     dict(runner="spec", iters=4, n_layers=3, depth=2, reject=(2,))),
 )
 
 
 def build(kwargs) -> dict:
-    from fake_model import run_virtual
-    _, trace, _ = run_virtual(**kwargs)
+    from fake_model import run_virtual, run_virtual_spec
+    kwargs = dict(kwargs)
+    runner = kwargs.pop("runner", "plain")
+    fn = run_virtual_spec if runner == "spec" else run_virtual
+    _, trace, _ = fn(**kwargs)
     return trace.to_json()
 
 
