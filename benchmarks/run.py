@@ -38,6 +38,11 @@ ROWS: list[str] = []
 # the scenario's default
 STEPS: "int | None" = None
 
+# --seed plumbs into workload generation (arrival traces, prompts) and is
+# stamped into every serving_traffic row so a figure names the workload
+# that produced it
+SEED: int = 0
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
@@ -585,6 +590,98 @@ def serving_spec_decode():
          f"{results['fp32'][2]['tok_s'] / max(1e-9, results['fp32'][0]['tok_s']):.2f}x")
 
 
+def serving_traffic():
+    """Traffic subsystem: arrival traces x scheduling policies with
+    TTFT/p99 accounting, in two parts.
+
+    Part 1 — policy latency on the deterministic traffic simulator
+    (``serving.workload.TrafficSim``, virtual clock, identical numbers
+    on any machine): a ramp arrival trace (load building from 0.3 to
+    3 req/s) through monolithic prefill vs OnlineSLO (chunk cap 16) vs
+    OfflineThroughput.  Monolithic pays a dedicated weight sweep per
+    admission; chunked prefill rides the decode batch's sweeps, so
+    under queue buildup the chunked policies drain faster: OnlineSLO's
+    p99 TTFT lands strictly below monolithic while its chunk cap keeps
+    p99 TBT bounded at ~one sweep; OfflineThroughput (whole prompt
+    rides one sweep) posts the best tok/s at the worst TBT tail.
+
+    Part 2 — token parity on the REAL engines: the same seeded ramp
+    trace served through the offloaded engine under each policy x
+    kv_mode {fp32, int4}; chunked prefill must be BIT-IDENTICAL to
+    monolithic (any chunk size — the chunk-attention + per-chunk KV
+    append path is exact, asserted live in the bit_exact field), with
+    wall-clock p99 TTFT reported for scale.  ``--seed`` regenerates
+    both parts' workloads; the seed is stamped into every row.  CI
+    smoke: `serving_traffic --steps 2`."""
+    from repro.core.replay import replay_traffic
+    from repro.serving.workload import (SimCosts, TrafficSim, latency_series,
+                                        ramp_trace, run_trace)
+    from repro.core.tasks import percentile
+
+    # -- part 1: deterministic policy comparison ----------------------------
+    sim_trace = ramp_trace(16, 0.3, 3.0, seed=SEED, prompt_len=(24, 48),
+                           max_new=8)
+    costs = SimCosts(sweep_s=1.0, tok_s=0.02, prefill_tok_s=0.05)
+    sims = {}
+    for name, sched, chunk in (("monolithic", "monolithic", 0),
+                               ("online", "online", 16),
+                               ("offline", "offline", 0)):
+        r = TrafficSim(sim_trace, b_max=2, sched=sched, chunk=chunk,
+                       costs=costs).run()
+        lat = r.trace.report()["latency"]
+        sims[name] = (r, lat)
+        emit(f"serving_traffic_sim_{name}", lat["ttft"]["p99_s"] * 1e6,
+             f"ttft_p50_s={lat['ttft']['p50_s']:.2f};"
+             f"ttft_p99_s={lat['ttft']['p99_s']:.2f};"
+             f"tbt_p99_s={lat['tbt']['p99_s']:.2f};"
+             f"tok_s={r.tok_per_s:.2f};sweeps={r.sweeps};seed={SEED}")
+    # what-if replay closes the loop: the recorded monolithic traffic
+    # re-run under OnlineSLO knobs must equal the live online simulation
+    what_if = replay_traffic(sims["monolithic"][0].trace,
+                             sched="online", chunk=16)
+    replay_ok = (what_if.trace.meta["latency"]
+                 == sims["online"][0].trace.meta["latency"])
+    p99 = lambda n: sims[n][1]["ttft"]["p99_s"]
+    emit("serving_traffic_sim_summary", 0.0,
+         f"online_vs_mono_p99="
+         f"{p99('online') / max(1e-9, p99('monolithic')):.2f}x;"
+         f"online_p99_below_mono={int(p99('online') < p99('monolithic'))};"
+         f"offline_tok_s_best="
+         f"{int(sims['offline'][0].tok_per_s >= max(sims['monolithic'][0].tok_per_s, sims['online'][0].tok_per_s))};"
+         f"replay_matches_live={int(replay_ok)};seed={SEED}")
+
+    # -- part 2: real-engine token parity under traffic ---------------------
+    cfg = _bench_cfg()
+    n_req = 4
+    max_new = (STEPS + 1) if STEPS else 6
+    eng_trace = ramp_trace(n_req, 5.0, 50.0, seed=SEED, prompt_len=(6, 12),
+                           max_new=max_new, vocab=cfg.vocab_size)
+    outs = {}
+    for kv_mode in ("fp32", "int4"):
+        for name, kw in (("monolithic", dict(sched="monolithic")),
+                         ("online", dict(sched="online", prefill_chunk=3)),
+                         ("offline", dict(sched="offline"))):
+            eng = _serving_engine(cfg, b_max=2, max_len=64,
+                                  placement="host", pipeline="performance",
+                                  warm=True, depth=1, kv_mode=kv_mode, **kw)
+            done = run_trace(eng, eng_trace, time_scale=1e-3)
+            lat = latency_series(done)
+            outs[(kv_mode, name)] = {r.rid: [int(t) for t in r.out]
+                                     for r in done}
+            chunks = eng.stats["prefill_chunks"]
+            eng.shutdown()
+            emit(f"serving_traffic_{kv_mode}_{name}",
+                 percentile(lat["ttft"], 99) * 1e6,
+                 f"ttft_p99_ms={percentile(lat['ttft'], 99) * 1e3:.1f};"
+                 f"tbt_p99_ms={percentile(lat['tbt'], 99) * 1e3:.1f};"
+                 f"reqs={len(done)};chunks={chunks};seed={SEED}")
+    bit_exact = all(outs[(kv, n)] == outs[(kv, "monolithic")]
+                    for kv in ("fp32", "int4")
+                    for n in ("online", "offline"))
+    emit("serving_traffic_summary", 0.0,
+         f"bit_exact={int(bit_exact)};reqs={n_req};seed={SEED}")
+
+
 def serving_adaptive_depth():
     """AdaptiveDepth vs static windows under RAMPING request load: the
     engine starts near-empty (2 requests) and admits 2 more every 4
@@ -748,8 +845,8 @@ def roofline():
 BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            fig9_ablation, table3_latency, table6_memory, fig12_moe,
            serving_offload, serving_offload_depth, serving_kv_quant,
-           pipelined_kv_quant, serving_spec_decode, serving_adaptive_depth,
-           replay_validate, kernel_int4, roofline]
+           pipelined_kv_quant, serving_spec_decode, serving_traffic,
+           serving_adaptive_depth, replay_validate, kernel_int4, roofline]
 
 
 def run_spec_scenario(path: str):
@@ -791,13 +888,19 @@ def main(argv=None) -> "int | None":
                          "and replay scenarios (smoke runs: CI uses "
                          "'serving_kv_quant --steps 2', 'pipelined_kv_quant "
                          "--steps 2', 'serving_spec_decode --steps 2' and "
-                         "'replay_validate --steps 2'); other scenarios "
+                         "'replay_validate --steps 2' and "
+                         "'serving_traffic --steps 2'); other scenarios "
                          "run their documented full length")
+    ap.add_argument("--seed", type=int, default=0, metavar="N",
+                    help="workload-generation seed (arrival traces, "
+                         "prompts); stamped into every serving_traffic "
+                         "row so figures name their workload")
     args = ap.parse_args(argv)
     if args.steps is not None and args.steps < 1:
         ap.error(f"--steps must be >= 1, got {args.steps}")
-    global STEPS
+    global STEPS, SEED
     STEPS = args.steps
+    SEED = args.seed
     if args.list:
         for b in BENCHES:
             doc = (b.__doc__ or "").strip().splitlines()[0]

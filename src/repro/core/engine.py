@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.configs.base import MOE, ModelConfig
 from repro.core.draft import accept_length
-from repro.core.kvstore import TieredKVStore, kv_roundtrip_traceable
+from repro.core.kvstore import (PhasedKVExtents, TieredKVStore,
+                                kv_roundtrip_traceable)
 from repro.core.offload import DeviceStore, DiskStore, HostStore
 from repro.core.pipeline import PipelineScheduler, ThreadPool
 from repro.core.tasks import Trace
@@ -151,7 +152,7 @@ class UnitSpec:
     key: str            # store key
 
 
-class PipelinedLM:
+class PipelinedLM(PhasedKVExtents):
     """Offloaded generation per PIPO.
 
     placement: "device" | "host" | "disk" — where the merged unit weights
@@ -396,39 +397,32 @@ class PipelinedLM:
             return min(self._iter_pos.get(i, self.max_len), self.max_len)
         return min(self._prompt_len + i - 1, self.max_len)
 
-    def kv_nbytes(self, i: int, j: int) -> int:
-        """Bytes unit j's KV_LOAD moves over the link — the live rows,
-        packed under ``kv_mode='int4'`` (0 when the cache is
-        device-resident or the load precedes any decode row)."""
-        if self.cache_on == "device" or not self.is_mha(j) or i == 0:
-            return 0
-        return self.kvstore.load_nbytes(j, self.batch, self._live_len(i))
+    # ``kv_nbytes``/``kv_extent``/``kv_save_nbytes``/``load_kv`` come
+    # from ``PhasedKVExtents`` (the phase-aware logic shared with the
+    # serving engines); the host hooks below feed it.
+    def _kv_phase(self, i: int) -> str:
+        """Iteration 0 is the batch prefill.  Phase is a pure function
+        of the GLOBAL iteration index — never the ``_phase`` mode flag —
+        so warm cross-call preloads price exactly what they later
+        ship."""
+        return "prefill" if i == 0 else "decode"
 
-    def kv_extent(self, i: int, j: int):
-        """Live (batch, positions) extent of iteration i's KV_LOAD —
-        copied onto the trace event so live-row slicing is assertable."""
-        if self.cache_on == "device" or not self.is_mha(j) or i == 0:
-            return None
+    def _kv_live(self, i: int):
         return (self.batch, self._live_len(i))
 
-    def kv_save_nbytes(self, i: int, j: int) -> int:
-        """Bytes iteration i's KV_SAVE moves device->host: the prompt's
-        rows for the prefill, one row per slot for a decode step."""
-        if self.cache_on == "device" or not self.is_mha(j):
-            return 0
-        if i == 0:
-            return self.kvstore.prefill_save_nbytes(j, self.batch,
-                                                    self._prompt_len)
-        return self.kvstore.save_nbytes(j, self.batch, rows=self._spec_s)
+    def _kv_streams(self, j: int) -> bool:
+        return self.cache_on == "host" and self.is_mha(j)
+
+    def _kv_prefill_save_nbytes(self, j: int) -> int:
+        return self.kvstore.prefill_save_nbytes(j, self.batch,
+                                                self._prompt_len)
 
     def load_kv(self, i: int, j: int):
         if self.cache_on == "device":
             l = self.units[j].layer
             return {"k": self.device.get(f"kc[{l}]"),
                     "v": self.device.get(f"vc[{l}]")}
-        if i == 0:
-            return None       # prefill attends within the prompt only
-        return self.kvstore.load(j, self.batch, self._live_len(i))
+        return super().load_kv(i, j)
 
     def save_kv(self, i: int, j: int, new_kv):
         phase, k_new, v_new, pos, length = new_kv

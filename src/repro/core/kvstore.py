@@ -64,8 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "TieredKVStore", "KV_GROUP", "kv_group", "kv_eligible",
-    "quantize_kv_rows", "dequantize_kv_rows", "kv_roundtrip_rows",
+    "TieredKVStore", "PhasedKVExtents", "KV_GROUP", "kv_group",
+    "kv_eligible", "quantize_kv_rows", "dequantize_kv_rows",
+    "kv_roundtrip_rows",
 ]
 
 # canonical KV quantization group: rows are short (hkv*dh features), so
@@ -580,3 +581,107 @@ class TieredKVStore:
                     leaf.scale[slot] = host.get(f"{ns}/{j}/{name}#s")
                 else:
                     leaf.arr[slot] = host.get(f"{ns}/{j}/{name}")
+
+
+class PhasedKVExtents:
+    """Phase-aware KV hooks for the ``PipelineScheduler`` — one home for
+    the prefill special-cases and live-extent pricing that used to be
+    duplicated (asymmetrically) between ``OffloadedServingEngine`` and
+    ``PipelinedLM``.
+
+    The host engine answers what an iteration is doing and what is live;
+    the mixin derives the scheduler-facing ``kv_nbytes`` / ``kv_extent``
+    / ``kv_save_nbytes`` / ``load_kv`` from the answers, so both engines
+    share one statement of the invariants:
+
+      * a **prefill** iteration builds fresh caches in-pass — no KV
+        loads cross the link (``load_kv`` returns None; a warm tail
+        preload issued during a prefill is thereby *poisoned* and must
+        be dropped by the engine before the next decode consumes it),
+        and the save ships the whole prompt's rows;
+      * a **decode** iteration loads the live ``(slots, positions)``
+        extent and saves one (or ``k+1`` speculative) fresh row(s) per
+        live slot;
+      * a **chunk** iteration (chunked-prefill-only engine step) loads
+        nothing — the chunk attends the engine-held fp32 prefix, not
+        the store — and only the chunk's append crosses on the save.
+
+    Pricing (``kv_nbytes``/``kv_save_nbytes``) and shipping (``load_kv``)
+    share the same ``_kv_live`` extents, so trace bytes never overstate
+    what crossed.  Host hooks::
+
+        _kv_phase(i)   -> "prefill" | "decode" | "chunk"
+        _kv_live(i)    -> (live_batch, live_len) of iteration i's load
+        _kv_streams(j) -> does unit j's cache cross the link at all?
+        _kv_prefill_save_nbytes(j)   whole-prompt save payload bytes
+        _kv_chunk_save_nbytes(j)     in-flight chunk append bytes (0
+                                     unless a chunked engine overrides)
+
+    plus ``self.kvstore`` (a ``TieredKVStore``).  Engines with a
+    device-resident tier override ``load_kv`` and fall through to
+    ``super()`` for the streamed path."""
+
+    kvstore: "TieredKVStore"
+
+    # ---- host hooks ---------------------------------------------------------
+    def _kv_phase(self, i: int) -> str:
+        raise NotImplementedError
+
+    def _kv_live(self, i: int) -> Tuple[int, int]:
+        raise NotImplementedError
+
+    def _kv_streams(self, j: int) -> bool:
+        raise NotImplementedError
+
+    def _kv_prefill_save_nbytes(self, j: int) -> int:
+        raise NotImplementedError
+
+    def _kv_chunk_save_nbytes(self, j: int) -> int:
+        return 0
+
+    def _kv_save_rows(self) -> int:
+        """Rows per live slot a decode save ships (k+1 for a speculative
+        verify pass)."""
+        return getattr(self, "_spec_s", 1)
+
+    # ---- derived PipelineScheduler callbacks (any thread) -------------------
+    def kv_nbytes(self, i: int, j: int) -> int:
+        """Bytes iteration i's KV_LOAD of unit j moves over the link —
+        the LIVE rows only (packed bytes under ``kv_mode='int4'``), 0
+        outside decode.  Recorded on trace events so transfer volume
+        (and the live-row saving) is assertable from ``Trace.report()``."""
+        if not self._kv_streams(j) or self._kv_phase(i) != "decode":
+            return 0
+        lb, ll = self._kv_live(i)
+        return self.kvstore.load_nbytes(j, lb, ll)
+
+    def kv_extent(self, i: int, j: int):
+        """Live (batch, len) of iteration i's KV_LOAD payload — recorded
+        on the trace event (None outside decode)."""
+        if not self._kv_streams(j) or self._kv_phase(i) != "decode":
+            return None
+        return self._kv_live(i)
+
+    def kv_save_nbytes(self, i: int, j: int) -> int:
+        """Bytes iteration i's KV_SAVE payload moves device->host:
+        prefill ships whole prompt rows, decode the live slots' fresh
+        rows, and an in-flight prefill chunk adds its append on top."""
+        if not self._kv_streams(j):
+            return 0
+        phase = self._kv_phase(i)
+        if phase == "prefill":
+            return self._kv_prefill_save_nbytes(j)
+        n = self._kv_chunk_save_nbytes(j)
+        if phase == "decode":
+            lb, _ = self._kv_live(i)
+            n += self.kvstore.save_nbytes(j, lb, rows=self._kv_save_rows())
+        return n
+
+    def load_kv(self, i: int, j: int):
+        """KV_LOAD body (transfer-pool thread): live host rows -> device
+        slab via the tiered store.  None outside decode — prefill/chunk
+        iterations build or extend caches in-pass."""
+        if not self._kv_streams(j) or self._kv_phase(i) != "decode":
+            return None
+        lb, ll = self._kv_live(i)
+        return self.kvstore.load(j, lb, ll)

@@ -50,7 +50,7 @@ from repro.core.tasks import TaskType, Trace
 
 __all__ = ["ReplayError", "ReplayKnobs", "TraceProfile", "ReplayResult",
            "replay", "best_depth", "step_boundaries", "step_times",
-           "steady_step_s"]
+           "steady_step_s", "replay_traffic"]
 
 _W_RE = re.compile(r"^w\[(\d+)\]$")
 _PAIR_RE = re.compile(r"^(kv|sv|c)\[(\d+),(\d+)\]$")
@@ -431,6 +431,36 @@ def replay(trace: Trace, knobs: Optional[ReplayKnobs] = None, *,
         bytes_by_kind={t.value: out.bytes_moved(t.value)
                        for t in TaskType},
         report=out.report())
+
+
+def replay_traffic(trace: Trace, *, sched: Optional[str] = None,
+                   chunk: Optional[int] = None,
+                   b_max: Optional[int] = None,
+                   costs: Optional[dict] = None):
+    """What-if re-run of a recorded traffic simulation: a
+    ``serving.workload.TrafficSim`` trace carries its arrival schedule
+    and knobs in ``meta["traffic"]``, so the same traffic replays under
+    a different scheduling policy / chunk cap / slot count / cost model
+    in milliseconds — "would OnlineSLO at chunk 16 have met the p99 SLO
+    on yesterday's traffic?" without the engine.  Every ``None`` keeps
+    the recorded value; ``costs`` keys override individual
+    ``SimCosts`` fields.  Returns a ``workload.SimResult`` (itself
+    replayable).  Deferred import: ``core.replay`` loads at ``core``
+    package init, before the serving package exists."""
+    from repro.serving.workload import ArrivalTrace, SimCosts, TrafficSim
+    rec = trace.meta.get("traffic")
+    if not rec:
+        raise ReplayError("trace has no meta['traffic'] block "
+                          "(not a TrafficSim recording)")
+    c = dict(rec.get("costs") or {})
+    c.update(costs or {})
+    sim = TrafficSim(
+        ArrivalTrace.from_json(rec["arrivals"]),
+        b_max=int(rec["b_max"] if b_max is None else b_max),
+        sched=str(rec["sched"] if sched is None else sched),
+        chunk=int(rec["chunk"] if chunk is None else chunk),
+        costs=SimCosts(**c))
+    return sim.run()
 
 
 def best_depth(trace: Trace, *, depth_cap: int = 8,

@@ -130,6 +130,34 @@ class TraceEvent:
     extent: Optional[tuple] = None     # live (batch, len) of a KV payload
 
 
+def percentile(xs, q: float) -> float:
+    """Linear-interpolation percentile (numpy's default method), stdlib
+    only so trace tooling stays importable without the array stack.
+    ``q`` in [0, 100]; empty input returns 0.0."""
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    if len(xs) == 1:
+        return float(xs[0])
+    rank = (len(xs) - 1) * q / 100.0
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return float(xs[lo] * (1.0 - frac) + xs[hi] * frac)
+
+
+def latency_summary(samples) -> Dict[str, float]:
+    """p50/p95/p99 + mean/count for one latency series (seconds)."""
+    xs = [float(x) for x in samples]
+    return {
+        "count": len(xs),
+        "mean_s": sum(xs) / len(xs) if xs else 0.0,
+        "p50_s": percentile(xs, 50),
+        "p95_s": percentile(xs, 95),
+        "p99_s": percentile(xs, 99),
+    }
+
+
 def _merged_busy(intervals) -> float:
     """Total length of the union of (start, end) intervals."""
     ivals = sorted(intervals)
@@ -270,7 +298,7 @@ class Trace:
                 "bw_Bps": nbytes / busy if busy > 0 else 0.0,
             }
         compute_busy = self.thread_busy("main")
-        return {
+        out = {
             "span_s": span,
             "per_kind": per_kind,
             "compute_util": compute_busy / span if span > 0 else 0.0,
@@ -278,3 +306,13 @@ class Trace:
             "bubble_frac": (max(0.0, span - compute_busy) / span
                             if span > 0 else 0.0),
         }
+        # request-latency percentiles: workload drivers
+        # (serving.workload.run_trace / TrafficSim) stamp per-request
+        # series into meta["latency"] = {"ttft": [...], "tbt": [...],
+        # "e2e": [...]} (seconds); the report summarizes each so p99
+        # TTFT is a first-class trace observable next to busy fractions
+        lat = self.meta.get("latency")
+        if lat:
+            out["latency"] = {name: latency_summary(xs)
+                              for name, xs in sorted(lat.items())}
+        return out

@@ -170,6 +170,34 @@ def ring_attention(q, k, v, *, axis: Optional[str], causal=True, window=0,
     return jnp.moveaxis(out, 1, 2).astype(q.dtype)    # -> (b, sq, h, dv)
 
 
+def chunk_prefill_attention(q, k, v, *, q_offset: int, softcap: float = 0.0,
+                            q_chunk: int = 512):
+    """Prefill-chunk attention: the chunk's fresh queries (global
+    positions ``q_offset .. q_offset+sq-1``) attend causally over the
+    full running prefix ``k``/``v`` (``sk = q_offset + sq`` rows: the
+    engine-held fresh K/V of earlier chunks plus this chunk's own).
+
+    Single-device mirror of ``ring_attention(axis=None)`` with the query
+    positions offset: with ``q_offset=0`` (and ``sk == sq``) it IS the
+    monolithic prefill path, bit for bit — and for a later chunk each
+    query row sees exactly the columns the monolithic pass left unmasked
+    for it, so per-row partials (m, l, o) match the monolithic pass
+    exactly (masked tail columns contribute exact zeros).  That row
+    identity is what makes chunked prefill token parity a theorem rather
+    than a tolerance."""
+    b, sq, h, dh = q.shape
+    _, sk, hkv, dv = v.shape
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = jnp.arange(sk)
+    msk = _mask(q_pos, kv_pos, True, 0)
+    pm, pl, po = attn_partials(q, k, v, msk, softcap=softcap,
+                               q_chunk=q_chunk)
+    m, l, o = merge_partials(
+        match_vma(empty_partials((b, h, sq), dv), q), (pm, pl, po))
+    out = finalize_partials(m, l, o)                  # (b, h, sq, dv)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)    # -> (b, sq, h, dv)
+
+
 def mla_ring_attention(q, c, kr, w_uk, w_uv, *, axis: Optional[str],
                        q_chunk: int = 256):
     """MLA-aware ring attention (beyond-paper, §Perf C1).

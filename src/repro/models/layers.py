@@ -385,6 +385,39 @@ def _decode_attn(q, k_new, v_new, ctx: Ctx, cache, window):
     return out, {"k": kc, "v": vc}
 
 
+def apply_layer_chunk(p, x, ctx: Ctx, prefix_k, prefix_v, q_offset: int):
+    """One dense global-attention layer applied to a prefill CHUNK.
+
+    ``x`` holds the chunk's rows (global positions ``q_offset ..``);
+    ``prefix_k``/``prefix_v`` are the engine-held FRESH K/V of the
+    earlier chunks (post-rope, compute precision — the same values the
+    monolithic ``apply_attention`` prefill would have in-pass, NOT the
+    cache-tier copies).  Every op here is the row-wise twin of the
+    ``apply_attention`` prefill path, so the chunk's output rows equal
+    the monolithic pass's rows bit for bit (``chunked_prefill_capability``
+    gates callers to ATTN mixers + dense FFN).  Returns ``(x, k, v)``
+    with the chunk's fresh rope'd K/V for the caller to extend the
+    prefix and append to the KV store."""
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    xn = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    q, k, v = _qkv(p, xn, cfg)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if ctx.angles is not None:
+        q = apply_rope(q, ctx.angles)
+        k = apply_rope(k, ctx.angles)
+    kk = k if prefix_k is None else jnp.concatenate([prefix_k, k], axis=1)
+    vv = v if prefix_v is None else jnp.concatenate([prefix_v, v], axis=1)
+    out = attn.chunk_prefill_attention(q, kk, vv, q_offset=q_offset,
+                                       q_chunk=512)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    x = x + _mm(out, p, "wo")
+    x, _ = apply_dense_ffn(p, x, ctx)
+    return x, k, v
+
+
 # ===========================================================================
 # Cross-attention (whisper decoder)
 # ===========================================================================

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.kvstore import PhasedKVExtents
 from repro.core.offload import HostStore
 from repro.core.pipeline import ThreadPool
 from repro.core.tasks import Task, TaskType
@@ -59,6 +60,16 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    # per-request latency accounting (both engines, same fields, so TTFT
+    # parity is comparable engine-to-engine): ``t_arrive`` is the
+    # request's scheduled arrival — a workload driver sets it BEFORE
+    # submit to charge queue wait to the request; submit defaults it to
+    # t_submit.  ``t_first_token`` mirrors t_first (kept separate so the
+    # legacy field keeps its exact historical meaning); ``t_tokens``
+    # records one timestamp per emitted token for TBT percentiles.
+    t_arrive: float = 0.0
+    t_first_token: float = 0.0
+    t_tokens: List[float] = field(default_factory=list)
     # preemption state: >= 0 means this request's KV rows are spilled to
     # the host store under ``spill_ns`` and it resumes via restore, not
     # prefill.  The namespace (not the bare rid) is recorded at spill
@@ -69,7 +80,7 @@ class Request:
     spill_ns: str = ""
 
 
-class SlotEngineBase:
+class SlotEngineBase(PhasedKVExtents):
     """Continuous batching over a fixed decode batch (b_max): requests
     queue in; a free slot triggers a b=1 prefill; each engine step decodes
     ALL active slots with ragged per-slot positions; completed slots free
@@ -99,8 +110,9 @@ class SlotEngineBase:
         self.pos = np.zeros(b_max, np.int32)           # next write position
         self.tokens = np.zeros(b_max, np.int32)        # last emitted token
         self.stats: Dict[str, int] = {
-            "prefills": 0, "decode_steps": 0, "tokens_out": 0,
-            "slot_saves": 0, "slot_restores": 0, "spill_evictions": 0}
+            "prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
+            "tokens_out": 0, "slot_saves": 0, "slot_restores": 0,
+            "spill_evictions": 0}
         self._kv_pool = kv_pool
         self._slot_saves: Dict[int, Task] = {}
         self._epoch = 0
@@ -154,6 +166,8 @@ class SlotEngineBase:
     def submit(self, req: Request):
         """Enqueue a request (main thread; non-blocking)."""
         req.t_submit = time.perf_counter()
+        if not req.t_arrive:
+            req.t_arrive = req.t_submit
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -163,11 +177,23 @@ class SlotEngineBase:
         self._epoch += 1
         done: List[Request] = []
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
+            if self.idle():
                 break
-            self._admit()
-            self._decode_step(done)
+            self.step(done)
         return done
+
+    def idle(self) -> bool:
+        """True when there is nothing to do: empty queue, no occupied
+        slots (main thread)."""
+        return not self.queue and all(s is None for s in self.slots)
+
+    def step(self, done: List[Request]):
+        """One admission + decode step — the unit ``run()`` loops;
+        public so workload drivers (``serving.workload.run_trace``) can
+        interleave request arrivals with engine steps.  Main thread;
+        completed requests are appended to ``done``."""
+        self._admit()
+        self._decode_step(done)
 
     def preempt_slot(self, slot: int):
         """Spill an active request's KV rows and push it back to the queue
@@ -175,6 +201,8 @@ class SlotEngineBase:
         thread; the spill is synchronous."""
         req = self.slots[slot]
         assert req is not None, f"slot {slot} not active"
+        assert slot != self._chunk_slot(), \
+            "cannot preempt an in-flight chunked prefill"
         self._sync_slot(slot)
         # mark parked and enqueue BEFORE the spill is recorded: the LRU's
         # parked-pinning set is built from the queue, and the request's
@@ -207,26 +235,71 @@ class SlotEngineBase:
             slot = self._free_slot()
             if slot is None:
                 return
-            req = self.queue.pop(0)
+            if not self._admit_one(slot):
+                return
+
+    # chunked-admission hook outcomes (engines with a SchedPolicy seam
+    # override _begin_chunked_prefill; the base never chunks)
+    CHUNK_OFF = 0        # not chunking: run the monolithic prefill
+    CHUNK_STARTED = 1    # slot claimed; first token comes at completion
+    CHUNK_BUSY = 2       # a chunked prefill is in flight: stop admitting
+
+    def _begin_chunked_prefill(self, slot: int, req: Request) -> int:
+        """Claim ``slot`` for a chunked prefill of ``req`` (which is
+        still at the queue head — the caller pops on STARTED/OFF)."""
+        return self.CHUNK_OFF
+
+    def _chunk_slot(self) -> Optional[int]:
+        """Slot of the in-flight chunked prefill, or None.  The slot is
+        occupied (reserved) but not decode-active until the prefill
+        completes and ``_finish_prefill`` runs."""
+        return None
+
+    def _admit_one(self, slot: int) -> bool:
+        """Admit the queue head into ``slot``; False stops this step's
+        admission loop (a chunked prefill is already in flight)."""
+        req = self.queue[0]
+        if req.preempt_pos >= 0:                # resume a preempted request
+            self.queue.pop(0)
             self._sync_slot(slot)
-            if req.preempt_pos >= 0:            # resume a preempted request
-                self.restore_slot(slot, req.spill_ns)
-                self._drop_spill(req.spill_ns)  # rows are back in the slot
-                self.stats["slot_restores"] += 1
-                self.pos[slot] = req.preempt_pos
-                self.tokens[slot] = req.resume_token
-                req.preempt_pos = -1
-                req.spill_ns = ""
-                self.slots[slot] = req
-                continue
-            tok = self._prefill_into_slot(slot, req)
-            self.stats["prefills"] += 1
-            req.out.append(tok)
-            req.t_first = time.perf_counter()
+            self.restore_slot(slot, req.spill_ns)
+            self._drop_spill(req.spill_ns)      # rows are back in the slot
+            self.stats["slot_restores"] += 1
+            self.pos[slot] = req.preempt_pos
+            self.tokens[slot] = req.resume_token
+            req.preempt_pos = -1
+            req.spill_ns = ""
             self.slots[slot] = req
-            self.pos[slot] = len(req.prompt)
-            self.tokens[slot] = tok
-            self.stats["tokens_out"] += 1
+            return True
+        state = self._begin_chunked_prefill(slot, req)
+        if state == self.CHUNK_BUSY:
+            return False
+        self.queue.pop(0)
+        self._sync_slot(slot)
+        if state == self.CHUNK_STARTED:
+            # reserve the slot; chunk steps run inside _decode_step and
+            # the first token lands via _finish_prefill at completion
+            self.slots[slot] = req
+            self.pos[slot] = 0
+            return True
+        tok = self._prefill_into_slot(slot, req)
+        self._finish_prefill(slot, req, tok)
+        return True
+
+    def _finish_prefill(self, slot: int, req: Request, tok: int):
+        """Shared first-token bookkeeping: runs at monolithic-prefill
+        admission AND at chunked-prefill completion, so both paths stamp
+        identical timing fields and stats."""
+        self.stats["prefills"] += 1
+        req.out.append(tok)
+        now = time.perf_counter()
+        req.t_first = now
+        req.t_first_token = now
+        req.t_tokens.append(now)
+        self.slots[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.tokens[slot] = tok
+        self.stats["tokens_out"] += 1
 
     def _emitted_tokens(self, active: List[int],
                         nt: np.ndarray) -> Dict[int, List[int]]:
@@ -237,16 +310,26 @@ class SlotEngineBase:
         return {i: [int(nt[i])] for i in active}
 
     def _decode_step(self, done: List[Request]):
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        if not active:
+        # the chunked-prefill slot (if any) is occupied but not yet
+        # decode-active: its chunk rides _decode_active's generate call
+        # alongside the active batch, and the step must run even when the
+        # chunk is the only work in the engine
+        cslot = self._chunk_slot()
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and i != cslot]
+        if not active and cslot is None:
             return
         nt = self._decode_active(active)
+        if not active:
+            return
         self.stats["decode_steps"] += 1
         emitted = self._emitted_tokens(active, nt)
+        now = time.perf_counter()
         for i in active:
             req = self.slots[i]
             for tok in emitted[i]:
                 req.out.append(int(tok))
+                req.t_tokens.append(now)
                 self.stats["tokens_out"] += 1
                 self.pos[i] += 1
                 self.tokens[i] = int(tok)
@@ -256,7 +339,7 @@ class SlotEngineBase:
                 if (len(req.out) >= req.max_new
                         or int(tok) == req.eos_id
                         or self.pos[i] >= self.max_len - 1):
-                    req.t_done = time.perf_counter()
+                    req.t_done = now
                     done.append(req)
                     self._release_slot(i)
                     break

@@ -94,7 +94,8 @@ from repro.serving.spec import (AdaptiveDepth, EngineSpec, Pressure,
                                 ResolvedPlan, StaticDepth,
                                 UnsupportedModelError, draft_policy_for,
                                 offload_capability, preload_policy_for,
-                                quant_policy_for, spec_decode_capability,
+                                quant_policy_for, sched_policy_for,
+                                spec_decode_capability,
                                 warn_deprecated_once)
 
 __all__ = ["Request", "OffloadedServingEngine", "quant_roundtrip_params"]
@@ -232,6 +233,13 @@ class OffloadedServingEngine(SlotEngineBase):
             sim_bw=plan.sim_bw)
         params = self.model.init(jax.random.PRNGKey(plan.seed), jnp.float32)
         self._phase = "prefill"           # until the first _decode_active
+        # chunked-prefill admission (SchedPolicy seam): at most ONE
+        # prefill is in flight, advanced one chunk per engine step so it
+        # shares the step's streamed weight window with the decode batch
+        self.sched_policy = sched_policy_for(plan)
+        self._chunk = None                # dict(slot, req, done, prefix)
+        self._chunk_step = None           # (c0, c, final) during a step
+        self._chunk_tok = 0               # first token, set at final chunk
         # bytes staged device-side into compact MoE combine stacks — the
         # |union|-proportionality proof (tests assert it equals loaded
         # experts x per-expert fp32 bytes, strictly below the full bank)
@@ -359,6 +367,7 @@ class OffloadedServingEngine(SlotEngineBase):
         cfg, dist = self.cfg, self.dist
         self._decode_fns = {}
         self._prefill_fns = {}
+        self._chunk_fns = {}
         self._moe_fns = {}
         for j, u in enumerate(self.units):
             sig = (u.group, u.q)
@@ -406,8 +415,20 @@ class OffloadedServingEngine(SlotEngineBase):
                 x, new_cache, _ = L.apply_layer(w, x, ctx, None, spec)
                 return x, new_cache
 
+            def chunk_fn(w, x, pk, pv, angles, q_off):
+                # one prefill CHUNK: rows q_off..q_off+c-1 attend the
+                # engine-held fp32 prefix (earlier chunks' post-rope k/v)
+                # plus themselves — bit-identical to the same rows of a
+                # monolithic prefill (attention.chunk_prefill_attention).
+                # Retraces per (prefix_len, chunk_len) shape pair, which
+                # the fixed chunk cap bounds.
+                ctx = L.Ctx(cfg=cfg, dist=dist, mode="prefill",
+                            angles=angles, batch_size=x.shape[0])
+                return L.apply_layer_chunk(w, x, ctx, pk, pv, q_off)
+
             self._decode_fns[sig] = jax.jit(decode_fn)
             self._prefill_fns[sig] = jax.jit(prefill_fn)
+            self._chunk_fns[sig] = jax.jit(chunk_fn)
             if u.moe:
                 self._moe_fns[sig] = self._jit_moe_fns()
 
@@ -520,45 +541,32 @@ class OffloadedServingEngine(SlotEngineBase):
                 i, (lb, min(ll + max(0, i - base), self.max_len)))
         return ext
 
-    def load_kv(self, i: int, j: int):
-        """KV_LOAD body: live host rows -> device slab for unit j (the
-        tiered store slices to the live extent, pays the shared link
-        floor on exactly those bytes, and zero-pads back to the slab
-        shape; packed nibbles under kv_mode='int4').  Runs on a
-        transfer-pool thread.  Returns None during prefill (fresh caches
-        are built by the prefill compute) — warm cross-step preloads
-        issued at the tail of a prefill call are therefore poisoned and
-        dropped by ``_prefill_into_slot``."""
-        if self._phase != "decode":
-            return None                       # prefill builds fresh caches
-        lb, ll = self._live_extent(i)
-        return self.kvstore.load(j, lb, ll)
+    # ``kv_nbytes``/``kv_extent``/``kv_save_nbytes``/``load_kv`` come
+    # from ``PhasedKVExtents`` (via SlotEngineBase — the phase-aware
+    # logic shared with ``PipelinedLM``); the host hooks below feed it.
+    # Loads return None outside decode (prefill builds, chunks extend,
+    # caches in-pass) — warm cross-step preloads issued at the tail of a
+    # monolithic prefill or a chunk-only step are therefore poisoned and
+    # dropped before the next decode consumes them.
+    def _kv_phase(self, i: int) -> str:
+        return self._phase                # "prefill" | "decode" | "chunk"
 
-    def kv_nbytes(self, i: int, j: int) -> int:
-        """Bytes unit j's KV_LOAD moves over the link — the LIVE rows
-        only (packed bytes under kv_mode='int4'), not the allocated
-        slab; 0 during prefill, which builds fresh caches.  Recorded on
-        trace events so KV transfer volume (and the live-row saving) is
-        assertable from ``Trace.report()``."""
-        if self._phase != "decode":
-            return 0
-        lb, ll = self._live_extent(i)
-        return self.kvstore.load_nbytes(j, lb, ll)
-
-    def kv_extent(self, i: int, j: int):
-        """Live (batch, len) of iteration i's KV_LOAD payload — recorded
-        on the trace event (None during prefill)."""
-        if self._phase != "decode":
-            return None
+    def _kv_live(self, i: int):
         return self._live_extent(i)
 
-    def kv_save_nbytes(self, i: int, j: int) -> int:
-        """Bytes unit j's KV_SAVE payload moves device->host: prefill
-        ships one slot's full rows, decode the live slots' new rows."""
-        if self._phase != "decode":
-            return self.kvstore.prefill_save_nbytes(j)
-        _, lb, _ = self._decode_view
-        return self.kvstore.save_nbytes(j, lb, rows=self._spec_s)
+    def _kv_streams(self, j: int) -> bool:
+        return bool(self.kv_kinds[j])
+
+    def _kv_prefill_save_nbytes(self, j: int) -> int:
+        return self.kvstore.prefill_save_nbytes(j)
+
+    def _kv_chunk_save_nbytes(self, j: int) -> int:
+        """The in-flight prefill chunk's KV append: one slot's ``c``
+        fresh rows ride this step's KV_SAVE alongside the decode rows."""
+        if self._chunk_step is None:
+            return 0
+        _, c, _ = self._chunk_step
+        return self.kvstore.save_nbytes(j, 1, rows=c)
 
     def save_kv(self, i: int, j: int, new_kv):
         """KV_SAVE body: scatter freshly-written cache rows back into the
@@ -571,6 +579,25 @@ class OffloadedServingEngine(SlotEngineBase):
             slot = meta
             self.kvstore.save_prefill(
                 j, slot, {n: np.asarray(l[0]) for n, l in payload.items()})
+        elif phase == "mixed":
+            # a step carrying a prefill chunk: the decode batch's rows
+            # (when a decode rode along) plus the chunk's per-position
+            # append — the same quantize-once ``save_decode`` row path,
+            # so the stored bytes match a monolithic prefill's exactly
+            if payload is not None:
+                rows_d, (active, pos, live_b) = payload
+                rows = {n: np.asarray(l[:live_b])
+                        for n, l in rows_d.items()}
+                self.kvstore.save_decode(j, rows, active, pos)
+            k_ck, v_ck, slot, c0 = meta
+            rows = {}
+            for name, arr in (("k", k_ck), ("v", v_ck)):
+                a = np.asarray(arr)                     # (1, c, *feat)
+                buf = np.zeros((slot + 1,) + a.shape[1:], a.dtype)
+                buf[slot] = a[0]
+                rows[name] = buf
+            self.kvstore.save_decode(
+                j, rows, [slot], np.full(slot + 1, c0, np.int32))
         else:
             active, pos, live_b = meta
             rows = {n: np.asarray(l[:live_b])
@@ -586,6 +613,8 @@ class OffloadedServingEngine(SlotEngineBase):
         if self._phase == "prefill":
             x, cache1 = self._prefill_fns[sig](weights, x, self._angles)
             payload = ("prefill", cache1, self._slot)
+        elif self._chunk_step is not None:
+            return self._compute_mixed(sig, j, x, weights, kv)
         else:
             x, rows = self._decode_fns[sig](weights, x, kv, self._pos_dev,
                                             self._angles)
@@ -594,6 +623,34 @@ class OffloadedServingEngine(SlotEngineBase):
         if u.moe:
             x = self._compute_moe(u, x, weights)
         return x, payload
+
+    def _compute_mixed(self, sig, j: int, x, weights, kv):
+        """One unit of a step carrying a prefill chunk (main thread):
+        the decode batch (when present) and the chunk run back-to-back
+        under the SAME streamed weights handle — one WEIGHT_LOAD per
+        layer serves both, the tentpole invariant.  The chunk attends
+        the engine-held fp32 prefix (earlier chunks' post-rope k/v —
+        the same values a monolithic prefill attends in-pass) and the
+        fresh rows append to the tiered store via the step's KV_SAVE.
+        Capability gating guarantees dense global-attention units only
+        (no MoE)."""
+        x_dec, x_ck = x
+        dec = None
+        if x_dec is not None:
+            x_dec, rows = self._decode_fns[sig](weights, x_dec, kv,
+                                                self._pos_dev, self._angles)
+            dec = (rows, (self._active, self._pos_snap,
+                          self._decode_view[1]))
+        pref = self._chunk["prefix"].get(j)
+        pk, pv = pref if pref is not None else (None, None)
+        c0, _, _ = self._chunk_step
+        x_ck, k_ck, v_ck = self._chunk_fns[sig](
+            weights, x_ck, pk, pv, self._chunk_angles, jnp.int32(c0))
+        self._chunk["prefix"][j] = (
+            k_ck if pk is None else jnp.concatenate([pk, k_ck], axis=1),
+            v_ck if pv is None else jnp.concatenate([pv, v_ck], axis=1))
+        ck = (k_ck, v_ck, self._chunk["slot"], c0)
+        return (x_dec, x_ck), ("mixed", dec, ck)
 
     def _compute_moe(self, u: _Unit, x, weights):
         """Routed-union MoE (paper Appendix C.4, serving port): the gate
@@ -633,6 +690,19 @@ class OffloadedServingEngine(SlotEngineBase):
                        shared_term)
 
     def finalize(self, i: int, x):
+        if self._chunk_step is not None:
+            x_dec, x_ck = x
+            _, _, final = self._chunk_step
+            if final:
+                # first generated token of the chunked request: argmax
+                # over the LAST prompt position, exactly what the
+                # monolithic prefill head computes
+                tok = self._head(self.resident["embed"],
+                                 self.resident["final_norm"], x_ck)
+                self._chunk_tok = int(np.asarray(tok)[0])
+            if x_dec is None:
+                return np.zeros(self.b_max, np.int32)
+            x = x_dec
         if self._phase == "decode" and x.shape[1] > 1:
             # speculative verify: per-position argmax, (b, k+1)
             tok = self._spec_head(self.resident["embed"],
@@ -643,6 +713,71 @@ class OffloadedServingEngine(SlotEngineBase):
         return np.asarray(tok)
 
     # ---- SlotEngineBase compute hooks ---------------------------------------
+    def _begin_chunked_prefill(self, slot: int, req: Request) -> int:
+        """Admission-time hook: under a chunked policy, claim the slot
+        and stage the prompt for chunk-at-a-time prefill interleaved
+        with decode steps.  At most ONE chunked prefill is in flight —
+        a second arrival waits (BUSY) so its chunks don't compete for
+        the same shared weight sweeps."""
+        if not self.sched_policy.chunked:
+            return self.CHUNK_OFF
+        if self._chunk is not None:
+            return self.CHUNK_BUSY
+        self._chunk = dict(slot=slot, req=req, done=0, prefix={})
+        return self.CHUNK_STARTED
+
+    def _chunk_slot(self):
+        return self._chunk["slot"] if self._chunk is not None else None
+
+    def _mixed_step(self, active: List[int]) -> np.ndarray:
+        """One pipeline step carrying the next prompt chunk of the
+        in-flight chunked prefill — alongside the decode batch when one
+        exists (main thread).  Both rides the SAME ``sched.generate``
+        call, so each layer's weights stream exactly once for the pair.
+        The decode view is widened to a SUPERSET covering the chunk
+        slot/extent so warm tail preloads priced during this step stay
+        valid once the chunk's rows land (stale rows are masked by
+        ``kv_pos <= pos`` downstream, the established inactive-slot
+        precedent)."""
+        ck = self._chunk
+        req, slot = ck["req"], ck["slot"]
+        cap = max(1, self.sched_policy.chunk_cap())
+        c0 = ck["done"]
+        c1 = min(len(req.prompt), c0 + cap)
+        final = c1 == len(req.prompt)
+        self._chunk_step = (c0, c1 - c0, final)
+        if active:
+            self._step_setup(active)
+            base, lb, ll = self._decode_view
+            self._decode_view = (base, max(lb, slot + 1), max(ll, c1))
+            self._pos_dev = jnp.asarray(self.pos)
+            self._angles = T._angles(self.cfg, self._pos_dev[:, None])
+            x_dec = self._embed(self.resident["embed"],
+                                jnp.asarray(self.tokens)[:, None], "decode")
+        else:
+            # chunk-only step: nothing to load — the chunk attends only
+            # the engine-held fp32 prefix of its own earlier chunks
+            self._phase = "chunk"
+            x_dec = None
+        self._chunk_angles = T._angles(self.cfg, jnp.arange(c0, c1))
+        x_ck = self._embed(self.resident["embed"],
+                           jnp.asarray(req.prompt[c0:c1])[None], "prefill")
+        toks = self.sched.generate(self, lambda i: (x_dec, x_ck), 1)
+        self.stats["prefill_chunks"] += 1
+        ck["done"] = c1
+        chunk_only = x_dec is None
+        self._chunk_step = None
+        if chunk_only:
+            # warm tail preloads captured phase "chunk" (value None)
+            self.sched.drop_kv_preloads()
+        if final:
+            self._chunk = None
+            if self.draft is not None:
+                self.draft.prefill_slot(slot, req.prompt)
+            self._finish_prefill(slot, req, self._chunk_tok)
+        return (toks[-1] if not chunk_only
+                else np.zeros(self.b_max, np.int32))
+
     def _prefill_into_slot(self, slot: int, req: Request) -> int:
         """b=1 prompt pass through the pipeline (main thread).  Any warm
         KV preload issued at the tail of this call captured the prefill
@@ -764,6 +899,11 @@ class OffloadedServingEngine(SlotEngineBase):
         to spec_k + 1 tokens per slot (``_emitted_tokens``)."""
         self._spec_emitted = None
         self._spec_s = 1
+        if self._chunk is not None:
+            # a chunked prefill is in flight: run the mixed step (decode
+            # batch + one prompt chunk under shared weight loads).  Spec
+            # decode resumes once the chunk completes.
+            return self._mixed_step(active)
         k = 0
         if self.draft is not None:
             # headroom: the verify writes rows pos..pos+k, and the last

@@ -26,7 +26,7 @@ thin shims keep old constructor kwargs working (one DeprecationWarning,
 converted to a spec internally — old-kwarg and spec construction yield
 identical plans, asserted in tests/test_spec.py).
 
-Two policy seams live behind the plan:
+Several policy seams live behind the plan:
 
   * ``PreloadPolicy`` — who decides the preload window per decode step.
     ``StaticDepth(D)`` reproduces the fixed budget-sized window
@@ -41,6 +41,13 @@ Two policy seams live behind the plan:
     the pre-store engines), ``"int4"`` stores and streams cache rows
     group-quantized (packed nibbles + scales, dequant fused into the
     consuming jit).
+  * ``SchedPolicy`` — how new requests' prefills meet the streamed
+    weight window.  ``"monolithic"`` (default) runs a dedicated b=1
+    prefill pass per admission; ``OnlineSLO`` admits eagerly and caps
+    prefill tokens per engine step so chunks ride the decode step's
+    WEIGHT_LOADs (bounded decode stall, low TTFT); ``OfflineThroughput``
+    runs whole-prompt chunks through the same shared window (the
+    PipeMax run-to-completion regime).
 
 The CLI speaks the same API: ``CLI_FLAGS`` is the single flag<->field
 table ``launch.serve`` generates its argparse from, and
@@ -63,10 +70,11 @@ from repro.core.pipeline import PIPELINE_MODES
 __all__ = [
     "EngineSpec", "ResolvedPlan", "SpecError", "UnsupportedModelError",
     "create_engine", "build_lm", "offload_capability",
-    "spec_decode_capability",
+    "spec_decode_capability", "chunked_prefill_capability",
     "PreloadPolicy", "StaticDepth", "AdaptiveDepth", "Pressure",
     "QuantPolicy", "WeightsInt4", "quant_policy_for",
     "DraftPolicy", "draft_policy_for",
+    "SchedPolicy", "OnlineSLO", "OfflineThroughput", "sched_policy_for",
     "warn_deprecated_once", "reset_deprecation_warnings",
     "CLI_FLAGS", "FlagSpec", "NO_FLAG_FIELDS", "WORKLOAD_FLAGS",
     "add_spec_args", "spec_from_args",
@@ -76,6 +84,7 @@ QUANT_MODES = (None, "int4")
 KV_MODES = (None, "fp32", "int4")       # None = auto (resolves to fp32)
 DEPTH_POLICIES = ("static", "adaptive")
 PLACEMENTS = ("auto", "device", "host", "disk")
+SCHED_MODES = (None, "online", "offline", "monolithic")
 
 
 # ---------------------------------------------------------------------------
@@ -128,15 +137,10 @@ def offload_capability(cfg: ModelConfig) -> Optional[str]:
     return None
 
 
-def spec_decode_capability(cfg: ModelConfig) -> Optional[str]:
-    """The capability that rules out speculative decoding for ``cfg`` as
-    the TARGET model, or None when supported.  The verify pass scores
-    k+1 positions in one ragged decode step
-    (``attention.spec_decode_attention``), which exists for global
-    attention only — window/MLA/SSM mixers keep single-token decode
-    state.  MoE is out too: routing k+1 tokens jointly changes the
-    capacity/slot assignment versus k+1 sequential steps, which would
-    break the bit-exact parity speculation promises."""
+def _dense_global_attn_capability(cfg: ModelConfig) -> Optional[str]:
+    """Shared gate for features that need a dense global-attention
+    decoder stack on the offloaded engine (speculative verify, chunked
+    prefill)."""
     cap = offload_capability(cfg)
     if cap is not None:
         return cap
@@ -147,6 +151,30 @@ def spec_decode_capability(cfg: ModelConfig) -> Optional[str]:
         if spec.ffn == MOE:
             return "moe_ffn"
     return None
+
+
+def spec_decode_capability(cfg: ModelConfig) -> Optional[str]:
+    """The capability that rules out speculative decoding for ``cfg`` as
+    the TARGET model, or None when supported.  The verify pass scores
+    k+1 positions in one ragged decode step
+    (``attention.spec_decode_attention``), which exists for global
+    attention only — window/MLA/SSM mixers keep single-token decode
+    state.  MoE is out too: routing k+1 tokens jointly changes the
+    capacity/slot assignment versus k+1 sequential steps, which would
+    break the bit-exact parity speculation promises."""
+    return _dense_global_attn_capability(cfg)
+
+
+def chunked_prefill_capability(cfg: ModelConfig) -> Optional[str]:
+    """The capability that rules out chunked prefill for ``cfg``, or
+    None when supported.  A prefill chunk attends its fresh rows against
+    the engine-held running prefix (``attention.chunk_prefill_attention``)
+    — global attention only: window mixers need rolling-buffer chunk
+    state and MLA/SSM keep latent/conv state the chunk path doesn't
+    carry.  MoE is out for the same reason as speculation: expert
+    capacity depends on the token count per pass, so chunked routing
+    diverges bitwise from the monolithic pass."""
+    return _dense_global_attn_capability(cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +259,9 @@ class EngineSpec:
     # -- speculative decoding ----------------------------------------------
     draft_arch: Optional[str] = None    # device-resident draft arch; None=off
     spec_k: Optional[int] = None        # proposals per verify (None: auto)
+    # -- traffic scheduling ------------------------------------------------
+    sched: Optional[str] = None         # None(auto->monolithic)|online|offline
+    prefill_chunk: Optional[int] = None  # prompt tokens per step (None: auto)
     # -- ad-hoc config override (not serialized, not compared) -------------
     cfg: Optional[ModelConfig] = field(default=None, compare=False,
                                        repr=False)
@@ -285,6 +316,15 @@ class EngineSpec:
             bad(f"sim_bw must be > 0, got {self.sim_bw}")
         if self.spec_k is not None and self.spec_k < 1:
             bad(f"spec_k must be >= 1 (or None for auto), got {self.spec_k}")
+        if self.sched not in SCHED_MODES:
+            bad(f"sched {self.sched!r} not in {SCHED_MODES}")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            bad(f"prefill_chunk must be >= 1 (or None for auto), got "
+                f"{self.prefill_chunk}")
+        if self.prefill_chunk is not None and self.sched not in ("online",
+                                                                 "offline"):
+            bad("prefill_chunk needs a chunking policy (set sched='online' "
+                "or 'offline'; monolithic prefill has no chunks)")
         if self.spec_k is not None and self.draft_arch is None:
             bad("spec_k needs a draft model (set draft_arch; speculation "
                 "is draft-proposes, target-verifies)")
@@ -302,7 +342,7 @@ class EngineSpec:
                     f"decoder stacks only)")
         if self.offload is False:
             for name in ("quant", "kv_mode", "sim_bw", "depth", "warm",
-                         "draft_arch", "spec_k"):
+                         "draft_arch", "spec_k", "sched", "prefill_chunk"):
                 if getattr(self, name) is not None:
                     bad(f"{name} only applies to the offloaded engine "
                         f"(offload=False pins the resident ServingEngine)")
@@ -406,13 +446,16 @@ class EngineSpec:
             fused = True
             sim_bw = None
             draft_arch, spec_k = None, None
+            sched, prefill_chunk = "monolithic", 0
             for name, was in (("quant", self.quant),
                               ("kv_mode", self.kv_mode),
                               ("sim_bw", self.sim_bw),
                               ("warm", self.warm),
                               ("depth", self.depth),
                               ("draft_arch", self.draft_arch),
-                              ("spec_k", self.spec_k)):
+                              ("spec_k", self.spec_k),
+                              ("sched", self.sched),
+                              ("prefill_chunk", self.prefill_chunk)):
                 if was is not None:
                     prov[name] = (f"dropped ({was!r}): the resident engine "
                                   f"streams nothing over the link")
@@ -511,6 +554,53 @@ class EngineSpec:
                     spec_k = int(self.spec_k)
                     prov["spec_k"] = f"explicit: spec_k={spec_k}"
 
+            # ---- traffic scheduling policy ----
+            sched = self.sched
+            if sched is None:
+                sched = "monolithic"
+                prov["sched"] = ("auto: monolithic prefill (chunked "
+                                 "admission is opt-in via --sched "
+                                 "online|offline)")
+            elif sched != "monolithic":
+                ccap = chunked_prefill_capability(cfg)
+                if ccap is not None:
+                    prov["sched"] = (
+                        f"dropped ({sched!r}): chunked prefill needs a "
+                        f"dense global-attention stack (failing "
+                        f"capability: {ccap}); monolithic")
+                    sched = "monolithic"
+                else:
+                    prov["sched"] = f"explicit: sched={sched!r}"
+            else:
+                prov["sched"] = "explicit: sched='monolithic'"
+            if sched == "online":
+                if self.prefill_chunk is None:
+                    prefill_chunk = 32
+                    prov["prefill_chunk"] = (
+                        "auto: 32 prompt tokens per engine step (bounds "
+                        "the per-step decode stall; see docs/TUNING.md)")
+                else:
+                    prefill_chunk = int(self.prefill_chunk)
+                    prov["prefill_chunk"] = (
+                        f"explicit: {prefill_chunk} tokens/step")
+            elif sched == "offline":
+                if self.prefill_chunk is None:
+                    prefill_chunk = self.max_len
+                    prov["prefill_chunk"] = (
+                        "auto: whole-prompt chunks (run-to-completion "
+                        "throughput regime; chunks still share the decode "
+                        "step's weight window)")
+                else:
+                    prefill_chunk = int(self.prefill_chunk)
+                    prov["prefill_chunk"] = (
+                        f"explicit: {prefill_chunk} tokens/step")
+            else:
+                prefill_chunk = 0
+                if self.prefill_chunk is not None:
+                    prov["prefill_chunk"] = (
+                        f"dropped ({self.prefill_chunk}): monolithic "
+                        f"prefill has no chunks")
+
         # ---- resident-only fields ----
         if self.moe_quant is None:
             moe_quant = None
@@ -547,6 +637,7 @@ class EngineSpec:
             block_bytes=block_bytes, n_io_threads=self.n_io_threads,
             cold_reads=self.cold_reads, sim_bw=sim_bw,
             draft_arch=draft_arch, spec_k=spec_k,
+            sched=sched, prefill_chunk=prefill_chunk,
             device_budget=budget.device, host_budget=budget.host,
             provenance=prov, cfg=self.cfg)
 
@@ -588,6 +679,8 @@ class ResolvedPlan:
     sim_bw: Optional[float]
     draft_arch: Optional[str]    # device-resident draft; None = no speculation
     spec_k: Optional[int]        # proposals per verify pass; None = off
+    sched: str = "monolithic"    # monolithic | online | offline
+    prefill_chunk: int = 0       # prompt tokens per engine step; 0 = n/a
     # the budget the plan was resolved under (bytes) — recorded so the
     # plan is auditable and so AdaptiveDepth re-sizes against the SAME
     # budget at run time
@@ -616,7 +709,9 @@ class ResolvedPlan:
                 f"kv={self.kv_mode or 'n/a'} b_max={self.b_max} "
                 f"max_len={self.max_len}"
                 + (f" draft={self.draft_arch} spec_k={self.spec_k}"
-                   if self.draft_arch else ""))
+                   if self.draft_arch else "")
+                + (f" sched={self.sched} chunk={self.prefill_chunk}"
+                   if self.sched != "monolithic" else ""))
 
 
 # ---------------------------------------------------------------------------
@@ -842,6 +937,86 @@ def draft_policy_for(plan: ResolvedPlan) -> Optional[DraftPolicy]:
 
 
 # ---------------------------------------------------------------------------
+# SchedPolicy seam
+# ---------------------------------------------------------------------------
+
+
+class SchedPolicy:
+    """Traffic-scheduling seam: HOW a new request's prefill meets the
+    streamed weight window.  The base policy is today's behavior bit for
+    bit — a dedicated monolithic b=1 prefill pass at admission that
+    blanks the warm window.  Chunking policies instead split the prompt
+    into per-step chunks that ride the SAME ``generate`` call (and the
+    same WEIGHT_LOADs) as the active batch's decode; ``chunk_cap()`` is
+    the per-engine-step token budget a chunk may consume."""
+
+    name = "monolithic"
+    chunked = False
+
+    def chunk_cap(self) -> int:
+        """Prompt tokens a prefill chunk may take per engine step
+        (0 = no chunking: monolithic prefill at admission)."""
+        return 0
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class OnlineSLO(SchedPolicy):
+    """Latency regime: admit eagerly (FIFO), cap prefill tokens per
+    engine step so every step still advances the decode batch — the
+    chunk's compute bounds the decode stall (TBT) and queued requests
+    start streaming KV immediately instead of waiting for a window
+    restart (TTFT)."""
+
+    name = "online"
+    chunked = True
+
+    def __init__(self, chunk: int):
+        if chunk < 1:
+            raise SpecError(f"prefill chunk must be >= 1, got {chunk}")
+        self.chunk = int(chunk)
+
+    def chunk_cap(self) -> int:
+        return self.chunk
+
+    def __repr__(self):
+        return f"OnlineSLO(chunk={self.chunk})"
+
+
+class OfflineThroughput(SchedPolicy):
+    """Throughput regime (the PipeMax batch case): run-to-completion
+    admission with whole-prompt chunks — the entire prefill rides one
+    decode step's weight window, so the streamed weights are amortized
+    over the largest possible token count and tok/s tracks the
+    steady-state decode rate."""
+
+    name = "offline"
+    chunked = True
+
+    def __init__(self, chunk: int):
+        if chunk < 1:
+            raise SpecError(f"prefill chunk must be >= 1, got {chunk}")
+        self.chunk = int(chunk)
+
+    def chunk_cap(self) -> int:
+        return self.chunk
+
+    def __repr__(self):
+        return f"OfflineThroughput(chunk={self.chunk})"
+
+
+def sched_policy_for(plan: ResolvedPlan) -> SchedPolicy:
+    """The plan's traffic-scheduling policy instance (engine build
+    time), mirroring ``preload_policy_for``/``quant_policy_for``."""
+    if plan.sched == "online":
+        return OnlineSLO(plan.prefill_chunk or 32)
+    if plan.sched == "offline":
+        return OfflineThroughput(plan.prefill_chunk or plan.max_len)
+    return SchedPolicy()
+
+
+# ---------------------------------------------------------------------------
 # QuantPolicy seam
 # ---------------------------------------------------------------------------
 
@@ -1053,6 +1228,19 @@ CLI_FLAGS: Tuple[FlagSpec, ...] = (
              help="draft proposals per verify pass (needs --draft-arch; "
                   "default 4 — the link amortization grows with the "
                   "acceptance length)"),
+    FlagSpec("--sched", "sched",
+             choices=("online", "offline", "monolithic"),
+             help="prefill scheduling policy (--offload only): online "
+                  "admits eagerly and caps prefill tokens per engine "
+                  "step (--prefill-chunk) so chunks share the decode "
+                  "step's weight window (bounded decode stall, low "
+                  "TTFT); offline runs whole-prompt chunks for maximum "
+                  "throughput; monolithic (default) is the dedicated "
+                  "b=1 prefill pass (see docs/TUNING.md)"),
+    FlagSpec("--prefill-chunk", "prefill_chunk", type=int, metavar="T",
+             help="prompt tokens prefillable per engine step (needs "
+                  "--sched online/offline; defaults: 32 under online, "
+                  "whole prompt under offline)"),
 )
 
 # EngineSpec fields deliberately without a CLI flag (engine-internal or

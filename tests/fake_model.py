@@ -163,6 +163,45 @@ def run_virtual_moe(mode: str = "performance", n_layers: int = 2,
     return model, pool.trace, outs
 
 
+class FakeTrafficModel(FakeModel):
+    """Composite-x fake mirroring the offloaded engine's MIXED steps
+    (chunked prefill riding the decode batch): x = (x_dec, x_chunk),
+    both legs advanced by one compute under the SAME weights handle —
+    so the trace shows one WEIGHT_LOAD per layer per step whether or
+    not a chunk is in flight (the tentpole scheduling invariant)."""
+
+    def compute(self, i, j, x, w, kv):
+        assert w == f"w{j}", (w, j)
+        if self.is_mha(j):
+            assert kv == f"kv{i},{j}", (kv, i, j)
+        self.calls.append(("compute", i, j))
+        xd, xc = x
+        return ((None if xd is None else xd + 1,
+                 None if xc is None else xc + 1),
+                "new_kv" if self.is_mha(j) else None)
+
+    def finalize(self, i, x):
+        return x
+
+
+def run_virtual_traffic(n_layers: int = 3, steps: int = 4, depth: int = 1,
+                        chunk_steps=(1, 2)):
+    """Drive the warm scheduler through ``steps`` serving steps on the
+    virtual clock, one generate() call each; steps listed in
+    ``chunk_steps`` carry a prefill chunk alongside the decode batch
+    (composite x).  Returns (model, trace, per-step outputs)."""
+    model = FakeTrafficModel(n_layers)
+    pool = VirtualPool(3, cost_fn=cost_fn)
+    sched = PipelineScheduler(model.n, "performance", pool=pool,
+                              trace=pool.trace, warm=True, depth=depth)
+    outs = []
+    for it in range(steps):
+        ck = 0 if it in chunk_steps else None
+        outs.append(sched.generate(model, lambda i: (0, ck), 1))
+    sched.shutdown()
+    return model, pool.trace, outs
+
+
 # ---------------------------------------------------------------------------
 # Speculative decoding fakes: proposal sources for the engines' parity
 # tests, and a virtual-clock driver for the draft-then-verify schedule.

@@ -53,8 +53,11 @@ GOLDEN = {
 # fixtures checked against the generator but NOT replayed bit-for-bit:
 # the speculative recording carries draft[i] main-thread COMPUTE events
 # that replay() folds out, so its replayed timeline is legitimately
-# faster than the recording (asserted separately below)
-FIXTURE_NAMES = sorted(GOLDEN) + ["trace_spec_d2.json"]
+# faster than the recording (asserted separately below); the traffic
+# recording's mixed prefill+decode steps replay as plain decode steps
+# (the composite x is opaque to the replayer)
+FIXTURE_NAMES = sorted(GOLDEN) + ["trace_spec_d2.json",
+                                  "trace_traffic_d1.json"]
 
 
 def _load(name):

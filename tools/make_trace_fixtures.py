@@ -39,14 +39,23 @@ CASES = (
           depth=2)),
     ("trace_spec_d2.json",
      dict(runner="spec", iters=4, n_layers=3, depth=2, reject=(2,))),
+    # mixed prefill+decode traffic: steps 1-2 carry a chunked-prefill
+    # leg through the same generate() call as the decode batch
+    # (runner="traffic" -> fake_model.run_virtual_traffic), recording
+    # the shared-WEIGHT_LOAD schedule the traffic tests assert on
+    ("trace_traffic_d1.json",
+     dict(runner="traffic", n_layers=3, steps=4, depth=1,
+          chunk_steps=(1, 2))),
 )
 
 
 def build(kwargs) -> dict:
-    from fake_model import run_virtual, run_virtual_spec
+    from fake_model import (run_virtual, run_virtual_spec,
+                            run_virtual_traffic)
     kwargs = dict(kwargs)
     runner = kwargs.pop("runner", "plain")
-    fn = run_virtual_spec if runner == "spec" else run_virtual
+    fn = {"spec": run_virtual_spec,
+          "traffic": run_virtual_traffic}.get(runner, run_virtual)
     _, trace, _ = fn(**kwargs)
     return trace.to_json()
 
