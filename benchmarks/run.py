@@ -727,6 +727,65 @@ def serving_adaptive_depth():
          f"adaptive_vs_d3={results['static_d3'] / results['adaptive']:.2f}x")
 
 
+def serving_pp():
+    """Pipeline-parallel offload (--stages): the layer stack split into
+    contiguous stages, each with its own tiered weight/KV store and
+    transfer pool over its own sim link — so aggregate host->device
+    bandwidth scales with the stage count while activations microbatch
+    stage to stage.  Sweeps stages {1, 2, 4} x weights {fp32, int4} on
+    the weight-dominated serving_offload shape; each row carries the
+    tok/s ratio vs its single-stage arm and a bit_exact column checking
+    the staged tokens against the single-stage tokens (staging must be
+    a scheduling change only).  CI smoke: `serving_pp --steps 2`."""
+    from repro.serving import Request
+    cfg = _bench_cfg(layers=6, d=512, ff=2048)
+    max_new = (STEPS + 1) if STEPS else 12
+
+    def serve(eng):
+        """_serve_steady_state, plus the emitted tokens (for bit_exact)."""
+        rng = np.random.default_rng(0)
+        for i in range(eng.b_max):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, eng.cfg.vocab_size, (32,)).astype(np.int32),
+                max_new=max_new))
+        eng._admit()
+        done = []
+        eng._decode_step(done)        # warm the jit caches untimed
+        t0 = time.perf_counter()
+        n0, s0 = eng.stats["tokens_out"], eng.stats["decode_steps"]
+        while any(s is not None for s in eng.slots):
+            eng._decode_step(done)
+        dt = time.perf_counter() - t0
+        ntok = eng.stats["tokens_out"] - n0
+        nstep = eng.stats["decode_steps"] - s0
+        rep = eng.pipeline_report()
+        eng.shutdown()
+        tokens = {r.rid: tuple(r.out) for r in done}
+        return ntok / dt, dt / max(1, nstep), rep, tokens
+
+    base = {}
+    for wq in (None, "int4"):
+        tag = wq or "fp32"
+        for stages in (1, 2, 4):
+            kw = dict(pipeline="performance", warm=True, depth=1,
+                      stages=stages)
+            if wq:
+                kw.update(quant=wq, fused_int4=True)
+            eng = _serving_engine(cfg, b_max=16, max_len=96,
+                                  placement="host", sim_bw=0.3e9, **kw)
+            tok_s, step_s, rep, tokens = serve(eng)
+            if stages == 1:
+                base[tag] = (tok_s, tokens)
+            ratio = tok_s / max(1e-9, base[tag][0])
+            emit(f"serving_pp_s{stages}_{tag}", step_s * 1e6,
+                 f"decode_tok_s={tok_s:.2f};step_ms={step_s * 1e3:.1f};"
+                 f"util={rep['compute_util']:.2f};"
+                 f"vs_s1={ratio:.2f}x;"
+                 f"bit_exact={int(tokens == base[tag][1])}")
+            assert tokens == base[tag][1], \
+                f"staged tokens diverged at stages={stages} quant={tag}"
+
+
 def replay_validate():
     """Predicted-vs-measured validation of the trace-replay cost model
     (``core.replay``): each arm serves a warm continuous-batching decode
@@ -846,7 +905,8 @@ BENCHES = [fig5_throughput, fig6_blocksize, fig7_transfer, fig8_utilization,
            fig9_ablation, table3_latency, table6_memory, fig12_moe,
            serving_offload, serving_offload_depth, serving_kv_quant,
            pipelined_kv_quant, serving_spec_decode, serving_traffic,
-           serving_adaptive_depth, replay_validate, kernel_int4, roofline]
+           serving_adaptive_depth, serving_pp, replay_validate,
+           kernel_int4, roofline]
 
 
 def run_spec_scenario(path: str):
@@ -888,8 +948,9 @@ def main(argv=None) -> "int | None":
                          "and replay scenarios (smoke runs: CI uses "
                          "'serving_kv_quant --steps 2', 'pipelined_kv_quant "
                          "--steps 2', 'serving_spec_decode --steps 2' and "
-                         "'replay_validate --steps 2' and "
-                         "'serving_traffic --steps 2'); other scenarios "
+                         "'replay_validate --steps 2', "
+                         "'serving_traffic --steps 2' and "
+                         "'serving_pp --steps 2'); other scenarios "
                          "run their documented full length")
     ap.add_argument("--seed", type=int, default=0, metavar="N",
                     help="workload-generation seed (arrival traces, "

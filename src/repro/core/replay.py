@@ -45,12 +45,13 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.memory_model import quant_kv_ratio, quant_weight_ratio
-from repro.core.pipeline import PipelineScheduler, VirtualPool
-from repro.core.tasks import TaskType, Trace
+from repro.core.pipeline import (PipelineScheduler, StagedScheduler,
+                                 VirtualPool)
+from repro.core.tasks import TaskType, Trace, VirtualClock
 
 __all__ = ["ReplayError", "ReplayKnobs", "TraceProfile", "ReplayResult",
-           "replay", "best_depth", "step_boundaries", "step_times",
-           "steady_step_s", "replay_traffic"]
+           "replay", "best_depth", "best_stage_depth", "step_boundaries",
+           "step_times", "steady_step_s", "replay_traffic"]
 
 _W_RE = re.compile(r"^w\[(\d+)\]$")
 _PAIR_RE = re.compile(r"^(kv|sv|c)\[(\d+),(\d+)\]$")
@@ -144,6 +145,9 @@ class TraceProfile:
     warm: bool
     depth: int
     pool_size: int
+    stages: int                            # pipeline-parallel stage count
+    stage_units: Optional[List[tuple]]     # [(lo, hi)] when stages > 1
+    stage_depths: Optional[List[int]]      # per-stage window when recorded
     sim_bw: Optional[float]
     quant: Optional[str]
     kv_mode: Optional[str]
@@ -231,12 +235,17 @@ class TraceProfile:
         if sum(calls) != len(iters):
             calls = [len(iters)]           # untagged trace: one call
 
+        su = meta.get("stage_units")
         return cls(
             n_units=n_units, iters=list(range(len(iters))), calls=calls,
             mode=meta.get("mode") or "performance",
             warm=bool(meta.get("warm", False)),
             depth=int(meta.get("depth") or 1),
             pool_size=int(meta.get("pool_size") or 3),
+            stages=int(meta.get("stages") or 1),
+            stage_units=None if su is None else [tuple(u) for u in su],
+            stage_depths=(None if meta.get("stage_depths") is None
+                          else [int(d) for d in meta["stage_depths"]]),
             sim_bw=meta.get("sim_bw"), quant=meta.get("quant"),
             kv_mode=meta.get("kv_mode"),
             mha_layers=frozenset({j for _, j in kv_s}
@@ -268,6 +277,7 @@ class ReplayKnobs:
     sim_bw: Optional[float] = None
     quant: Optional[str] = None
     kv_mode: Optional[str] = None
+    stages: Optional[int] = None           # pipeline-parallel re-staging
 
 
 def _pack_ratio(ratio_fn, new: Optional[str], rec: Optional[str]) -> float:
@@ -389,6 +399,8 @@ def replay(trace: Trace, knobs: Optional[ReplayKnobs] = None, *,
     sim_bw = prof.sim_bw if k.sim_bw is None else float(k.sim_bw)
     quant = prof.quant if k.quant is None else k.quant
     kv_mode = prof.kv_mode if k.kv_mode is None else k.kv_mode
+    stages = prof.stages if k.stages is None else int(k.stages)
+    stages = max(1, min(stages, prof.n_units))
     rw = _pack_ratio(quant_weight_ratio, k.quant, prof.quant)
     rkv = _pack_ratio(quant_kv_ratio, k.kv_mode, prof.kv_mode)
 
@@ -415,14 +427,41 @@ def replay(trace: Trace, knobs: Optional[ReplayKnobs] = None, *,
         return _transfer_s(t_rec, b_rec, model.kv_save_nbytes(i, j),
                            prof.sim_bw, sim_bw)
 
-    pool = VirtualPool(max(1, pool_size), cost_fn=cost)
-    sched = PipelineScheduler(prof.n_units, mode, pool=pool,
-                              trace=pool.trace, warm=warm, depth=depth)
-    for iters in prof.calls:
-        sched.generate(model, lambda i: 0, iters)
-    sched.shutdown()
-
-    out = pool.trace
+    if stages > 1:
+        # stage-aware re-scheduling: rebuild the staged run — per-stage
+        # virtual pools (own clock + transfer slots each, the per-stage
+        # link) over ONE shared trace, exactly the topology the recorder
+        # used, so unchanged knobs reproduce the recording bit-for-bit
+        # and a single-stage recording can be re-staged hypothetically.
+        if stages == prof.stages and prof.stage_units:
+            units = [tuple(u) for u in prof.stage_units]
+        else:
+            bounds = [round(s * prof.n_units / stages)
+                      for s in range(stages + 1)]
+            units = [(bounds[s], bounds[s + 1]) for s in range(stages)]
+        if (k.depth is None and stages == prof.stages
+                and prof.stage_depths):
+            depths = list(prof.stage_depths)
+        else:
+            depths = [depth] * stages
+        out_trace = Trace(clock=VirtualClock())
+        pools = [VirtualPool(max(1, pool_size), trace=out_trace,
+                             cost_fn=cost, clock=VirtualClock())
+                 for _ in range(stages)]
+        sched = StagedScheduler(units, mode, pools=pools, trace=out_trace,
+                                warm=warm, depths=depths)
+        for iters in prof.calls:
+            sched.generate(model, lambda i: 0, iters)
+        sched.shutdown()
+        out = out_trace
+    else:
+        pool = VirtualPool(max(1, pool_size), cost_fn=cost)
+        sched = PipelineScheduler(prof.n_units, mode, pool=pool,
+                                  trace=pool.trace, warm=warm, depth=depth)
+        for iters in prof.calls:
+            sched.generate(model, lambda i: 0, iters)
+        sched.shutdown()
+        out = pool.trace
     out.meta.update(sim_bw=sim_bw, quant=quant, kv_mode=kv_mode,
                     replayed=True)
     return ReplayResult(
@@ -481,4 +520,35 @@ def best_depth(trace: Trace, *, depth_cap: int = 8,
                      start_iter=start_iter, stop_iter=stop_iter)
         preds[d] = res.steady_step_s
     best = min(preds, key=lambda d: (preds[d], d))
+    return best, preds
+
+
+def best_stage_depth(trace: Trace, *, stage_cap: int = 4,
+                     depth_cap: int = 8,
+                     knobs: Optional[ReplayKnobs] = None,
+                     start_iter: Optional[int] = None,
+                     stop_iter: Optional[int] = None
+                     ) -> Tuple[Tuple[int, int], Dict[Tuple[int, int],
+                                                      float]]:
+    """Joint simulated argmin over ``(stages, depth)``: replay the
+    recording at every staging x window combination (each stage with the
+    pool an engine would build for that window) and return
+    ``((stages, depth), {(stages, depth): predicted steady s/step})``.
+    Ties break toward fewer stages, then the shallower window — less
+    hardware and less residency for the same predicted step.  Stage
+    counts beyond the unit count are skipped (a stage must own at least
+    one unit)."""
+    import dataclasses
+    base = knobs or ReplayKnobs()
+    prof = TraceProfile.from_trace(trace, start_iter, stop_iter)
+    preds: Dict[Tuple[int, int], float] = {}
+    for s in range(1, max(1, int(stage_cap)) + 1):
+        if s > prof.n_units:
+            break
+        for d in range(1, max(1, int(depth_cap)) + 1):
+            res = replay(trace, dataclasses.replace(base, stages=s,
+                                                    depth=d),
+                         start_iter=start_iter, stop_iter=stop_iter)
+            preds[(s, d)] = res.steady_step_s
+    best = min(preds, key=lambda sd: (preds[sd], sd))
     return best, preds

@@ -96,6 +96,11 @@ class Task:
     # live-row slicing is observable on traces (the tiered-KV-store
     # invariant: a half-full slot's KV_LOAD bytes < the allocated slab).
     extent: Optional[tuple] = None
+    # pipeline-parallel stage this task belongs to (0 for the single-stage
+    # pipeline).  Stamped by the submitting scheduler and copied onto the
+    # TraceEvent so per-stage residency/bubble accounting is assertable on
+    # traces (``report()['stage_bubbles']``).
+    stage: int = 0
     # virtual-transport hook: called by wait() once the task is done, so a
     # VirtualPool can advance its clock to the waiter's sync point.
     on_wait: Optional[Callable[["Task"], None]] = None
@@ -128,6 +133,7 @@ class TraceEvent:
     thread: str
     nbytes: int = 0
     extent: Optional[tuple] = None     # live (batch, len) of a KV payload
+    stage: int = 0                     # pipeline-parallel stage (0 = single)
 
 
 def percentile(xs, q: float) -> float:
@@ -196,7 +202,8 @@ class Trace:
             self._events.append(TraceEvent(task.kind.value, task.name,
                                            task.t_start - self.t0,
                                            task.t_end - self.t0, thread,
-                                           task.nbytes, task.extent))
+                                           task.nbytes, task.extent,
+                                           task.stage))
 
     def events(self):
         with self._lock:
@@ -208,14 +215,17 @@ class Trace:
         already relative to the trace origin.  Committable as a golden
         fixture; ``from_json`` rebuilds an equivalent trace for
         ``core.replay`` (extent tuples survive the list round-trip)."""
-        return {
-            "meta": dict(self.meta),
-            "events": [
-                {"kind": e.kind, "name": e.name, "t_start": e.t_start,
-                 "t_end": e.t_end, "thread": e.thread, "nbytes": e.nbytes,
-                 "extent": None if e.extent is None else list(e.extent)}
-                for e in self.events()],
-        }
+        events = []
+        for e in self.events():
+            ev = {"kind": e.kind, "name": e.name, "t_start": e.t_start,
+                  "t_end": e.t_end, "thread": e.thread, "nbytes": e.nbytes,
+                  "extent": None if e.extent is None else list(e.extent)}
+            # the stage tag is emitted only when set, so single-stage
+            # fixtures recorded before pipeline parallelism stay byte-stable
+            if e.stage:
+                ev["stage"] = e.stage
+            events.append(ev)
+        return {"meta": dict(self.meta), "events": events}
 
     @classmethod
     def from_json(cls, d: "Dict[str, Any] | str") -> "Trace":
@@ -235,7 +245,8 @@ class Trace:
             tr._events.append(TraceEvent(
                 ev["kind"], ev["name"], ev["t_start"], ev["t_end"],
                 ev.get("thread", ""), ev.get("nbytes", 0),
-                None if ext is None else tuple(ext)))
+                None if ext is None else tuple(ext),
+                ev.get("stage", 0)))
         return tr
 
     def span(self) -> float:
@@ -306,6 +317,32 @@ class Trace:
             "bubble_frac": (max(0.0, span - compute_busy) / span
                             if span > 0 else 0.0),
         }
+        # pipeline-parallel fill/drain accounting: when any event carries a
+        # stage tag, each stage gets a bucket measuring how long it idles
+        # before its first compute (fill — upstream stages haven't produced
+        # an activation yet) and after its last (drain — downstream stages
+        # are still flushing).  Single-stage traces skip the bucket.
+        if any(e.stage for e in evs):
+            t_lo = min(e.t_start for e in evs)
+            t_hi = max(e.t_end for e in evs)
+            stage_bubbles = {}
+            for s in sorted({e.stage for e in evs}):
+                sub = [e for e in evs if e.stage == s]
+                comp = [e for e in sub if e.kind == TaskType.COMPUTE.value]
+                busy = _merged_busy((e.t_start, e.t_end) for e in comp)
+                if comp:
+                    fill = min(e.t_start for e in comp) - t_lo
+                    drain = t_hi - max(e.t_end for e in comp)
+                else:
+                    fill, drain = t_hi - t_lo, 0.0
+                stage_bubbles[s] = {
+                    "fill_s": max(0.0, fill),
+                    "drain_s": max(0.0, drain),
+                    "busy_s": busy,
+                    "idle_s": max(0.0, (t_hi - t_lo) - busy),
+                    "span_s": t_hi - t_lo,
+                }
+            out["stage_bubbles"] = stage_bubbles
         # request-latency percentiles: workload drivers
         # (serving.workload.run_trace / TrafficSim) stamp per-request
         # series into meta["latency"] = {"ttft": [...], "tbt": [...],

@@ -222,10 +222,12 @@ def replay_dryrun(path: str):
                   f"{base / max(1e-12, res.steady_step_s):10.2f}x")
 
 
-def serving_dryrun(arch, scaled: bool, run_all: bool):
+def serving_dryrun(arch, scaled: bool, run_all: bool, stages=None):
     """Resolve serving plans through the EngineSpec API.  Per arch: one
-    plan row (engine/placement/depth + provenance).  Single-arch scaled
-    mode additionally builds the engine via ``create_engine(plan)`` and
+    plan row (engine/placement/depth + provenance; with ``--stages`` a
+    [STG] row per pipeline stage showing its layer slice, preload depth
+    and share of the split device budget).  Single-arch scaled mode
+    additionally builds the engine via ``create_engine(plan)`` and
     serves one request — the whole spec -> plan -> engine path, live."""
     import numpy as np
 
@@ -235,13 +237,18 @@ def serving_dryrun(arch, scaled: bool, run_all: bool):
     archs = sorted(list_archs()) if run_all or arch is None else [arch]
     plans = []
     for a in archs:
-        plan = EngineSpec(arch=a, scaled=scaled, b_max=4,
-                          max_len=256).resolve()
+        plan = EngineSpec(arch=a, scaled=scaled, b_max=4, max_len=256,
+                          stages=stages).resolve()
         plans.append(plan)
+        stg = f" stages={plan.stages}" if plan.stages > 1 else ""
         print(f"[PLAN] {a:26s} engine={plan.engine:9s} "
               f"placement={plan.placement:6s} depth={plan.depth} "
               f"quant={plan.quant or 'fp32'} "
-              f"kv={plan.kv_mode or 'n/a'}")
+              f"kv={plan.kv_mode or 'n/a'}{stg}")
+        for sp in plan.stage_plan:
+            print(f"  [STG] stage {sp.stage}: layers "
+                  f"[{sp.layer_lo}, {sp.layer_hi}) depth={sp.depth} "
+                  f"device_budget={sp.device_budget / 2**30:.2f}GiB")
         for fld, why in sorted(plan.provenance.items()):
             print(f"        {fld:12s} {why}")
     if len(plans) == 1 and scaled:
@@ -273,6 +280,12 @@ def main():
     ap.add_argument("--scaled", action="store_true",
                     help="(--serving) resolve/build the scaled smoke "
                          "config instead of the full-size one")
+    ap.add_argument("--stages", type=int, default=None, metavar="N",
+                    help="(--serving) resolve with N pipeline-parallel "
+                         "stages: the plan rows grow one [STG] line per "
+                         "stage (layer slice, per-stage depth, 1/N device "
+                         "budget); archs that can't stage record the "
+                         "drop in provenance")
     ap.add_argument("--replay", metavar="TRACE_JSON", default=None,
                     help="offline knob sweep over a recorded trace "
                          "(Trace.to_json dump): predicted steady step "
@@ -287,7 +300,7 @@ def main():
         return
 
     if args.serving:
-        serving_dryrun(args.arch, args.scaled, args.all)
+        serving_dryrun(args.arch, args.scaled, args.all, stages=args.stages)
         return
 
     cells = []

@@ -19,3 +19,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(*, model: int = 4, data: int = 2):
     """Small mesh for subprocess tests (8 fake devices)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def stage_devices(n_stages: int):
+    """One device per pipeline-parallel stage, round-robin over the
+    local devices — on a single-device box every stage maps to device 0
+    and the activation handoff degenerates to an on-device no-op, so
+    the staged engine runs (and is testable) anywhere."""
+    devs = jax.devices()
+    return [devs[s % len(devs)] for s in range(max(1, int(n_stages)))]

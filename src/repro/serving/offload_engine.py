@@ -81,7 +81,7 @@ from repro.configs.base import MOE, ModelConfig, LayerSpec
 from repro.core.draft import accepted_tokens
 from repro.core.kvstore import TieredKVStore, kv_roundtrip_traceable
 from repro.core.offload import DeviceStore, DiskStore
-from repro.core.pipeline import PipelineScheduler, ThreadPool
+from repro.core.pipeline import PipelineScheduler, StagedScheduler, ThreadPool
 from repro.core.tasks import Task, TaskType, Trace, _merged_busy
 from repro.core.transfer import TieredWeightStore, int4_roundtrip
 from repro.models import Dist, build_model
@@ -166,6 +166,101 @@ def quant_roundtrip_params(cfg: ModelConfig, params):
     }
 
 
+class _StagedWeightStore:
+    """Key-routing facade over per-stage ``TieredWeightStore``s: each
+    stage owns its own store (and therefore its own ``SimLink``), so N
+    stages stream over N independent links — the aggregate-bandwidth
+    mechanism of pipeline-parallel offload.  ``route(key) -> stage``
+    parses the unit key; the host/device/disk tier OBJECTS are shared
+    (keys are globally unique), only the link and IO workers split."""
+
+    def __init__(self, stores, route):
+        self.stores = list(stores)
+        self._route = route
+
+    def put(self, key: str, tensors):
+        return self.stores[self._route(key)].put(key, tensors)
+
+    def load(self, key: str):
+        return self.stores[self._route(key)].load(key)
+
+    def nbytes(self, key: str) -> int:
+        return self.stores[self._route(key)].nbytes(key)
+
+
+class _StagedKVStore:
+    """Global-unit facade over per-stage ``TieredKVStore``s: unit-indexed
+    calls route to the owning stage's store (stage-local index), slot
+    ops fan out to every stage, and spill namespaces get a per-stage
+    suffix so stage-local unit indices can't collide in the shared host
+    tier (``{ns}/s{stage}/{unit}/{name}`` still matches the engine's
+    prefix-based spill cleanup)."""
+
+    _UNIT_METHODS = ("load", "load_nbytes", "slab_nbytes", "save_nbytes",
+                     "prefill_save_nbytes", "dequant_nbytes",
+                     "save_prefill", "save_prefill_batch", "save_decode",
+                     "has_kv", "leaf_meta")
+
+    def __init__(self, stores, bounds):
+        self.stores = list(stores)
+        self.bounds = [tuple(b) for b in bounds]
+        self.b_max = self.stores[0].b_max
+        self.max_len = self.stores[0].max_len
+        self.kv_mode = self.stores[0].kv_mode
+        for name in self._UNIT_METHODS:
+            setattr(self, name, self._unit_call(name))
+
+    def _unit_call(self, name):
+        def call(j, *args, **kwargs):
+            for (lo, hi), st in zip(self.bounds, self.stores):
+                if lo <= j < hi:
+                    return getattr(st, name)(j - lo, *args, **kwargs)
+            raise IndexError(f"unit {j} outside staged bounds {self.bounds}")
+        return call
+
+    def __len__(self):
+        return sum(len(st) for st in self.stores)
+
+    @property
+    def dequant_bytes_total(self) -> int:
+        return sum(st.dequant_bytes_total for st in self.stores)
+
+    def max_live_load_nbytes(self, live_b: int, live_len: int) -> int:
+        return max(st.max_live_load_nbytes(live_b, live_len)
+                   for st in self.stores)
+
+    def host_nbytes(self) -> int:
+        return sum(st.host_nbytes() for st in self.stores)
+
+    def truncate(self, slot: int, new_len: int) -> None:
+        for st in self.stores:
+            st.truncate(slot, new_len)
+
+    def spill(self, host, ns: str, slot: int) -> None:
+        for s, st in enumerate(self.stores):
+            st.spill(host, f"{ns}/s{s}", slot)
+
+    def restore(self, host, ns: str, slot: int) -> None:
+        for s, st in enumerate(self.stores):
+            st.restore(host, f"{ns}/s{s}", slot)
+
+
+class _MeshStagedScheduler(StagedScheduler):
+    """``StagedScheduler`` whose activation handoff is a device-to-device
+    ``device_put`` onto the receiving stage's device (round-robin over
+    the local mesh; an on-device no-op when every stage shares one
+    device, so single-GPU boxes still run the staged engine)."""
+
+    def __init__(self, *args, devices=None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.devices = list(devices or [])
+
+    def handoff(self, stage: int, it: int, x):
+        if self.devices and x is not None:
+            return jax.device_put(x, self.devices[stage % len(self.devices)])
+        return x
+
+
 class OffloadedServingEngine(SlotEngineBase):
     """See module docstring.  Main-thread object: all public methods run
     on the caller's thread; weight/KV transfers run on the internal
@@ -206,16 +301,40 @@ class OffloadedServingEngine(SlotEngineBase):
         self.plan = plan
         self.preload_policy = preload_policy_for(plan, cfg)
         self.quant_policy = quant_policy_for(plan.quant, plan.kv_mode)
-        # window ceiling: adaptive policies may deepen later, so the pool
-        # (and its KV headroom) is sized once for the policy's max depth
-        max_depth = PipelineScheduler.clamp_depth(
-            plan.pipeline, self._n_units(cfg), self.preload_policy.max_depth())
-        depth = PipelineScheduler.clamp_depth(
-            plan.pipeline, self._n_units(cfg), max(1, plan.depth))
+        self.n_stages = max(1, int(getattr(plan, "stages", 1) or 1))
+        self.stage_bounds = self._make_stage_bounds(cfg, plan)
         self.trace = Trace()
-        # pool sized to the window (depth weight loads + KV load + KV save)
-        pool = ThreadPool(PipelineScheduler.pool_size(max(depth, max_depth)),
-                          self.trace)
+        if self.n_stages > 1:
+            # one transfer pool per stage, each sized to that stage's
+            # window (per-stage warm windows; the StagePlan depths came
+            # from the resolver's per-stage budget split)
+            sd = ([p.depth for p in plan.stage_plan]
+                  if len(plan.stage_plan) == self.n_stages
+                  else [max(1, plan.depth)] * self.n_stages)
+            self._stage_depths = [
+                PipelineScheduler.clamp_depth(plan.pipeline, hi - lo, d)
+                for (lo, hi), d in zip(self.stage_bounds, sd)]
+            self._stage_pools = [
+                ThreadPool(PipelineScheduler.pool_size(d), self.trace)
+                for d in self._stage_depths]
+            depth = max(self._stage_depths)
+            pool = self._stage_pools[0]
+        else:
+            # window ceiling: adaptive policies may deepen later, so the
+            # pool (and its KV headroom) is sized once for the policy's
+            # max depth
+            max_depth = PipelineScheduler.clamp_depth(
+                plan.pipeline, self._n_units(cfg),
+                self.preload_policy.max_depth())
+            depth = PipelineScheduler.clamp_depth(
+                plan.pipeline, self._n_units(cfg), max(1, plan.depth))
+            self._stage_depths = [depth]
+            self._stage_pools = []
+            # pool sized to the window (depth weight loads + KV load +
+            # KV save)
+            pool = ThreadPool(
+                PipelineScheduler.pool_size(max(depth, max_depth)),
+                self.trace)
         super().__init__(cfg, b_max=plan.b_max, max_len=plan.max_len,
                          kv_pool=pool, spill_cap=plan.spill_cap)
         self.dist = Dist.local()
@@ -225,12 +344,28 @@ class OffloadedServingEngine(SlotEngineBase):
         self.warm = plan.warm
         self.device = DeviceStore()
         self.disk = DiskStore(plan.disk_root)
-        self.weights = TieredWeightStore(
-            placement=plan.placement, host=self.host, device=self.device,
-            disk=self.disk, quant=self.quant_policy.weight_mode,
-            fused_int4=plan.fused_int4, block_bytes=plan.block_bytes,
-            n_io_threads=plan.n_io_threads, cold_reads=plan.cold_reads,
-            sim_bw=plan.sim_bw)
+        if self.n_stages > 1:
+            # one tiered store per stage = one independent SimLink per
+            # stage: each stage streams only its slice and the aggregate
+            # host->device bandwidth scales with stage count
+            self.weights = _StagedWeightStore(
+                [TieredWeightStore(
+                    placement=plan.placement, host=self.host,
+                    device=self.device, disk=self.disk,
+                    quant=self.quant_policy.weight_mode,
+                    fused_int4=plan.fused_int4,
+                    block_bytes=plan.block_bytes,
+                    n_io_threads=plan.n_io_threads,
+                    cold_reads=plan.cold_reads, sim_bw=plan.sim_bw)
+                 for _ in range(self.n_stages)],
+                lambda key: self._stage_of_unit(self._unit_of_key(key)))
+        else:
+            self.weights = TieredWeightStore(
+                placement=plan.placement, host=self.host, device=self.device,
+                disk=self.disk, quant=self.quant_policy.weight_mode,
+                fused_int4=plan.fused_int4, block_bytes=plan.block_bytes,
+                n_io_threads=plan.n_io_threads, cold_reads=plan.cold_reads,
+                sim_bw=plan.sim_bw)
         params = self.model.init(jax.random.PRNGKey(plan.seed), jnp.float32)
         self._phase = "prefill"           # until the first _decode_active
         # chunked-prefill admission (SchedPolicy seam): at most ONE
@@ -264,9 +399,17 @@ class OffloadedServingEngine(SlotEngineBase):
             self.preload_policy.set_link_profile(
                 sum(self.weights.nbytes(u.key) for u in self.units)
                 // max(1, len(self.units)))
-        self.sched = PipelineScheduler(len(self.units), plan.pipeline,
-                                       pool=pool, trace=self.trace,
-                                       warm=self.warm, depth=depth)
+        if self.n_stages > 1:
+            from repro.launch.mesh import stage_devices
+            self.sched = _MeshStagedScheduler(
+                self.stage_bounds, plan.pipeline, pools=self._stage_pools,
+                trace=self.trace, warm=self.warm,
+                depths=self._stage_depths,
+                devices=stage_devices(self.n_stages))
+        else:
+            self.sched = PipelineScheduler(len(self.units), plan.pipeline,
+                                           pool=pool, trace=self.trace,
+                                           warm=self.warm, depth=depth)
         # stamp the link/precision knobs next to the scheduler's context
         # so a dumped trace is self-describing for core.replay
         self.trace.meta.update(
@@ -293,6 +436,39 @@ class OffloadedServingEngine(SlotEngineBase):
         """Schedulable unit count (needed before the units are built, to
         size the transfer pool from the clamped preload depth)."""
         return cfg.num_periods * len(cfg.pattern) + len(cfg.remainder)
+
+    # ---- pipeline-parallel staging ------------------------------------------
+    def _make_stage_bounds(self, cfg: ModelConfig, plan) -> List[tuple]:
+        """Contiguous per-stage unit ranges: the resolver's ``stage_plan``
+        when it tiles this config, else a balanced split (a hand-built
+        plan may carry ``stages`` without slices)."""
+        nu = self._n_units(cfg)
+        if self.n_stages <= 1:
+            return [(0, nu)]
+        sp = plan.stage_plan
+        if (len(sp) == self.n_stages and sp[0].layer_lo == 0
+                and sp[-1].layer_hi == nu):
+            return [(p.layer_lo, p.layer_hi) for p in sp]
+        return [(round(s * nu / self.n_stages),
+                 round((s + 1) * nu / self.n_stages))
+                for s in range(self.n_stages)]
+
+    def _unit_of_key(self, key: str) -> int:
+        """Global unit index of a tiered-store key (``u[p][q]``,
+        ``rem[q]``, or an expert sub-key of either)."""
+        import re
+        base = key.split("/", 1)[0]
+        nums = [int(x) for x in re.findall(r"\[(\d+)\]", base)]
+        if base.startswith("u["):
+            return nums[0] * len(self.cfg.pattern) + nums[1]
+        return self.cfg.num_periods * len(self.cfg.pattern) + nums[0]
+
+    def _stage_of_unit(self, j: int) -> int:
+        for s, (lo, hi) in enumerate(self.stage_bounds):
+            if lo <= j < hi:
+                return s
+        raise IndexError(f"unit {j} outside stage bounds "
+                         f"{self.stage_bounds}")
 
     # ---- weight tiering -----------------------------------------------------
     def _maybe_quant(self, tensors):
@@ -358,9 +534,21 @@ class OffloadedServingEngine(SlotEngineBase):
                            for n, s in sds.items()})
             kk.append(dict(kinds[u.group][u.q]))
         self.kv_kinds: List[Dict[str, str]] = kk
-        self.kvstore = TieredKVStore(
-            shapes, kk, b_max=self.b_max, max_len=self.max_len,
-            kv_mode=self.quant_policy.kv_mode, link=self.weights.link)
+        if self.n_stages > 1:
+            # one KV store per stage, sharing that stage's weight-store
+            # SimLink so both directions pay the same per-stage link
+            self.kvstore = _StagedKVStore(
+                [TieredKVStore(
+                    shapes[lo:hi], kk[lo:hi], b_max=self.b_max,
+                    max_len=self.max_len,
+                    kv_mode=self.quant_policy.kv_mode,
+                    link=self.weights.stores[s].link)
+                 for s, (lo, hi) in enumerate(self.stage_bounds)],
+                self.stage_bounds)
+        else:
+            self.kvstore = TieredKVStore(
+                shapes, kk, b_max=self.b_max, max_len=self.max_len,
+                kv_mode=self.quant_policy.kv_mode, link=self.weights.link)
 
     # ---- jitted per-unit compute --------------------------------------------
     def _jit_units(self):
@@ -1018,8 +1206,11 @@ class OffloadedServingEngine(SlotEngineBase):
         return self.trace.report()
 
     def shutdown(self):
-        """Drain slot spills + pipeline saves, stop the pool (main
-        thread; blocking)."""
+        """Drain slot spills + pipeline saves, stop the pool(s) (main
+        thread; blocking).  Staged engines own one pool per stage; pool 0
+        doubles as the slot-spill pool and is stopped last."""
         super().shutdown()
         self.sched.shutdown()
+        for p in self._stage_pools[1:]:
+            p.shutdown()
         self._kv_pool.shutdown()

@@ -68,7 +68,8 @@ from repro.core.offload import MemoryBudget
 from repro.core.pipeline import PIPELINE_MODES
 
 __all__ = [
-    "EngineSpec", "ResolvedPlan", "SpecError", "UnsupportedModelError",
+    "EngineSpec", "ResolvedPlan", "StagePlan", "SpecError",
+    "UnsupportedModelError",
     "create_engine", "build_lm", "offload_capability",
     "spec_decode_capability", "chunked_prefill_capability",
     "PreloadPolicy", "StaticDepth", "AdaptiveDepth", "Pressure",
@@ -85,6 +86,7 @@ KV_MODES = (None, "fp32", "int4")       # None = auto (resolves to fp32)
 DEPTH_POLICIES = ("static", "adaptive")
 PLACEMENTS = ("auto", "device", "host", "disk")
 SCHED_MODES = (None, "online", "offline", "monolithic")
+STAGE_AXES = (None, "layer")            # None = auto (resolves to "layer")
 
 
 # ---------------------------------------------------------------------------
@@ -262,6 +264,9 @@ class EngineSpec:
     # -- traffic scheduling ------------------------------------------------
     sched: Optional[str] = None         # None(auto->monolithic)|online|offline
     prefill_chunk: Optional[int] = None  # prompt tokens per step (None: auto)
+    # -- pipeline parallelism ----------------------------------------------
+    stages: Optional[int] = None        # None(auto->1)|N contiguous stages
+    stage_axis: Optional[str] = None    # None(auto)|"layer"
     # -- ad-hoc config override (not serialized, not compared) -------------
     cfg: Optional[ModelConfig] = field(default=None, compare=False,
                                        repr=False)
@@ -325,6 +330,10 @@ class EngineSpec:
                                                                  "offline"):
             bad("prefill_chunk needs a chunking policy (set sched='online' "
                 "or 'offline'; monolithic prefill has no chunks)")
+        if self.stages is not None and self.stages < 1:
+            bad(f"stages must be >= 1 (or None for auto), got {self.stages}")
+        if self.stage_axis not in STAGE_AXES:
+            bad(f"stage_axis {self.stage_axis!r} not in {STAGE_AXES}")
         if self.spec_k is not None and self.draft_arch is None:
             bad("spec_k needs a draft model (set draft_arch; speculation "
                 "is draft-proposes, target-verifies)")
@@ -342,7 +351,8 @@ class EngineSpec:
                     f"decoder stacks only)")
         if self.offload is False:
             for name in ("quant", "kv_mode", "sim_bw", "depth", "warm",
-                         "draft_arch", "spec_k", "sched", "prefill_chunk"):
+                         "draft_arch", "spec_k", "sched", "prefill_chunk",
+                         "stages", "stage_axis"):
                 if getattr(self, name) is not None:
                     bad(f"{name} only applies to the offloaded engine "
                         f"(offload=False pins the resident ServingEngine)")
@@ -447,6 +457,7 @@ class EngineSpec:
             sim_bw = None
             draft_arch, spec_k = None, None
             sched, prefill_chunk = "monolithic", 0
+            stages, stage_axis, stage_plan = 1, "layer", ()
             for name, was in (("quant", self.quant),
                               ("kv_mode", self.kv_mode),
                               ("sim_bw", self.sim_bw),
@@ -455,7 +466,9 @@ class EngineSpec:
                               ("draft_arch", self.draft_arch),
                               ("spec_k", self.spec_k),
                               ("sched", self.sched),
-                              ("prefill_chunk", self.prefill_chunk)):
+                              ("prefill_chunk", self.prefill_chunk),
+                              ("stages", self.stages),
+                              ("stage_axis", self.stage_axis)):
                 if was is not None:
                     prov[name] = (f"dropped ({was!r}): the resident engine "
                                   f"streams nothing over the link")
@@ -601,6 +614,124 @@ class EngineSpec:
                         f"dropped ({self.prefill_chunk}): monolithic "
                         f"prefill has no chunks")
 
+            # ---- pipeline-parallel stages (StagePlan) ----
+            stage_axis = self.stage_axis or "layer"
+            if self.stage_axis is not None:
+                prov["stage_axis"] = "explicit: stage_axis='layer'"
+            n_units = (cfg.num_periods * len(cfg.pattern)
+                       + len(cfg.remainder))
+            dense_cap = _dense_global_attn_capability(cfg)
+            stages = 1 if self.stages is None else max(1, int(self.stages))
+            if stages > 1 and dense_cap is not None:
+                prov["stages"] = (
+                    f"dropped ({self.stages}): pipeline-parallel staging "
+                    f"needs a dense global-attention decoder stack "
+                    f"(failing capability: {dense_cap}); single stage")
+                stages = 1
+            elif stages > 1 and draft_arch is not None:
+                prov["stages"] = (
+                    f"dropped ({self.stages}): speculative verify runs the "
+                    f"accept logic against one device-resident draft; "
+                    f"per-stage speculation is future work — single stage")
+                stages = 1
+            elif stages > 1 and sched != "monolithic":
+                prov["stages"] = (
+                    f"dropped ({self.stages}): chunked admission "
+                    f"({sched!r}) is not staged yet; single stage")
+                stages = 1
+            elif stages > 1:
+                if stages > n_units:
+                    prov["stages"] = (
+                        f"explicit: {self.stages} clamped to the "
+                        f"{n_units} schedulable units")
+                    stages = n_units
+                else:
+                    prov["stages"] = (
+                        f"explicit: {stages} contiguous layer ranges, one "
+                        f"tiered weight/KV store + scheduler per stage "
+                        f"(aggregate link bandwidth scales with stages)")
+            elif self.stages is not None:
+                prov["stages"] = "explicit: stages=1 (single-stage pipeline)"
+            else:
+                prov["stages"] = ("auto: single stage (pass --stages N to "
+                                  "partition the stack across a mesh)")
+            # joint (stages, depth) argmin: a trace RECORDED from a staged
+            # run re-resolves both knobs through the simulator; a
+            # single-stage trace keeps the established replay-depth path
+            # above bit-for-bit
+            depth_src_replay = False
+            if (trace is not None and self.stages is None
+                    and int(trace.meta.get("stages") or 1) > 1
+                    and self.depth is None
+                    and self.pipeline == "performance"
+                    and dense_cap is None and draft_arch is None
+                    and sched == "monolithic"):
+                from repro.core.replay import ReplayError, best_stage_depth
+                try:
+                    (sb, db), _ = best_stage_depth(
+                        trace, stage_cap=min(4, n_units),
+                        depth_cap=max(1, depth))
+                    stages, depth = sb, db
+                    depth_src_replay = True
+                    prov["stages"] = (
+                        f"replay: joint (stages, depth) argmin over the "
+                        f"recorded staged trace -> {sb} stage(s)")
+                    prov["depth"] = (
+                        f"replay: depth {db} at {sb} stage(s) minimizes "
+                        f"simulated steady-state step time")
+                except ReplayError as e:
+                    prov["stages"] += (f"; staged trace given but not "
+                                       f"replayable ({e})")
+            stage_plan = ()
+            if stages > 1:
+                if depth_policy == "adaptive":
+                    depth_policy = "static"
+                    prov["depth_policy"] = (
+                        "dropped ('adaptive'): per-stage windows are "
+                        "statically sized from the budget split "
+                        "(adaptive staging is future work)")
+                # accelerate-style max_memory-per-rank split: each stage
+                # resolves its own §3.5 depth fit against 1/stages of the
+                # device (and host) budget, so stage windows auto-size
+                # independently of the global plan
+                bounds = [round(s * n_units / stages)
+                          for s in range(stages + 1)]
+                dev_each = budget.device // stages
+                sbud = MemoryBudget(device=dev_each,
+                                    host=budget.host // stages)
+                plans = []
+                for s in range(stages):
+                    lo, hi = bounds[s], bounds[s + 1]
+                    if self.depth is not None:
+                        sd, swhy = self.depth, (f"explicit: depth="
+                                                f"{self.depth} every stage")
+                    elif depth_src_replay:
+                        sd, swhy = depth, (f"replay: joint argmin depth "
+                                           f"{depth}")
+                    else:
+                        sd, swhy = serving_depth_decision(
+                            cfg, b_max=self.b_max, max_len=self.max_len,
+                            quant=quant, kv_mode=kv_mode,
+                            spill_cap=self.spill_cap,
+                            placement=placement, budget=sbud)
+                        swhy = (f"stage {s} (§3.5 on the 1/{stages} "
+                                f"budget split): {swhy}")
+                    sd = max(1, min(int(sd), max(1, hi - lo - 1)))
+                    plans.append(StagePlan(stage=s, layer_lo=lo,
+                                           layer_hi=hi, depth=sd,
+                                           device_budget=dev_each,
+                                           why=swhy))
+                stage_plan = tuple(plans)
+                depth = max(p.depth for p in plans)
+                prov["stage_plan"] = (
+                    f"{n_units} units tiled contiguously over {stages} "
+                    f"stages; device budget split {stages} x {dev_each} B "
+                    f"(per-stage §3.5 depth fit)")
+                if self.depth is None and not depth_src_replay:
+                    prov["depth"] = (
+                        f"auto: max per-stage fit {depth} (see stage_plan; "
+                        f"each stage sized on its budget split)")
+
         # ---- resident-only fields ----
         if self.moe_quant is None:
             moe_quant = None
@@ -638,6 +769,7 @@ class EngineSpec:
             cold_reads=self.cold_reads, sim_bw=sim_bw,
             draft_arch=draft_arch, spec_k=spec_k,
             sched=sched, prefill_chunk=prefill_chunk,
+            stages=stages, stage_axis=stage_axis, stage_plan=stage_plan,
             device_budget=budget.device, host_budget=budget.host,
             provenance=prov, cfg=self.cfg)
 
@@ -645,6 +777,23 @@ class EngineSpec:
 # ---------------------------------------------------------------------------
 # ResolvedPlan — materialized execution plan
 # ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    """One pipeline-parallel stage's slice of a resolved plan: the
+    contiguous schedulable-unit range ``[layer_lo, layer_hi)`` it owns,
+    the preload depth its OWN §3.5 fit resolved on its share of the
+    split device budget, and the why string recording that decision.
+    JSON round-trips inside ``ResolvedPlan.stage_plan`` (``asdict``
+    nests it as a dict; ``ResolvedPlan.__post_init__`` rehydrates)."""
+
+    stage: int
+    layer_lo: int
+    layer_hi: int
+    depth: int
+    device_budget: int
+    why: str = ""
 
 
 @dataclass(frozen=True)
@@ -681,6 +830,9 @@ class ResolvedPlan:
     spec_k: Optional[int]        # proposals per verify pass; None = off
     sched: str = "monolithic"    # monolithic | online | offline
     prefill_chunk: int = 0       # prompt tokens per engine step; 0 = n/a
+    stages: int = 1              # pipeline-parallel stage count
+    stage_axis: str = "layer"    # the partition axis (layer stacks only)
+    stage_plan: Tuple = ()       # per-stage StagePlan slices; () single-stage
     # the budget the plan was resolved under (bytes) — recorded so the
     # plan is auditable and so AdaptiveDepth re-sizes against the SAME
     # budget at run time
@@ -689,6 +841,14 @@ class ResolvedPlan:
     provenance: Dict[str, str] = field(default_factory=dict)
     cfg: Optional[ModelConfig] = field(default=None, compare=False,
                                        repr=False)
+
+    def __post_init__(self):
+        # JSON round-trip rehydration: asdict() serialized each StagePlan
+        # as a nested dict (and the tuple as a list) — normalize back so
+        # equality and attribute access work on a from_json'd plan
+        sp = tuple(StagePlan(**p) if isinstance(p, dict) else p
+                   for p in self.stage_plan)
+        object.__setattr__(self, "stage_plan", sp)
 
     def to_json(self) -> Dict[str, Any]:
         return _json_dict(self)
@@ -711,7 +871,8 @@ class ResolvedPlan:
                 + (f" draft={self.draft_arch} spec_k={self.spec_k}"
                    if self.draft_arch else "")
                 + (f" sched={self.sched} chunk={self.prefill_chunk}"
-                   if self.sched != "monolithic" else ""))
+                   if self.sched != "monolithic" else "")
+                + (f" stages={self.stages}" if self.stages > 1 else ""))
 
 
 # ---------------------------------------------------------------------------
@@ -1241,13 +1402,21 @@ CLI_FLAGS: Tuple[FlagSpec, ...] = (
              help="prompt tokens prefillable per engine step (needs "
                   "--sched online/offline; defaults: 32 under online, "
                   "whole prompt under offline)"),
+    FlagSpec("--stages", "stages", type=int, metavar="N",
+             help="pipeline-parallel stage count (--offload only): "
+                  "partition the layer stack into N contiguous stages, "
+                  "each with its OWN tiered weight/KV stores, transfer "
+                  "pool and preload window sized on a 1/N budget split — "
+                  "aggregate host->device bandwidth scales with N and "
+                  "microbatched activations hand stage to stage (see "
+                  "docs/TUNING.md)"),
 )
 
 # EngineSpec fields deliberately without a CLI flag (engine-internal or
 # kwargs-only knobs; the parity check closes over this set)
 NO_FLAG_FIELDS = frozenset({
     "fused_int4", "cache_on", "disk_root", "block_bytes", "n_io_threads",
-    "cold_reads", "cfg",
+    "cold_reads", "stage_axis", "cfg",
 })
 
 # launch.serve flags that are workload/IO, not spec fields

@@ -14,8 +14,9 @@ expert streaming with compute.
 """
 import numpy as np
 
-from repro.core.pipeline import PipelineScheduler, VirtualPool
-from repro.core.tasks import Task, TaskType
+from repro.core.pipeline import (PipelineScheduler, StagedScheduler,
+                                 VirtualPool)
+from repro.core.tasks import Task, TaskType, Trace, VirtualClock
 
 # virtual durations: weight loads dominate (the offloading regime), KV
 # transfers cheaper than compute, saves slower than loads (write path)
@@ -144,6 +145,36 @@ def run_virtual(mode: str, n_layers: int = 3, iters: int = 3,
         outs = sched.generate(model, lambda i: 0, iters)
     sched.shutdown()
     return model, pool.trace, outs
+
+
+def stage_split(n: int, stages: int):
+    """Contiguous near-even unit split, [(lo, hi)] per stage — the same
+    balanced tiling the spec resolver uses."""
+    bounds = [round(s * n / stages) for s in range(stages + 1)]
+    return [(bounds[s], bounds[s + 1]) for s in range(stages)]
+
+
+def run_virtual_pp(n_layers: int = 3, stages: int = 2, iters: int = 4,
+                   warm: bool = False, calls: int = 1, depth: int = 1,
+                   mode: str = "performance"):
+    """Drive the STAGED scheduler over the fake model: per-stage
+    ``VirtualPool``s (one virtual clock + 3 transfer slots each — every
+    stage owns its own link) sharing ONE trace, microbatched activation
+    handoff between contiguous stage slices.  Returns (model, trace,
+    outputs-of-last-call); outputs match ``run_virtual`` bit for bit
+    (staging is a scheduling change only)."""
+    model = FakeModel(n_layers)
+    trace = Trace(clock=VirtualClock())
+    pools = [VirtualPool(3, trace=trace, cost_fn=cost_fn,
+                         clock=VirtualClock()) for _ in range(stages)]
+    sched = StagedScheduler(stage_split(model.n, stages), mode, pools=pools,
+                            trace=trace, warm=warm,
+                            depths=[depth] * stages)
+    outs = None
+    for _ in range(calls):
+        outs = sched.generate(model, lambda i: 0, iters)
+    sched.shutdown()
+    return model, trace, outs
 
 
 def run_virtual_moe(mode: str = "performance", n_layers: int = 2,

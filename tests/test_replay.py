@@ -30,8 +30,9 @@ from fake_model import COSTS, NBYTES, FakeModel, run_virtual, run_virtual_moe
 from repro.core.autoconfig import replay_depth_decision
 from repro.core.memory_model import quant_kv_ratio
 from repro.core.pipeline import PipelineScheduler, VirtualPool
-from repro.core.replay import (ReplayError, ReplayKnobs, best_depth, replay,
-                               steady_step_s, step_times)
+from repro.core.replay import (ReplayError, ReplayKnobs, best_depth,
+                               best_stage_depth, replay, steady_step_s,
+                               step_times)
 from repro.core.tasks import TaskType, Trace
 from repro.serving import EngineSpec
 
@@ -48,6 +49,9 @@ FIXTURES = Path(__file__).parent / "fixtures"
 GOLDEN = {
     "trace_warm_d1.json": [64.0, 60.0, 60.0],
     "trace_warm_d2.json": [44.0, 30.0, 30.0, 30.0],
+    # 2-stage pipeline-parallel recording: the staged replay path must
+    # reproduce the per-stage schedule (stage-tagged events and all)
+    "trace_pp_s2.json": [58.0, 30.0, 30.0, 30.0],
 }
 
 # fixtures checked against the generator but NOT replayed bit-for-bit:
@@ -376,3 +380,49 @@ def test_resolve_trace_ignored_with_explicit_depth():
                  depth=2).resolve(trace=rec)
     assert plan.depth == 2
     assert plan.provenance["depth"].startswith("explicit:")
+
+
+# ---------------------------------------------------------------------------
+# staged (pipeline-parallel) replay: stages knob + joint planner
+# ---------------------------------------------------------------------------
+
+
+def test_pp_fixture_carries_stage_topology():
+    rec = _load("trace_pp_s2.json")
+    assert rec.meta["stages"] == 2
+    assert rec.meta["stage_units"] == [[0, 3], [3, 6]]
+    assert {e.stage for e in rec.events()} == {0, 1}
+
+
+def test_replay_stages_knob_on_single_stage_recording():
+    """What-if staging a single-stage recording: per-stage links give
+    aggregate bandwidth, so the weight-bound steady step halves at
+    stages=2 — and replaying a staged recording back at stages=1
+    recovers the single-link figure."""
+    rec = _load("trace_warm_d2.json")            # 1-stage, depth 2
+    base = steady_step_s(rec)
+    assert replay(rec, ReplayKnobs(stages=2)).steady_step_s < base
+    pp = _load("trace_pp_s2.json")
+    assert replay(pp, ReplayKnobs(stages=1)).steady_step_s \
+        > steady_step_s(pp)
+
+
+def test_best_stage_depth_on_pp_fixture():
+    (stages, depth), preds = best_stage_depth(_load("trace_pp_s2.json"),
+                                              stage_cap=3, depth_cap=2)
+    assert (stages, depth) == (2, 2)
+    assert set(preds) == {(s, d) for s in (1, 2, 3) for d in (1, 2)}
+    assert preds[(2, 2)] == min(preds.values())
+    # ties break toward fewer stages, then shallower windows
+    assert preds[(2, 1)] == preds[(1, 2)]
+
+
+def test_resolve_joint_stage_depth_from_staged_trace():
+    """resolve(budget, trace=...) argmins over (stages, depth) jointly
+    when the recording is itself staged — the spec layer's entry point
+    to the planner."""
+    rec = _load("trace_pp_s2.json")
+    plan = _spec(offload=True, b_max=2, max_len=64).resolve(trace=rec)
+    assert plan.stages == 2
+    assert "joint (stages, depth)" in plan.provenance["stages"]
+    assert plan.provenance["depth"].startswith("replay:")

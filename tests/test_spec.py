@@ -401,3 +401,73 @@ def test_serve_spec_json_base_with_flag_override(tmp_path):
     spec = spec_from_args(args, base=EngineSpec.from_json(f.read_text()))
     assert spec.quant == "int4"          # from the file
     assert spec.b_max == 3               # flag overrides
+
+
+# ---------------------------------------------------------------------------
+# pipeline-parallel staging: resolution, carve-outs, JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_stages_resolve_to_stage_plan():
+    plan = _spec(offload=True, b_max=2, max_len=64, stages=2).resolve()
+    assert plan.stages == 2 and plan.stage_axis == "layer"
+    assert len(plan.stage_plan) == 2
+    lo = 0
+    for s, sp in enumerate(plan.stage_plan):
+        assert sp.stage == s and sp.layer_lo == lo
+        lo = sp.layer_hi
+        assert sp.depth >= 1 and sp.device_budget > 0
+        assert "1/2 budget split" in sp.why
+    assert "stage_plan" in plan.provenance
+
+
+def test_stage_plan_json_roundtrip():
+    """StagePlan entries survive to_json/from_json (rehydrated from
+    dicts back to the frozen dataclass)."""
+    plan = _spec(offload=True, b_max=2, max_len=64, stages=2).resolve()
+    plan2 = ResolvedPlan.from_json(json.dumps(plan.to_json()))
+    assert plan2 == plan
+    assert plan2.stage_plan == plan.stage_plan
+    assert plan2.to_json() == plan.to_json()
+
+
+def test_stages_default_is_single():
+    plan = _spec(offload=True, b_max=2, max_len=64).resolve()
+    assert plan.stages == 1 and plan.stage_plan == ()
+
+
+@pytest.mark.parametrize("arch", ["whisper-base", "qwen2-vl-72b"])
+def test_stages_dropped_on_resident_fallback(arch):
+    """The satellite carve-out: enc-dec/embeds configs asked to stage
+    still fall back to the resident engine, with a typed drop recording
+    what happened to the stages request — and still serve."""
+    plan = EngineSpec(arch=arch, scaled=True, offload=True, b_max=2,
+                      max_len=48, stages=2).resolve()
+    assert plan.engine == "resident"
+    assert plan.stages == 1 and plan.stage_plan == ()
+    assert "dropped (2)" in plan.provenance["stages"]
+    eng = create_engine(plan)
+    assert isinstance(eng, ServingEngine)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, eng.cfg.vocab_size, (5,)).astype(np.int32), max_new=3))
+    done = eng.run()
+    eng.shutdown()
+    assert len(done) == 1 and len(done[0].out) == 3
+
+
+def test_stages_dropped_under_sparse_attention():
+    """Staging needs a dense global-attention stack (sliding-window
+    layers read cross-stage history) — a mixtral-style config drops the
+    request with provenance instead of mis-serving."""
+    plan = _spec(arch="mixtral-8x7b", offload=True, b_max=2, max_len=64,
+                 stages=2).resolve()
+    assert plan.stages == 1
+    assert "dense global-attention" in plan.provenance["stages"]
+
+
+def test_stages_validation():
+    with pytest.raises(ValueError, match="stages"):
+        _spec(offload=True, stages=0).validate()
+    with pytest.raises(ValueError, match="stage_axis"):
+        _spec(offload=True, stages=2, stage_axis="tensor").validate()

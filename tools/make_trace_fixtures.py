@@ -46,16 +46,23 @@ CASES = (
     ("trace_traffic_d1.json",
      dict(runner="traffic", n_layers=3, steps=4, depth=1,
           chunk_steps=(1, 2))),
+    # 2-stage pipeline-parallel run (runner="pp" ->
+    # fake_model.run_virtual_pp): per-stage pools over one trace,
+    # stage-tagged events, microbatched handoff — the staged replay
+    # path's bit-for-bit golden
+    ("trace_pp_s2.json",
+     dict(runner="pp", n_layers=3, stages=2, iters=4, depth=1)),
 )
 
 
 def build(kwargs) -> dict:
-    from fake_model import (run_virtual, run_virtual_spec,
+    from fake_model import (run_virtual, run_virtual_pp, run_virtual_spec,
                             run_virtual_traffic)
     kwargs = dict(kwargs)
     runner = kwargs.pop("runner", "plain")
     fn = {"spec": run_virtual_spec,
-          "traffic": run_virtual_traffic}.get(runner, run_virtual)
+          "traffic": run_virtual_traffic,
+          "pp": run_virtual_pp}.get(runner, run_virtual)
     _, trace, _ = fn(**kwargs)
     return trace.to_json()
 
